@@ -1,0 +1,67 @@
+"""Kernel microbench: fused science ops vs. unfused numpy chains.
+
+On this CPU container the Pallas kernels execute under interpret mode (not
+timing-representative), so wall-time compares the jitted fused reference
+path against a deliberately unfused numpy implementation — the fusion win
+the kernels encode; correctness of kernel-vs-oracle lives in tests/.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import Record, timeit
+
+
+def run() -> List[Record]:
+    rng = np.random.default_rng(0)
+    T, A, R = 16, 360, 1024
+    dbz = rng.normal(20, 12, size=(T, A, R)).astype(np.float32)
+    rho = rng.uniform(0.7, 1.0, size=(T, A, R)).astype(np.float32)
+    dt = np.full((T,), 270.0, np.float32)
+    jd, jr, jt = jax.numpy.asarray(dbz), jax.numpy.asarray(rho), \
+        jax.numpy.asarray(dt)
+
+    out: List[Record] = []
+
+    # QVP reduce: fused mask+mean vs unfused numpy
+    def numpy_qvp():
+        masked = np.where(rho >= 0.85, dbz, np.nan)
+        valid = np.isfinite(masked)
+        frac = valid.mean(axis=1)
+        prof = np.nanmean(np.where(valid, masked, np.nan), axis=1)
+        return np.where(frac >= 0.1, prof, np.nan)
+
+    fused_qvp = jax.jit(lambda d, q: ops.qvp_reduce(d, q, mode="ref"))
+    t_np, want = timeit(numpy_qvp, repeat=5)
+    t_fused, got = timeit(lambda: np.asarray(fused_qvp(jd, jr)), repeat=5)
+    mask = np.isfinite(want)
+    np.testing.assert_allclose(got[mask], want[mask], rtol=1e-4, atol=1e-4)
+    out += [
+        Record("kernels", "qvp_numpy_s", t_np, "s"),
+        Record("kernels", "qvp_fused_s", t_fused, "s"),
+        Record("kernels", "qvp_fusion_speedup", t_np / t_fused, "x"),
+    ]
+
+    # Z-R accumulation
+    def numpy_zr():
+        z = 10.0 ** (np.clip(dbz, 5.0, 53.0) / 10.0)
+        rr = (z / 200.0) ** (1.0 / 1.6)
+        rr = np.where(dbz < 5.0, 0.0, rr)
+        return (rr * dt[:, None, None] / 3600.0).sum(axis=0)
+
+    fused_zr = jax.jit(lambda d, t: ops.zr_accum(d, t, mode="ref"))
+    t_np, want = timeit(numpy_zr, repeat=5)
+    t_fused, got = timeit(lambda: np.asarray(fused_zr(jd, jt)), repeat=5)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+    out += [
+        Record("kernels", "zr_numpy_s", t_np, "s"),
+        Record("kernels", "zr_fused_s", t_fused, "s"),
+        Record("kernels", "zr_fusion_speedup", t_np / t_fused, "x"),
+    ]
+    return out

@@ -1,0 +1,39 @@
+"""Roofline table reader: aggregates the dry-run JSON records
+(results/dryrun/) into the per-(arch × shape) table of EXPERIMENTS.md
+§Roofline.  Emits records only for cells whose dry-run has completed."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from .common import Record
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun2"
+
+
+def run() -> List[Record]:
+    out: List[Record] = []
+    if not RESULTS.exists():
+        return out
+    for f in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            out.append(Record("roofline", f"{rec['arch']}:{rec['shape']}",
+                              0.0, "ERROR", {"error": rec.get("error")}))
+            continue
+        pod = rec["meshes"].get("pod", {})
+        roof = pod.get("roofline")
+        if not roof:
+            continue
+        cell = f"{rec['arch']}:{rec['shape']}"
+        out.append(Record("roofline", f"{cell}:bound_ms",
+                          roof["bound_s"] * 1e3, "ms",
+                          {"dominant": roof["dominant"],
+                           "useful": round(pod.get("useful_flops_ratio", 0),
+                                           3),
+                           "peak_GiB": round(
+                               pod["memory"]["peak_bytes_per_device"] / 2**30,
+                               2)}))
+    return out

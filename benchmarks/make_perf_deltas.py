@@ -1,0 +1,65 @@
+"""Emit the §Perf before/after table for the three hillclimbed cells.
+
+    PYTHONPATH=src python -m benchmarks.make_perf_deltas
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+CELLS = [
+    # (arch, shape, baseline dir, optimized dir, what changed)
+    ("deepseek-v2-lite-16b", "train_4k", "results/dryrun", "results/dryrun2",
+     "MoE einsum dispatch -> sort-based dispatch (it. 0)"),
+    ("llama3.2-1b", "train_4k", "results/dryrun2", "results/perf",
+     "Pallas-kernel attention byte model + bf16-width reductions (it. 2-3)"),
+    ("deepseek-67b", "decode_32k", "results/dryrun2", "results/perf",
+     "GSPMD cache gather -> flash-decode partial-softmax combine (it. 4)"),
+]
+
+
+def row(d: str, arch: str, shape: str):
+    f = Path(d) / f"{arch}__{shape}.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    if rec.get("status") != "ok":
+        return None
+    pod = rec["meshes"]["pod"]
+    r = pod.get("roofline")
+    if not r:
+        return None
+    return {
+        "t_comp": r["t_compute_s"], "t_mem": r["t_memory_s"],
+        "t_coll": r["t_collective_s"], "dom": r["dominant"],
+        "bound": r["bound_s"],
+        "useful": pod.get("useful_flops_ratio", 0.0),
+        "peak": pod["memory"]["peak_bytes_per_device"] / 2**30,
+    }
+
+
+def main() -> None:
+    print("| cell | variant | t_comp | t_mem | t_coll | dominant | "
+          "bound | useful | peak GiB | Δbound |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, dbase, dopt, what in CELLS:
+        b = row(dbase, arch, shape)
+        o = row(dopt, arch, shape)
+        cell = f"{arch}:{shape}"
+        for name, v in (("baseline", b), ("optimized", o)):
+            if v is None:
+                print(f"| {cell} | {name} | - | - | - | - | - | - | - | - |")
+                continue
+            delta = ""
+            if name == "optimized" and b:
+                delta = f"{(v['bound'] / b['bound'] - 1) * 100:+.0f}%"
+            print(f"| {cell} | {name} | {v['t_comp']*1e3:.1f} | "
+                  f"{v['t_mem']*1e3:.1f} | {v['t_coll']*1e3:.1f} | "
+                  f"{v['dom']} | {v['bound']*1e3:.1f} | {v['useful']:.2f} | "
+                  f"{v['peak']:.1f} | {delta} |")
+        print(f"| | _{what}_ | | | | | | | | |")
+
+
+if __name__ == "__main__":
+    main()

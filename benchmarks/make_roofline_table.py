@@ -1,0 +1,83 @@
+"""Emit the EXPERIMENTS.md §Roofline markdown table from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_table [dir]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_table(results_dir: str) -> str:
+    rows = []
+    for f in sorted(Path(results_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            rows.append((rec["arch"], rec["shape"], None, rec.get("error")))
+            continue
+        pod = rec["meshes"].get("pod", {})
+        if "roofline" not in pod:
+            continue
+        rows.append((rec["arch"], rec["shape"], pod, None))
+    rows.sort(key=lambda r: (r[0], SHAPE_ORDER.index(r[1])
+                             if r[1] in SHAPE_ORDER else 9))
+    out = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+        "dominant | bound (ms) | useful | peak GiB/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, pod, err in rows:
+        if pod is None:
+            out.append(f"| {arch} | {shape} | - | - | - | ERROR | - | - | "
+                       f"- | {err} |")
+            continue
+        r = pod["roofline"]
+        peak = pod["memory"]["peak_bytes_per_device"] / 2**30
+        out.append(
+            f"| {arch} | {shape} | {r['t_compute_s']*1e3:.1f} | "
+            f"{r['t_memory_s']*1e3:.1f} | {r['t_collective_s']*1e3:.1f} | "
+            f"{r['dominant']} | {r['bound_s']*1e3:.1f} | "
+            f"{pod['useful_flops_ratio']:.2f} | {peak:.2f} | "
+            f"{'yes' if peak <= 16 else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+def fmt_dryrun_table(results_dir: str) -> str:
+    out = [
+        "| arch | shape | mesh | devices | compile (s) | peak GiB/dev | "
+        "coll bytes/step (global) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for f in sorted(Path(results_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        for mesh_name in ("pod", "multipod"):
+            m = rec["meshes"].get(mesh_name)
+            if not m:
+                continue
+            coll = (m.get("cost", m.get("runtime_cost", {}))
+                    .get("collective_bytes", 0))
+            rows.append((rec["arch"], rec["shape"], mesh_name,
+                         m["devices"], m["compile_s"],
+                         m["memory"]["peak_bytes_per_device"] / 2**30, coll))
+    rows.sort(key=lambda r: (r[0], SHAPE_ORDER.index(r[1])
+                             if r[1] in SHAPE_ORDER else 9, r[2]))
+    for arch, shape, mesh, dev, cs, peak, coll in rows:
+        out.append(f"| {arch} | {shape} | {mesh} | {dev} | {cs:.0f} | "
+                   f"{peak:.2f} | {coll:.2e} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun2"
+    print("## Roofline (single-pod 16x16)\n")
+    print(fmt_table(d))
+    print("\n## Dry-run (both meshes)\n")
+    print(fmt_dryrun_table(d))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only qvp,qpe,...]
+
+Prints ``bench,name,value,unit`` CSV plus per-record context.  The paper
+claims being checked: §5.1 QVP ~100x, §5.2 time series >10x, §5.3 QPE
+70-150x, §5.4 transactional bitwise reproducibility.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ["ingest", "qvp", "qpe", "timeseries", "transactional",
+           "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else BENCHES
+
+    print("bench,name,value,unit")
+    failures = 0
+    for name in todo:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            records = mod.run()
+        except Exception as e:  # noqa: BLE001 - report and continue
+            print(f"{name},ERROR,{type(e).__name__}: {e},-", flush=True)
+            failures += 1
+            continue
+        for r in records:
+            line = r.csv()
+            if r.extra:
+                line += "," + ";".join(f"{k}={v}" for k, v in r.extra.items())
+            print(line, flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

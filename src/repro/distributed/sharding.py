@@ -1,0 +1,234 @@
+"""Sharding rules: params (TP + FSDP), batches, and serving caches.
+
+The rules are *structural*, driven by leaf name + shape + divisibility:
+
+* **TP** on the ``"model"`` axis — column-parallel on up-projections /
+  QKV / unembedding, row-parallel on down-/out-projections, expert-parallel
+  on MoE expert tensors, vocab-parallel on embeddings.
+* **FSDP** over ``("pod", "data")`` — the largest *remaining* weight dim
+  (never the stacked-layers dim: scanning a layer-sharded stack would turn
+  every scan step into a full gather).
+* Anything not divisible by the axis size stays replicated on that axis —
+  the rules never produce padded shards.
+
+Everything returns ``NamedSharding`` pytrees that ``jax.jit`` accepts for
+both concrete arrays and ``ShapeDtypeStruct`` dry-run stand-ins.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ParallelConfig
+
+# leaf name -> which *logical* dim (negative index) tensor-parallelizes
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "shared_gate", "shared_up",
+        "w_uk", "w_uv", "w_in", "w_x", "w_up_gate", "w_gates", "head",
+        "w_dkv", "concat_proj"}
+_ROW = {"wo", "w_down", "shared_down"}
+_BIAS_COL = {"bq", "bk", "bv", "b_up"}
+_HEAD_LEADING = {"w_q", "w_k", "w_v", "r_h"}   # (H, dh, ·) mlstm per-head
+_MOE_EXPERT = {"w_gate", "w_up", "w_down"}
+
+
+def _divides(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def _leaf_spec(
+    key: str,
+    shape: Tuple[int, ...],
+    *,
+    n_stack: int,
+    is_moe_ffn: bool,
+    mesh: Mesh,
+    fsdp_axes: Tuple[str, ...],
+    fsdp_params: bool,
+) -> P:
+    spec: list = [None] * len(shape)
+    model_size = mesh.shape.get("model", 1)
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= mesh.shape[a]
+    nd = len(shape) - n_stack          # logical (unstacked) ndim
+
+    def logical(dim_neg: int) -> int:  # negative logical dim -> absolute
+        return len(shape) + dim_neg
+
+    # ---- tensor parallel dim ------------------------------------------
+    tp_dim: Optional[int] = None
+    if is_moe_ffn and key in _MOE_EXPERT and nd >= 3:
+        tp_dim = logical(-3)           # expert dim: EP
+    elif key in _HEAD_LEADING and nd >= 3:
+        tp_dim = logical(-3)           # per-head stacks
+    elif key == "tokens" and nd >= 2:
+        tp_dim = logical(-2)           # vocab rows
+    elif key in _COL and nd >= 2:
+        tp_dim = logical(-1)
+    elif key in _ROW and nd >= 2:
+        tp_dim = logical(-2)
+    elif key in _BIAS_COL and nd >= 1:
+        tp_dim = logical(-1)
+    elif key == "conv" and nd >= 2:
+        tp_dim = logical(-1)           # channel dim follows w_in's columns
+    if tp_dim is not None and "model" in mesh.axis_names and _divides(
+            shape[tp_dim], model_size):
+        spec[tp_dim] = "model"
+    else:
+        tp_dim = None
+
+    # ---- FSDP dim ------------------------------------------------------
+    if fsdp_params and fsdp_axes and nd >= 2:
+        total = 1
+        for s in shape:
+            total *= s
+        if total >= 1 << 16:
+            # biggest unassigned *weight* dim (skip stacked layer dims)
+            cands = [d for d in range(n_stack, len(shape))
+                     if spec[d] is None and _divides(shape[d], fsdp_size)]
+            if cands:
+                best = max(cands, key=lambda d: shape[d])
+                spec[best] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*spec)
+
+
+def _walk(tree: Any, fn, n_stack: int = 0, is_moe: bool = False):
+    """Recurse mirroring the param dict structure, tracking context."""
+    if isinstance(tree, dict):
+        moe_here = is_moe or ("router" in tree and "w_gate" in tree)
+        return {k: _walk(v, fn, n_stack, moe_here) if isinstance(v, (dict, list))
+                else fn(k, v, n_stack, moe_here)
+                for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_walk(v, fn, n_stack, is_moe) for v in tree]
+    return fn("", tree, n_stack, is_moe)
+
+
+def param_shardings(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    param_specs: Any,                  # pytree of arrays or ShapeDtypeStructs
+    mesh: Mesh,
+) -> Any:
+    """NamedSharding pytree for a model's params (stacked groups aware)."""
+    from ..launch.mesh import fsdp_axes as _fa
+    fsdp = _fa(mesh) if pcfg.fsdp_params else ()
+
+    def for_subtree(subtree: Any, n_stack: int):
+        def leaf(key, v, ns, moe):
+            sp = _leaf_spec(
+                key, tuple(v.shape), n_stack=ns, is_moe_ffn=moe, mesh=mesh,
+                fsdp_axes=fsdp, fsdp_params=pcfg.fsdp_params,
+            )
+            return NamedSharding(mesh, sp)
+        return _walk(subtree, leaf, n_stack)
+
+    out: Dict[str, Any] = {}
+    for name, sub in param_specs.items():
+        if name == "groups":
+            # each group's params carry ONE leading stacked-repeats dim
+            out[name] = [for_subtree(g, 1) for g in sub]
+        else:
+            out[name] = for_subtree(sub, 0)
+    return out
+
+
+def batch_shardings(mesh: Mesh, batch_specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Shard the global batch dim over every data-parallel axis."""
+    from ..launch.mesh import fsdp_axes as _fa
+    dp = _fa(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    out = {}
+    for k, v in batch_specs.items():
+        spec: list = [None] * len(v.shape)
+        if v.shape and _divides(v.shape[0], dp_size):
+            spec[0] = dp if len(dp) > 1 else dp[0]
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+# cache leaf name -> (base rank, batch dim, seq dim) in the *unstacked*
+# layout; seq=None for O(1) state caches
+_CACHE_DIMS = {
+    "k": (4, 0, 2), "v": (4, 0, 2),             # (B, Hkv, S, dh)
+    "latent": (3, 0, 1), "k_rope": (3, 0, 1),   # (B, S, r)
+    "ssm": (4, 0, None), "conv": (3, 0, None),  # mamba2 states
+    "C": (4, 0, None), "c": (2, 0, None),       # xlstm states
+    "n": (2, 0, None), "h": (2, 0, None),
+}
+
+
+def cache_shardings(mesh: Mesh, cache_specs: Any) -> Any:
+    """Serving caches (grouped layout: leaves carry a leading stacked-reps
+    dim): batch over the data axes; sequence over ``model`` — the
+    flash-decode layout.  For B=1 long-context cells the sequence dim
+    takes the data axes as well."""
+    from ..launch.mesh import fsdp_axes as _fa
+    dp = _fa(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    model_size = mesh.shape.get("model", 1)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    out = []
+    for kp, v in flat:
+        shape = tuple(v.shape)
+        spec: list = [None] * len(shape)
+        name = next((str(k.key) for k in reversed(kp)
+                     if hasattr(k, "key")), "")
+        dims = _CACHE_DIMS.get(name)
+        if dims is not None and len(shape) >= dims[0]:
+            base_rank, b0, s0 = dims
+            off = len(shape) - base_rank          # leading stacked-reps dims
+            bdim = b0 + off
+            sdim = (s0 + off) if s0 is not None else None
+            batch_ok = _divides(shape[bdim], dp_size)
+            if batch_ok:
+                spec[bdim] = dp_entry
+            if sdim is not None:
+                if _divides(shape[sdim], model_size):
+                    spec[sdim] = "model"
+                if not batch_ok and spec[sdim] == "model" \
+                        and _divides(shape[sdim], dp_size * model_size):
+                    spec[sdim] = dp + ("model",)      # B=1: seq over both
+                elif not batch_ok and spec[sdim] is None \
+                        and _divides(shape[sdim], dp_size):
+                    spec[sdim] = dp_entry
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def constrain_like_params(cfg: ModelConfig, pcfg: ParallelConfig,
+                          tree: Any) -> Any:
+    """Inside-jit re-assertion of the *unstacked* per-layer param shardings.
+
+    Applied to the scan-body's sliced layer params: without it GSPMD hoists
+    the FSDP all-gather out of the layer loop and materializes every
+    layer's full weights at once (measured: 62 GiB/device temp on
+    llama3.2-1b train_4k).  With the body-side constraint the gather runs
+    per layer and its result is transient."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return tree
+    fsdp = (tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            if pcfg.fsdp_params else ())
+
+    def leaf(key, v, ns, moe):
+        sp = _leaf_spec(key, tuple(v.shape), n_stack=0, is_moe_ffn=moe,
+                        mesh=mesh, fsdp_axes=fsdp,
+                        fsdp_params=pcfg.fsdp_params)
+        return jax.lax.with_sharding_constraint(v, sp)
+
+    return _walk(tree, leaf, 0)

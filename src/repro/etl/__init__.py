@@ -1,0 +1,8 @@
+"""Raw2Zarr ETL: raw binary volumes -> transactional Radar DataTree."""
+
+from . import level2
+from .generator import StormSimulator, beam_height_m
+from .pipeline import generate_raw_archive, ingest, IngestReport
+
+__all__ = ["StormSimulator", "beam_height_m", "generate_raw_archive",
+           "ingest", "IngestReport", "level2"]

@@ -1,0 +1,136 @@
+"""Level-II-like binary volume format: the "raw archive" the ETL ingests.
+
+Mirrors the structural properties that make real NEXRAD Level-II / SIGMET
+archives slow to use scientifically — one standalone binary file per volume
+scan, int16-packed moments, per-sweep compressed blocks, whole-file decode
+to reach any single variable — so the file-based baselines in
+:mod:`benchmarks` are honest stand-ins for the Py-ART workflows the paper
+benchmarks against.
+
+Format (little-endian)::
+
+    magic  b"RDT2" | u16 version | site_id 4s | f64 lat, lon, alt
+    u16 vcp_id | f64 scan_time | u16 n_sweeps
+    per sweep:
+        f32 elevation | u32 n_az | u32 n_gates | f32 gate_m | u16 n_moments
+        per moment:
+            name 8s | f32 scale | f32 offset | u32 nbytes
+            zstd(int16[n_az * n_gates])
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict, List
+
+import numpy as np
+import zstandard
+
+from ..core import fm301
+
+MAGIC = b"RDT2"
+VERSION = 2
+
+_CCTX = zstandard.ZstdCompressor(level=1)
+_DCTX = zstandard.ZstdDecompressor()
+
+
+def _pack_moment(name: str, data: np.ndarray) -> np.ndarray:
+    scale, offset = fm301.MOMENT_PACKING.get(name, (0.01, 0.0))
+    packed = np.round((data.astype(np.float64) - offset) / scale)
+    packed = np.where(
+        np.isfinite(data), np.clip(packed, -32767, 32767), fm301.MISSING_I16
+    )
+    return packed.astype(np.int16)
+
+
+def _unpack_moment(name: str, packed: np.ndarray) -> np.ndarray:
+    scale, offset = fm301.MOMENT_PACKING.get(name, (0.01, 0.0))
+    out = packed.astype(np.float32) * np.float32(scale) + np.float32(offset)
+    return np.where(packed == fm301.MISSING_I16, np.nan, out).astype(np.float32)
+
+
+def encode_volume(volume: Dict) -> bytes:
+    """Serialize one decoded volume dict to the binary format."""
+    site: fm301.RadarSite = volume["site"]
+    vcp: fm301.VCPDef = volume["vcp"]
+    parts: List[bytes] = [
+        MAGIC,
+        struct.pack("<H", VERSION),
+        site.site_id.encode().ljust(4)[:4],
+        struct.pack("<ddd", site.latitude, site.longitude, site.altitude_m),
+        struct.pack("<H", vcp.vcp_id),
+        struct.pack("<d", volume["time"]),
+        struct.pack("<H", len(volume["sweeps"])),
+    ]
+    for sweep in volume["sweeps"]:
+        n_az = len(sweep["azimuth"])
+        n_gates = len(sweep["range"])
+        gate_m = float(sweep["range"][1] - sweep["range"][0]) if n_gates > 1 else 250.0
+        moments = sweep["moments"]
+        parts.append(
+            struct.pack("<fIIfH", sweep["elevation"], n_az, n_gates, gate_m,
+                        len(moments))
+        )
+        for name, data in moments.items():
+            blob = _CCTX.compress(_pack_moment(name, data).tobytes())
+            parts.append(name.encode().ljust(8)[:8])
+            scale, offset = fm301.MOMENT_PACKING.get(name, (0.01, 0.0))
+            parts.append(struct.pack("<ffI", scale, offset, len(blob)))
+            parts.append(blob)
+    return b"".join(parts)
+
+
+def decode_volume(blob: bytes) -> Dict:
+    """Decode a binary volume back to the FM-301-structured dict."""
+    off = 0
+
+    def take(n: int) -> bytes:
+        nonlocal off
+        out = blob[off : off + n]
+        off += n
+        return out
+
+    if take(4) != MAGIC:
+        raise ValueError("not an RDT2 volume file")
+    (version,) = struct.unpack("<H", take(2))
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    site_id = take(4).decode().strip()
+    lat, lon, alt = struct.unpack("<ddd", take(24))
+    (vcp_id,) = struct.unpack("<H", take(2))
+    (scan_time,) = struct.unpack("<d", take(8))
+    (n_sweeps,) = struct.unpack("<H", take(2))
+
+    vcp = fm301.VCPS.get(f"VCP-{vcp_id}")
+    site = fm301.SITES.get(
+        site_id, fm301.RadarSite(site_id, lat, lon, alt)
+    )
+    sweeps = []
+    for _ in range(n_sweeps):
+        elev, n_az, n_gates, gate_m, n_moments = struct.unpack(
+            "<fIIfH", take(18)
+        )
+        moments = {}
+        for _m in range(n_moments):
+            name = take(8).decode().strip()
+            scale, offset, nbytes = struct.unpack("<ffI", take(12))
+            packed = np.frombuffer(
+                _DCTX.decompress(take(nbytes)), dtype=np.int16
+            ).reshape(n_az, n_gates)
+            moments[name] = _unpack_moment(name, packed)
+        az = (np.arange(n_az, dtype=np.float32) + 0.5) * (360.0 / n_az)
+        rng_m = (np.arange(n_gates, dtype=np.float32) + 0.5) * gate_m
+        sweeps.append(
+            {
+                "elevation": float(elev),
+                "azimuth": az,
+                "range": rng_m,
+                "moments": moments,
+            }
+        )
+    if vcp is None:
+        elevs = tuple(s["elevation"] for s in sweeps)
+        vcp = fm301.VCPDef(vcp_id, elevs, sweeps[0]["azimuth"].size,
+                           sweeps[0]["range"].size, gate_m, 300.0)
+    return {"site": site, "vcp": vcp, "time": scan_time, "sweeps": sweeps}

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (+ pure-jnp oracles) for the framework's hot spots."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention with GQA.
+
+Used by every attention architecture in the framework; `prefill_32k` is
+the shape where it matters most (S² logits never materialize in HBM).
+
+Grid: ``(B, Hq, Sq/bq, Skv/bk)`` — the kv dimension is innermost, so the
+running max / normalizer / accumulator live in VMEM scratch across kv
+steps (TPU grids execute sequentially over the last dimension).  GQA maps
+``Hq`` query heads onto ``Hkv = Hq/group`` kv heads inside the index_map,
+so kv blocks are fetched once per kv head group.  Causal blocks strictly
+above the diagonal are skipped with ``pl.when`` (no FLOPs, no VMEM traffic
+beyond the prefetch).
+
+Block defaults (bq=bk=128, D≤256) keep the working set
+``3·128·D·4B + 128·128·4B ≈ 0.5 MB`` — far under the ~16 MB/core VMEM
+budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, sq: int, skv: int, bq: int,
+                  bk: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: query block rows span [qi*bq, qi*bq+bq) in query space, which
+    # sits at offset (skv - sq) in key space.  Skip blocks entirely above
+    # the diagonal.
+    q_end_kpos = qi * bq + (bq - 1) + (skv - sq)
+    visible = (not causal) or (ki * bk <= q_end_kpos)
+
+    @pl.when(visible)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            q_pos = (
+                qi * bq
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+                + (skv - sq)
+            )
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        # mask kv padding (skv may be padded up to a block multiple)
+        s = jnp.where(k_pos < skv, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        norm = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / norm[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,                  # (B, Hq, Sq, D)
+    k: jax.Array,                  # (B, Hkv, Skv, D)
+    v: jax.Array,                  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    Sqp = -(-Sq // bq) * bq
+    Skvp = -(-Skv // bk) * bk
+    if Sqp != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skvp != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+    n_kv = Skvp // bk
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, sq=Sq, skv=Skv,
+            bq=bq, bk=bk, n_kv=n_kv,
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, D), q.dtype),
+        grid=(B, Hq, Sqp // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda b, h, i, j, grp=group: (b, h // grp, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, D),
+                lambda b, h, i, j, grp=group: (b, h // grp, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :]

@@ -1,0 +1,428 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three facts shape the method (measured on this container's XLA):
+
+1. ``compiled.cost_analysis()`` is **per-partition** — multiply by device
+   count for global totals.
+2. ``lax.scan`` bodies are counted **once**, not per trip — so FLOPs for a
+   scanned-layers program undercount by ~n_layers.  We therefore cost
+   *probes*: tiny sharded programs for (a) one repeat-unit of each layer
+   group (fwd+bwd, with the production remat policy so recompute is
+   counted), (b) the embed/unembed/loss boundary, (c) the optimizer
+   update.  Totals are reassembled additively:
+
+       total = boundary + Σ_g reps_g · unit_g (+ optimizer)
+
+3. Blocked/flash attention hides its kv loop in a scan, so probes use the
+   ``naive`` core — the full S² FLOPs appear in the HLO (decode programs
+   are unrolled and naive already, so they are parsed directly).
+
+Collective bytes are parsed from the per-partition HLO text: the summed
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (spec'd definition of ``collective_bytes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from ..data.batches import input_specs
+from ..distributed.sharding import batch_shardings, param_shardings
+from ..models import model as M
+from ..models.transformer import (apply_unit, init_group_params,
+                                  init_shared_block, layer_groups)
+from ..train.optimizer import AdamWConfig, make_adamw
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_BF16_FLOPS
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+(?:[0-9]+)?|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every array literal in an HLO type string
+    (handles tuples '(f32[8,128], u32[])')."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+_OP_LINE_RE = re.compile(
+    r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\("
+)
+
+# Ops that genuinely touch HBM on a TPU (everything else — bitcast,
+# broadcast, convert, elementwise chains, parameter re-reads — fuses into
+# its consumer and never round-trips).  ``cost_analysis()['bytes
+# accessed']`` counts ALL of those, which measured 10-40× real traffic;
+# see EXPERIMENTS.md §Roofline for the validation.
+_HBM_OPS = {
+    "dot", "fusion", "custom-call", "gather", "scatter", "copy",
+    "transpose", "pad", "concatenate", "slice", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort",
+    "select-and-scatter", "convolution", "rng", "rng-bit-generator",
+    *_COLLECTIVES,
+}
+
+_NAME_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([a-z][a-z0-9\-]*)\(([^)]*)\)"
+)
+
+
+def hbm_bytes_from_text(hlo: str) -> int:
+    """TPU-fusion-aware HBM traffic estimate from a per-partition HLO dump:
+    Σ over HBM-touching ops of (result bytes + operand bytes), operands
+    resolved through a module-wide symbol table."""
+    defs: Dict[str, int] = {}
+    kept: List[Tuple[str, List[str]]] = []   # (result_type, operand names)
+    for line in hlo.splitlines():
+        m = _NAME_DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, args = m.groups()
+        clean = re.sub(r"\{[^}]*\}", "", type_str)
+        # tuple-typed values (while carries, parameter bundles) resolve to
+        # 0 as operands: their elements are read through get-tuple-element
+        # and charged at the op that consumes them
+        defs[name] = 0 if clean.startswith("(") else _shape_bytes(clean)
+        if op in _HBM_OPS and not op.endswith("-done"):
+            operands = re.findall(r"%[\w.\-]+", args)
+            kept.append((clean, operands))
+    total = 0
+    for type_str, operands in kept:
+        total += _shape_bytes(type_str)
+        for o in operands:
+            total += defs.get(o, 0)
+    return total
+
+
+def collective_bytes_from_text(hlo: str) -> Dict[str, int]:
+    """Per-partition *result* bytes of each collective kind in an HLO dump.
+
+    Post-optimization HLO references operands by bare name, so sizes come
+    from the result type (all-gather: the gathered size — an upper bound on
+    wire bytes; all-reduce: equals the operand).  Layout annotations
+    ``{2,1,0}`` are stripped before parsing; ``-done`` halves of async
+    pairs are skipped.
+    """
+    # first pass: symbol table of (dtype, operand names) per def — used to
+    # trace f32 collectives back to bf16 sources through convert chains
+    _PASSTHRU = {"convert", "copy", "bitcast", "reshape", "transpose",
+                 "fusion"}
+    info: Dict[str, Tuple[str, str, List[str]]] = {}
+    lines = hlo.splitlines()
+    for line in lines:
+        m = _NAME_DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, args = m.groups()
+        dt = re.match(r"\(?([a-z]+[0-9]*)", type_str)
+        info[name] = (dt.group(1) if dt else "", op,
+                      re.findall(r"%[\w.\-]+", args))
+
+    def _source_is_bf16(name: str, hops: int = 4) -> bool:
+        while hops and name in info:
+            dt, op, operands = info[name]
+            if dt in ("bf16", "f16"):
+                return True
+            if op in _PASSTHRU and operands:
+                name = operands[0]
+                hops -= 1
+                continue
+            return False
+        return False
+
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in lines:
+        stripped = line.strip()
+        m = _OP_LINE_RE.match(stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        type_str = re.sub(r"\{[^}]*\}", "", m.group(1))
+        nbytes = _shape_bytes(type_str)
+        if "f32[" in type_str:
+            # two XLA:CPU widening artifacts are charged at bf16 (the v5e
+            # target moves them at storage width):
+            #  * AllReducePromotion: bf16 reduces promoted to f32
+            #    (to_apply=%..._promoted);
+            #  * bf16 weights converted to f32 for CPU dots, with the FSDP
+            #    all-gather placed after the convert.
+            mm = re.search(r"\(([^),]+)", stripped[stripped.index(op):])
+            operand0 = mm.group(1).strip() if mm else ""
+            if "promoted" in stripped or _source_is_bf16(operand0):
+                nbytes //= 2
+        out[base] += nbytes
+    return out
+
+
+@dataclass
+class CostTerms:
+    """Global (all-chips) HLO totals + derived per-step roofline seconds.
+
+    ``bytes_accessed`` is the TPU-fusion-aware HBM estimate
+    (:func:`hbm_bytes_from_text`); ``raw_bytes`` is XLA's unfiltered
+    ``cost_analysis()['bytes accessed']`` kept for reference."""
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    raw_bytes: float = 0.0
+
+    def __add__(self, o: "CostTerms") -> "CostTerms":
+        pc = dict(self.per_collective)
+        for k, v in o.per_collective.items():
+            pc[k] = pc.get(k, 0.0) + v
+        return CostTerms(self.flops + o.flops,
+                         self.bytes_accessed + o.bytes_accessed,
+                         self.collective_bytes + o.collective_bytes, pc,
+                         self.raw_bytes + o.raw_bytes)
+
+    def scaled(self, k: float) -> "CostTerms":
+        return CostTerms(self.flops * k, self.bytes_accessed * k,
+                         self.collective_bytes * k,
+                         {n: v * k for n, v in self.per_collective.items()},
+                         self.raw_bytes * k)
+
+    def roofline(self, n_chips: int) -> Dict[str, float]:
+        t_compute = self.flops / (n_chips * PEAK_BF16_FLOPS)
+        t_memory = self.bytes_accessed / (n_chips * HBM_BW)
+        t_coll = self.collective_bytes / (n_chips * ICI_BW_PER_LINK)
+        dominant = max(
+            (("compute", t_compute), ("memory", t_memory),
+             ("collective", t_coll)),
+            key=lambda kv: kv[1],
+        )[0]
+        return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+                "t_collective_s": t_coll, "dominant": dominant,
+                "bound_s": max(t_compute, t_memory, t_coll)}
+
+
+def cost_from_compiled(compiled, n_devices: int) -> CostTerms:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    per = collective_bytes_from_text(txt)
+    return CostTerms(
+        flops=float(ca.get("flops", 0.0)) * n_devices,
+        bytes_accessed=float(hbm_bytes_from_text(txt)) * n_devices,
+        collective_bytes=float(sum(per.values())) * n_devices,
+        per_collective={k: float(v) * n_devices for k, v in per.items()},
+        raw_bytes=float(ca.get("bytes accessed", 0.0)) * n_devices,
+    )
+
+
+# ---------------------------------------------------------------------------
+# probes (train / prefill costing)
+# ---------------------------------------------------------------------------
+
+def _act_sharding(mesh, shape):
+    from ..launch.mesh import fsdp_axes
+    dp = fsdp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    spec: list = [None] * len(shape)
+    if shape and shape[0] % size == 0:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def _unit_probe(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
+                gi: int, B: int, S: int, *, with_grad: bool,
+                attn_impl: str = "naive") -> CostTerms:
+    """Cost of ONE application of group gi's repeat unit at (B, S)."""
+    groups = layer_groups(cfg)
+    reps, unit = groups[gi]
+    up_specs = jax.eval_shape(
+        lambda k: init_group_params(cfg, 1, unit, k,
+                                    jnp.dtype(pcfg.param_dtype)),
+        jax.random.key(0),
+    )
+    shared_specs = None
+    if any(s.mixer == "shared_attn" for s in unit):
+        shared_specs = jax.eval_shape(
+            lambda k: init_shared_block(cfg, k, jnp.dtype(pcfg.param_dtype)),
+            jax.random.key(1),
+        )
+    upshard = param_shardings(
+        cfg, pcfg, {"groups": [up_specs]}, mesh)["groups"][0]
+    cd = jnp.dtype(pcfg.compute_dtype)
+    x = jax.ShapeDtypeStruct((B, S, cfg.d_model), cd)
+    pos_shape = (B, 3, S) if cfg.mrope else (B, S)
+    pos = jax.ShapeDtypeStruct(pos_shape, jnp.int32)
+    xs = _act_sharding(mesh, x.shape)
+    ps = _act_sharding(mesh, pos_shape)
+    shshard = (param_shardings(cfg, pcfg, {"shared": shared_specs}, mesh)
+               ["shared"] if shared_specs is not None else None)
+
+    def fwd(up, shared, x, positions):
+        up0 = jax.tree.map(lambda p: p[0], up)
+        y, _aux, _ = apply_unit(cfg, unit, up0, shared, x, positions,
+                                attn_impl=attn_impl, slstm_cost_proxy=True,
+                                emb0=x)
+        return jnp.sum(y.astype(jnp.float32))
+
+    if with_grad:
+        inner = fwd
+        if pcfg.remat != "none":
+            inner = jax.checkpoint(
+                fwd,
+                policy=(jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                        if pcfg.remat == "dots" else None),
+            )
+        probe = jax.grad(inner, argnums=(0, 2))
+    else:
+        probe = fwd
+
+    args = (up_specs, shared_specs, x, pos)
+    shards = (upshard, shshard, xs, ps)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(probe, in_shardings=shards).lower(*args).compile()
+    return cost_from_compiled(compiled, mesh.size)
+
+
+def _boundary_probe(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
+                    shape: ShapeConfig, *, with_grad: bool) -> CostTerms:
+    """Embed + final norm + unembed (+ loss grad) cost."""
+    from ..models.layers import (apply_norm, embed_tokens, init_embeddings,
+                                 init_norm, unembed)
+
+    emb_specs = jax.eval_shape(
+        lambda k: {
+            "embed": init_embeddings(cfg, k, jnp.dtype(pcfg.param_dtype)),
+            "final_norm": init_norm(cfg, cfg.d_model,
+                                    jnp.dtype(pcfg.param_dtype)),
+        },
+        jax.random.key(0),
+    )
+    eshard = param_shardings(cfg, pcfg, emb_specs, mesh)
+    batch = input_specs(cfg, dataclasses.replace(shape, kind="train"))
+    bshard = batch_shardings(mesh, batch)
+    cd = jnp.dtype(pcfg.compute_dtype)
+
+    def fn(params, batch):
+        cparams = jax.tree.map(lambda p: p.astype(cd)
+                               if p.dtype == jnp.float32 and p.ndim > 1
+                               else p, params)
+        x, _ = M._embed_batch(cfg, cparams, batch, cd)
+        x = apply_norm(cfg, cparams["final_norm"], x)
+        logits = unembed(cfg, cparams["embed"], x)
+        targets = batch["targets"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gathered = jnp.take_along_axis(
+            logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - gathered)
+
+    probe = jax.grad(fn) if with_grad else fn
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(
+            probe, in_shardings=(eshard, bshard)).lower(
+            emb_specs, batch).compile()
+    return cost_from_compiled(compiled, mesh.size)
+
+
+def _optimizer_probe(cfg: ModelConfig, pcfg: ParallelConfig,
+                     ocfg: AdamWConfig, mesh) -> CostTerms:
+    from ..train.optimizer import OptState
+    specs = M.param_specs(cfg, dtype=jnp.dtype(pcfg.param_dtype))
+    pshard = param_shardings(cfg, pcfg, specs, mesh)
+    opt_init, opt_update = make_adamw(ocfg, pcfg)
+    opt_specs = jax.eval_shape(opt_init, specs)
+    rep = NamedSharding(mesh, P())
+    oshard = OptState(step=rep, mu=pshard, nu=pshard)
+
+    def fn(grads, opt, params):
+        return opt_update(grads, opt, params)[:2]
+
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(
+            fn, in_shardings=(pshard, oshard, pshard)).lower(
+            specs, opt_specs, specs).compile()
+    return cost_from_compiled(compiled, mesh.size)
+
+
+def probed_cost(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
+                shape: ShapeConfig, *, ocfg: Optional[AdamWConfig] = None,
+                attn_bytes_impl: str = "blocked",
+                ) -> Tuple[CostTerms, Dict[str, CostTerms]]:
+    """Reassembled global cost for a train/prefill cell; returns
+    (total, per-part breakdown).
+
+    ``attn_bytes_impl`` selects the byte model for attention in the memory
+    probe: ``"blocked"`` (the pure-jnp runtime — f32 score blocks hit HBM)
+    or ``"kernel_proxy"`` (the Pallas flash kernel runtime — q/k/v/o
+    streams only)."""
+    with_grad = shape.kind == "train"
+    B, S = shape.global_batch, shape.seq_len
+    parts: Dict[str, CostTerms] = {}
+    total = CostTerms()
+    has_attn = any(s.mixer in ("attn", "shared_attn", "mla")
+                   for _r, u in layer_groups(cfg) for s in u)
+    for gi, (reps, unit) in enumerate(layer_groups(cfg)):
+        # FLOPs from the naive core (full S² arithmetic visible to the HLO
+        # coster); bytes + collectives from the runtime byte model (naive's
+        # materialized S² scores would fake the memory term)
+        u_flops = _unit_probe(cfg, pcfg, mesh, gi, B, S,
+                              with_grad=with_grad, attn_impl="naive")
+        if has_attn and any(s.mixer in ("attn", "shared_attn", "mla")
+                            for s in unit):
+            u_mem = _unit_probe(cfg, pcfg, mesh, gi, B, S,
+                                with_grad=with_grad,
+                                attn_impl=attn_bytes_impl)
+        else:
+            u_mem = u_flops
+        u = CostTerms(flops=u_flops.flops,
+                      bytes_accessed=u_mem.bytes_accessed,
+                      collective_bytes=u_mem.collective_bytes,
+                      per_collective=u_mem.per_collective)
+        parts[f"group{gi}_x{reps}"] = u.scaled(reps)
+        total = total + u.scaled(reps)
+    b = _boundary_probe(cfg, pcfg, mesh, shape, with_grad=with_grad)
+    parts["boundary"] = b
+    total = total + b
+    if with_grad:
+        o = _optimizer_probe(cfg, pcfg, ocfg or AdamWConfig(), mesh)
+        parts["optimizer"] = o
+        total = total + o
+    return total, parts
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·tokens (the usefulness yardstick), per step."""
+    n_active = M.active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq

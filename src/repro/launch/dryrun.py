@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the production meshes need 512 placeholder host
+devices (2 pods × 16 × 16).
+
+Per cell this driver:
+  1. builds the runtime program (launch.steps) and compiles it on the
+     single-pod (16, 16) mesh AND the 2-pod (2, 16, 16) mesh —
+     ``lower().compile()`` succeeding is the deliverable;
+  2. records ``memory_analysis()`` (fits-per-device proof) and
+     ``cost_analysis()`` from the compiled artifacts;
+  3. reassembles true global FLOPs/bytes/collective-bytes via costing
+     probes (scan bodies are counted once — see launch.costing) and
+     derives the three roofline terms on the single-pod mesh.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun
+  python -m repro.launch.dryrun --list    # enumerate the 40 cells / skips
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch import costing
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, default_pcfg, lower_cell
+
+
+def cell_plan():
+    """The 40 assigned cells: (arch, shape, run|skip, reason)."""
+    plan = []
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if shape == "long_500k" and not cfg.sub_quadratic:
+                plan.append((arch, shape, "skip",
+                             "full-attention arch: long_500k designated "
+                             "sub-quadratic-only (DESIGN.md §7)"))
+            else:
+                plan.append((arch, shape, "run", ""))
+    return plan
+
+
+def _mem_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+        "peak_bytes_per_device": int(ma.argument_size_in_bytes
+                                     + ma.output_size_in_bytes
+                                     + ma.temp_size_in_bytes
+                                     - ma.alias_size_in_bytes),
+    }
+
+
+def run_cell(arch: str, shape: str, *, meshes=("pod", "multipod"),
+             do_cost: bool = True, scan_layers: bool = True,
+             n_microbatches: int = 0, attn_impl: str = None,
+             kernel_bytes: bool = False) -> dict:
+    out = {"arch": arch, "shape": shape, "status": "ok", "meshes": {},
+           "attn_impl": attn_impl, "kernel_bytes": kernel_bytes}
+    kind = SHAPES[shape].kind
+    pcfg = default_pcfg(kind, scan_layers=scan_layers,
+                        n_microbatches=n_microbatches)
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        t0 = time.time()
+        prog = build_cell(arch, shape, mesh, pcfg=pcfg, attn_impl=attn_impl)
+        lowered = lower_cell(prog, mesh)
+        compiled = lowered.compile()
+        dt = time.time() - t0
+        rec = {
+            "devices": mesh.size,
+            "compile_s": round(dt, 1),
+            "memory": _mem_stats(compiled),
+        }
+        if mesh_name == "pod":
+            runtime_cost = costing.cost_from_compiled(compiled, mesh.size)
+            rec["runtime_cost"] = dataclasses.asdict(runtime_cost)
+            if do_cost:
+                if kind == "decode":
+                    # the runtime program scans layers (memory-honest); the
+                    # coster needs the unrolled variant (scan bodies are
+                    # counted once) — compile it separately, ignore its
+                    # memory analysis
+                    if pcfg.scan_layers:
+                        upcfg = dataclasses.replace(pcfg, scan_layers=False)
+                        uprog = build_cell(arch, shape, mesh, pcfg=upcfg,
+                                           attn_impl=attn_impl)
+                        ucompiled = lower_cell(uprog, mesh).compile()
+                        total = costing.cost_from_compiled(ucompiled,
+                                                           mesh.size)
+                        del ucompiled, uprog
+                        if kernel_bytes:
+                            # bytes from the fused-kernel attention model
+                            kprog = build_cell(arch, shape, mesh, pcfg=upcfg,
+                                               attn_impl="kernel_proxy")
+                            kc = costing.cost_from_compiled(
+                                lower_cell(kprog, mesh).compile(), mesh.size)
+                            total = dataclasses.replace(
+                                total, bytes_accessed=kc.bytes_accessed,
+                                raw_bytes=kc.raw_bytes)
+                            del kprog
+                        parts = {}
+                    else:
+                        total, parts = runtime_cost, {}
+                else:
+                    total, parts = costing.probed_cost(
+                        get_config(arch), pcfg, mesh, SHAPES[shape],
+                        attn_bytes_impl=("kernel_proxy" if kernel_bytes
+                                         else "blocked"))
+                mf = costing.model_flops(get_config(arch), SHAPES[shape])
+                rec["cost"] = dataclasses.asdict(total)
+                rec["cost_parts"] = {k: dataclasses.asdict(v)
+                                     for k, v in parts.items()}
+                rec["roofline"] = total.roofline(mesh.size)
+                rec["model_flops"] = mf
+                rec["useful_flops_ratio"] = (
+                    mf / total.flops if total.flops else 0.0)
+        out["meshes"][mesh_name] = rec
+        del compiled, lowered, prog
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--no-cost", action="store_true")
+    ap.add_argument("--unscanned", action="store_true",
+                    help="lower train cells with unrolled layers")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="0 = auto-size to the 4 GiB/device residual budget")
+    ap.add_argument("--attn-impl", default=None,
+                    help="override the cell's attention impl "
+                         "(blocked|naive|flash_decode)")
+    ap.add_argument("--kernel-bytes", action="store_true",
+                    help="memory probe models attention as the fused "
+                         "Pallas kernel (q/k/v/o streams)")
+    ap.add_argument("--out", default=None, help="directory for JSON records")
+    args = ap.parse_args()
+
+    plan = cell_plan()
+    if args.list:
+        for arch, shape, action, why in plan:
+            print(f"{arch:28s} {shape:12s} {action:4s} {why}")
+        n_run = sum(1 for p in plan if p[2] == "run")
+        print(f"-- {n_run} runnable cells, {len(plan) - n_run} documented "
+              f"skips, {len(plan)} total")
+        return
+
+    todo = [(a, s) for a, s, act, _ in plan if act == "run"]
+    if not args.all:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all / --list) required")
+        todo = [(args.arch, args.shape)]
+
+    meshes = (("pod", "multipod") if args.mesh == "both" else (args.mesh,))
+    outdir = Path(args.out) if args.out else None
+    if outdir:
+        outdir.mkdir(parents=True, exist_ok=True)
+
+    for arch, shape in todo:
+        try:
+            rec = run_cell(arch, shape, meshes=meshes,
+                           do_cost=not args.no_cost,
+                           scan_layers=not args.unscanned,
+                           n_microbatches=args.microbatches,
+                           attn_impl=args.attn_impl,
+                           kernel_bytes=args.kernel_bytes)
+        except Exception as e:  # a failed cell is a bug: record and continue
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        line = json.dumps(rec)
+        if outdir:
+            (outdir / f"{arch}__{shape}.json").write_text(line)
+        status = rec["status"]
+        if status == "ok":
+            pod = rec["meshes"].get("pod", {})
+            peak = pod.get("memory", {}).get("peak_bytes_per_device", 0)
+            roof = pod.get("roofline", {})
+            print(f"[{status}] {arch} {shape}: peak/dev "
+                  f"{peak / 2**30:.2f} GiB; dominant "
+                  f"{roof.get('dominant', '-')}; "
+                  f"bound {roof.get('bound_s', 0) * 1e3:.2f} ms; "
+                  f"useful {rec['meshes']['pod'].get('useful_flops_ratio', 0):.2f}"
+                  if roof else f"[{status}] {arch} {shape}: compiled")
+        else:
+            print(f"[error] {arch} {shape}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Target hardware: TPU v5e pods — 256 chips (16×16) per pod, 2 pods for the
+multi-pod dry-run.  Axis semantics:
+  * ``pod``   — data parallelism across pods (gradient all-reduce crosses
+                the inter-pod links; compression lives here)
+  * ``data``  — FSDP/data parallelism within a pod
+  * ``model`` — tensor/expert parallelism (highest-bandwidth axis)
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Single-process mesh over whatever devices exist (CPU smoke/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def fsdp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """The axes a parameter's 'replicated' dimension is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# v5e hardware constants (per chip) for the roofline terms
+PEAK_BF16_FLOPS = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW_PER_LINK = 50e9            # bytes/s/link (~4 links/chip on the torus)

@@ -1,0 +1,225 @@
+"""Cell program builders: (arch × shape × mesh) -> jit-able step + shardings.
+
+One *cell* is an assigned (architecture, input-shape) pair on a mesh.  The
+builders return everything the dry-run, trainer, and server need:
+
+* ``kind="train"``   — full train step (grad accumulation + AdamW update),
+  layers scanned, blocked attention; state donated.
+* ``kind="prefill"`` — prompt pass writing KV/latent/SSM caches (the layer
+  loop is unrolled by construction in ``model.decode_step``).
+* ``kind="decode"``  — one-token serve step against a seq_len-deep cache.
+  Decode attention reads the whole cache each step, so the *naive* core is
+  both the honest cost model and a fine runtime at S_q = 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from ..data.batches import input_specs
+from ..distributed.sharding import (batch_shardings, cache_shardings,
+                                    param_shardings, replicated)
+from ..models import model as M
+from ..train.optimizer import AdamWConfig, make_adamw
+from ..train.step import TrainState, make_train_step, train_state_specs
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class CellProgram:
+    name: str
+    kind: str
+    fn: Callable                     # jit-able python callable
+    args: Tuple[Any, ...]            # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    static: Dict[str, Any]
+
+
+def default_pcfg(kind: str, *, scan_layers: bool = True,
+                 n_microbatches: int = 0) -> ParallelConfig:
+    """``n_microbatches=0`` means auto-size to the memory budget."""
+    if kind == "train":
+        return ParallelConfig(scan_layers=scan_layers, remat="block",
+                              n_microbatches=n_microbatches)
+    # serving: bf16 everywhere, no FSDP gather in the hot loop unless the
+    # model cannot fit otherwise (the rules shard what divides)
+    return ParallelConfig(scan_layers=scan_layers, remat="none",
+                          param_dtype="bfloat16", fsdp_params=True)
+
+
+def opt_shardings_like(pshard: Any, mesh) -> Any:
+    """OptState shardings mirroring the param shardings (f32 moments)."""
+    rep = NamedSharding(mesh, P())
+    from ..train.optimizer import OptState
+    return OptState(step=rep, mu=pshard, nu=pshard)
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    pcfg: Optional[ParallelConfig] = None,
+    ocfg: Optional[AdamWConfig] = None,
+    attn_impl: Optional[str] = None,
+) -> CellProgram:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    pcfg = pcfg or default_pcfg(kind)
+    ocfg = ocfg or AdamWConfig()
+
+    if kind == "train":
+        return _build_train(cfg, shape, mesh, pcfg, ocfg,
+                            attn_impl or "blocked")
+    if kind == "prefill":
+        return _build_prefill(cfg, shape, mesh, pcfg,
+                              attn_impl or "blocked")
+    return _build_decode(cfg, shape, mesh, pcfg,
+                         attn_impl or "flash_decode")
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      *, residual_budget_gib: float = 4.0) -> int:
+    """Smallest power-of-two microbatch count keeping the per-device
+    remat-stored residual stack under budget (B/n must stay divisible by
+    the data-parallel degree so the batch dim shards)."""
+    from .mesh import fsdp_axes
+    dp = 1
+    for a in fsdp_axes(mesh):
+        dp *= mesh.shape[a]
+    B, S = shape.global_batch, shape.seq_len
+    resid = cfg.n_layers * B * S * cfg.d_model * 2 / dp   # bf16 per device
+    n = 1
+    while (resid / n > residual_budget_gib * 2**30
+           and n * 2 <= max(1, B // dp)):
+        n *= 2
+    return n
+
+
+def _build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 pcfg: ParallelConfig, ocfg: AdamWConfig,
+                 attn_impl: str) -> CellProgram:
+    if pcfg.n_microbatches == 0:        # 0 = auto
+        pcfg = dataclasses.replace(
+            pcfg, n_microbatches=auto_microbatches(cfg, shape, mesh))
+    state_specs = train_state_specs(cfg, ocfg, pcfg)
+    pshard = param_shardings(cfg, pcfg, state_specs.params, mesh)
+    state_shard = TrainState(params=pshard,
+                             opt=opt_shardings_like(pshard, mesh))
+    batch = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, batch)
+    step = make_train_step(cfg, ocfg, pcfg, attn_impl=attn_impl)
+
+    def train_step(state, batch):
+        new_state, metrics = step(state, batch)
+        return new_state, metrics
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}", kind="train",
+        fn=train_step, args=(state_specs, batch),
+        in_shardings=(state_shard, bshard),
+        out_shardings=(state_shard, None),
+        donate_argnums=(0,),
+        static={"cfg": cfg, "pcfg": pcfg, "ocfg": ocfg,
+                "attn_impl": attn_impl},
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _cache_specs(cfg: ModelConfig, pcfg: ParallelConfig, batch: int,
+                 max_len: int):
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, pcfg, batch=batch, max_len=max_len))
+
+
+def _param_specs_cast(cfg: ModelConfig, pcfg: ParallelConfig):
+    specs = M.param_specs(cfg, dtype=jnp.dtype(pcfg.param_dtype))
+    return specs
+
+
+def _build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   pcfg: ParallelConfig, attn_impl: str) -> CellProgram:
+    B, S = shape.global_batch, shape.seq_len
+    specs = _param_specs_cast(cfg, pcfg)
+    pshard = param_shardings(cfg, pcfg, specs, mesh)
+    caches = _cache_specs(cfg, pcfg, B, S)
+    cshard = cache_shardings(mesh, caches)
+    batch = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, batch)
+
+    def prefill_step(params, caches, batch):
+        toks = batch.get("tokens", batch.get("codes", batch.get("embeds")))
+        logits, new_caches = M.decode_step(
+            cfg, pcfg, params, caches, toks, jnp.int32(0),
+            attn_impl=attn_impl)
+        return logits[..., -1, :], new_caches
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}", kind="prefill",
+        fn=prefill_step, args=(specs, caches, batch),
+        in_shardings=(pshard, cshard, bshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+        static={"cfg": cfg, "pcfg": pcfg, "attn_impl": attn_impl},
+    )
+
+
+def _build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  pcfg: ParallelConfig, attn_impl: str) -> CellProgram:
+    B, S = shape.global_batch, shape.seq_len
+    specs = _param_specs_cast(cfg, pcfg)
+    pshard = param_shardings(cfg, pcfg, specs, mesh)
+    caches = _cache_specs(cfg, pcfg, B, S)
+    cshard = cache_shardings(mesh, caches)
+    batch = input_specs(cfg, shape)      # one new token per sequence
+    bshard = batch_shardings(mesh, batch)
+
+    def serve_step(params, caches, batch):
+        toks = batch.get("tokens", batch.get("codes", batch.get("embeds")))
+        # cache "full but one": the step appends token S-1 and attends to
+        # the seq_len-deep history — the steady-state decode cost
+        logits, new_caches = M.decode_step(
+            cfg, pcfg, params, caches, toks, jnp.int32(S - 1),
+            attn_impl=attn_impl)
+        return logits[..., -1, :], new_caches
+
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}", kind="decode",
+        fn=serve_step, args=(specs, caches, batch),
+        in_shardings=(pshard, cshard, bshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+        static={"cfg": cfg, "pcfg": pcfg, "attn_impl": attn_impl},
+    )
+
+
+# ---------------------------------------------------------------------------
+# lower/compile entry used by dryrun + benchmarks
+# ---------------------------------------------------------------------------
+
+def lower_cell(prog: CellProgram, mesh):
+    jitted = jax.jit(
+        prog.fn,
+        in_shardings=prog.in_shardings,
+        out_shardings=prog.out_shardings,
+        donate_argnums=prog.donate_argnums,
+    )
+    with jax.set_mesh(mesh):
+        return jitted.lower(*prog.args)

@@ -1,0 +1,6 @@
+"""Composable model substrate: layers, mixers, assembly, top-level model."""
+
+from . import attention, layers, model, moe, ssm, transformer, xlstm
+
+__all__ = ["attention", "layers", "model", "moe", "ssm", "transformer",
+           "xlstm"]

@@ -1,0 +1,229 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, MLPs, embeddings.
+
+Everything is functional (params-in, activations-out) so layers compose
+under ``jax.lax.scan`` / ``jax.remat`` and shard with GSPMD annotations
+attached by :mod:`repro.distributed.sharding`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return scale * jax.random.normal(key, (d_in, d_out), dtype=dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (+ M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    D = x.shape[-1]
+    inv, rot = rope_freqs(D, theta, fraction)
+    ang = positions[:, None, :, None].astype(jnp.float32) * inv  # (B,1,S,rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1) if rot < D \
+        else y.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: (t, h, w) position triplets.
+
+    x: (B, H, S, D); positions3: (B, 3, S).  The D/2 frequency slots are
+    partitioned into ``sections`` (t, h, w); each slot rotates by the
+    position along its assigned axis.  Text tokens carry t==h==w so M-RoPE
+    degenerates to 1-D RoPE for them.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(0, D, 2, dtype=jnp.float32) / D))
+    sec_idx = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # (half,) which axis drives each frequency slot
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        sec_idx[None, :, None].repeat(positions3.shape[0], 0)
+        .astype(jnp.int32),
+        axis=1,
+    )  # (B, half, S)
+    ang = pos.transpose(0, 2, 1) * inv[None, None, :]          # (B, S, half)
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d, d_ff, dtype),
+            "w_up": dense_init(k2, d, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype=dtype),
+        "w_down": dense_init(k2, d_ff, d, dtype),
+        "b_down": jnp.zeros((d,), dtype=dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"]) + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embeddings(cfg: ModelConfig, key, dtype) -> Params:
+    ks = jax.random.split(key, cfg.n_codebooks + 1)
+    if cfg.n_codebooks > 1:
+        emb = jnp.stack([
+            embed_init(ks[i], cfg.vocab_size, cfg.d_model, dtype)
+            for i in range(cfg.n_codebooks)
+        ])  # (K, V, D)
+    else:
+        emb = embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype)
+    p = {"tokens": emb}
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            p["head"] = jnp.stack([
+                dense_init(jax.random.fold_in(ks[-1], i), cfg.d_model,
+                           cfg.vocab_size, dtype)
+                for i in range(cfg.n_codebooks)
+            ])  # (K, D, V)
+        else:
+            p["head"] = dense_init(ks[-1], cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) or (B, K, S) for multi-codebook audio."""
+    if cfg.n_codebooks > 1:
+        # sum the K codebook embeddings per timestep (MusicGen delay pattern
+        # is applied by the data pipeline; here streams are already aligned)
+        out = jnp.zeros(
+            (tokens.shape[0], tokens.shape[2], cfg.d_model),
+            dtype=p["tokens"].dtype,
+        )
+        for kbook in range(cfg.n_codebooks):
+            out = out + jnp.take(p["tokens"][kbook], tokens[:, kbook], axis=0)
+        return out
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """`with_sharding_constraint` against the ambient mesh, silently
+    dropping (a) axes the mesh does not have and (b) axes whose size does
+    not divide the dimension (no padded shards; no-op on unmeshed runs)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    clean = []
+    for dim, a in zip(x.shape, axes):
+        entry = None
+        cands = a if isinstance(a, tuple) else (a,) if a else ()
+        present = tuple(n for n in cands if n in names)
+        if present:
+            prod = 1
+            for n in present:
+                prod *= sizes[n]
+            if dim % prod == 0:
+                entry = present if len(present) > 1 else present[0]
+        clean.append(entry)
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+DP = ("pod", "data")  # every data-parallel axis that may exist
+
+
+def unembed(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """-> (B, S, V) or (B, K, S, V) logits (float32), vocab-sharded."""
+    xf = x
+    if cfg.tie_embeddings:
+        w = p["tokens"].astype(xf.dtype)  # (V, D)
+        logits = jnp.einsum("bsd,vd->bsv", xf, w)
+    elif cfg.n_codebooks > 1:
+        logits = jnp.einsum("bsd,kdv->bksv", xf, p["head"].astype(xf.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", xf, p["head"].astype(xf.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.n_codebooks > 1:
+        return constrain(logits, DP, None, None, "model")
+    return constrain(logits, DP, None, "model")

@@ -1,0 +1,172 @@
+"""Mamba2 (SSD) mixer block — the zamba2 backbone.
+
+Training/prefill run the *chunked* SSD formulation (matmul-dominant,
+MXU-friendly); on TPU the Pallas ``mamba2_scan`` kernel takes over via
+``impl="pallas"``.  Decode carries an explicit (B, H, P, N) state and a
+rolling conv window — O(1) per token, which is what makes ``long_500k``
+tractable for this family.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from .layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype) -> Params:
+    s, d_inner, H = _dims(cfg)
+    N = s.d_state
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # fused input projection: [z (gate), x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * N + H
+    p = {
+        "w_in": dense_init(k1, cfg.d_model, d_proj, dtype),
+        "conv": 0.1 * jax.random.normal(
+            k2, (s.conv_width, d_inner + 2 * N), dtype
+        ),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(jnp.float32),
+        "w_out": dense_init(k3, d_inner, cfg.d_model, dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+    }
+    return p
+
+
+def _causal_conv(u: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. u: (B, L, C); w: (W, C).
+
+    Returns (y, new_state) where state is the last W-1 inputs (for decode).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)           # (B, L+W-1, C)
+    y = sum(ext[:, i : i + u.shape[1]] * w[i][None, None] for i in range(W))
+    new_state = ext[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y), new_state
+
+
+def _chunked_ssd_jnp(x, dt, A, Bm, Cm, chunk: int):
+    """Pure-jnp chunked SSD — same math as the Pallas kernel, lowered as
+    dense matmuls so cost analysis and CPU execution both see the real
+    arithmetic.  x: (B, L, H, P), dt: (B, L, H), A: (H,), Bm/Cm: (B, L, N)."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, L)
+    Lp = -(-L // c) * c
+    if Lp != L:
+        x = jnp.pad(x, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Lp - L), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, Lp - L), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, Lp - L), (0, 0)))
+    nc = Lp // c
+    xc = x.reshape(B, nc, c, H, P).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, c, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, c, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, c, N).astype(jnp.float32)
+
+    a = A[None, None, None, :] * dtc                    # (B, nc, c, H)
+    Lcum = jnp.cumsum(a, axis=2)
+    seg = Lcum[:, :, :, None, :] - Lcum[:, :, None, :, :]   # (B,nc,c,c,H)
+    tril = jnp.tril(jnp.ones((c, c), bool))
+    M = jnp.where(tril[None, None, :, :, None],
+                  jnp.exp(seg) * dtc[:, :, None, :, :], 0.0)
+    CB = jnp.einsum("bnti,bnsi->bnts", Cc, Bc)          # (B, nc, c, c)
+    y_intra = jnp.einsum("bnts,bntsh,bnshp->bnthp", CB, M, xc)
+
+    # inter-chunk state carry (sequential over nc chunks only)
+    w = jnp.exp(Lcum[:, :, -1:, :] - Lcum) * dtc        # (B, nc, c, H)
+    chunk_state = jnp.einsum("bnsh,bnshp,bnsi->bnhpi", w, xc, Bc)
+    chunk_decay = jnp.exp(Lcum[:, :, -1, :])            # (B, nc, H)
+
+    def carry_fn(h, inp):
+        st, dec = inp                                   # (B,H,P,N), (B,H)
+        h_next = h * dec[..., None, None] + st
+        return h_next, h                                # emit state BEFORE chunk
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_in = jax.lax.scan(
+        carry_fn, h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                     # (B, nc, H, P, N)
+    y_state = jnp.einsum("bnti,bnhpi,bnth->bnthp",
+                         Cc, h_in, jnp.exp(Lcum))
+    y = (y_intra + y_state).reshape(B, Lp, H, P)[:, :L]
+    return y.astype(x.dtype)
+
+
+def apply_mamba2(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                     # (B, S, D)
+    *,
+    state: Optional[Params] = None,   # decode: {"ssm": (B,H,P,N), "conv": ...}
+    impl: str = "chunked",
+) -> Tuple[jax.Array, Optional[Params]]:
+    s, d_inner, H = _dims(cfg)
+    N, P = s.d_state, s.head_dim
+    B, S, D = x.shape
+
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xin, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1,
+    )
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                          # (H,) negative
+    xh = xin.reshape(B, S, H, P)
+
+    if state is None:
+        if impl == "pallas":
+            y, _ = kops.mamba2_scan(xh, dt, A, Bm, Cm, mode="kernel")
+        elif impl == "chunked":
+            y = _chunked_ssd_jnp(xh, dt, A, Bm, Cm, s.chunk)
+        else:
+            y, _ = kref.mamba2_scan(xh, dt, A, Bm, Cm)
+        new_state = None
+    else:
+        y, h = kref.mamba2_scan(xh, dt, A, Bm, Cm, h0=state["ssm"])
+        new_state = {"ssm": h, "conv": new_conv}
+
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    # gated RMSNorm (Mamba2 norm-before-out)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", yf.astype(x.dtype), p["w_out"])
+    return out, new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> Params:
+    s, d_inner, H = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_inner + 2 * s.d_state),
+                          jnp.float32),
+    }

@@ -1,0 +1,241 @@
+"""Block assembly: layer specs, scanned layer groups, heterogeneous stacks.
+
+An architecture is a list of ``(repeats, [LayerSpec, ...])`` groups; each
+group's params are stacked over the repeat dimension and the unit is
+applied under ``jax.lax.scan`` (+ remat) for compact HLO, or unrolled when
+``scan_layers=False`` (dry-run cost analysis; XLA counts scan bodies once).
+
+Supported mixers: attn (GQA), mla, mamba2, mlstm, slstm, shared_attn
+(zamba2's weight-shared attention block, concatenating the original
+embedding stream per the Zamba design).  FFNs: dense (SwiGLU/GELU), moe,
+none.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelConfig
+from . import attention, moe as moe_mod, ssm, xlstm
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                    # attn|mla|mamba2|mlstm|slstm|shared_attn
+    ffn: str = "dense"            # dense|moe|none
+    d_ff: int = 0                 # 0 -> cfg.d_ff
+
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[int, List[LayerSpec]]]:
+    """The (repeats, unit) decomposition for each architecture family."""
+    if cfg.mixer == "mamba2" and cfg.ssm and cfg.ssm.attn_every:
+        period = cfg.ssm.attn_every
+        unit = [LayerSpec("mamba2", "none")] * period + [
+            LayerSpec("shared_attn", "none")
+        ]
+        n_units = cfg.n_layers // period
+        rem = cfg.n_layers - n_units * period
+        groups = [(n_units, unit)]
+        if rem:
+            groups.append((rem, [LayerSpec("mamba2", "none")]))
+        return groups
+    if cfg.mixer == "mamba2":
+        return [(cfg.n_layers, [LayerSpec("mamba2", "none")])]
+    if cfg.mixer == "mlstm":
+        x = cfg.xlstm
+        per = x.slstm_every
+        unit = [LayerSpec("mlstm", "none")] * (per - 1) + [
+            LayerSpec("slstm", "none")
+        ]
+        return [(cfg.n_layers // per, unit)]
+    mixer = "mla" if cfg.mla is not None else "attn"
+    if cfg.moe is not None:
+        m = cfg.moe
+        groups: List[Tuple[int, List[LayerSpec]]] = []
+        if m.first_dense:
+            groups.append(
+                (m.first_dense,
+                 [LayerSpec(mixer, "dense", m.dense_d_ff or cfg.d_ff)])
+            )
+        remaining = cfg.n_layers - m.first_dense
+        if m.interleave > 1:
+            unit = [LayerSpec(mixer, "dense", m.dense_d_ff or cfg.d_ff)] * (
+                m.interleave - 1
+            ) + [LayerSpec(mixer, "moe")]
+            groups.append((remaining // m.interleave, unit))
+        else:
+            groups.append((remaining, [LayerSpec(mixer, "moe")]))
+        return groups
+    return [(cfg.n_layers, [LayerSpec(mixer, "dense")])]
+
+
+# ---------------------------------------------------------------------------
+# per-spec init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key, dtype) -> Params:
+    k_mix, k_ffn, k_n1, k_n2 = jax.random.split(key, 4)
+    p: Params = {}
+    if spec.mixer in ("attn", "shared_attn"):
+        p["mixer"] = attention.init_attn(cfg, k_mix, dtype)
+        p["norm1"] = init_norm(cfg, cfg.d_model, dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attention.init_mla(cfg, k_mix, dtype)
+        p["norm1"] = init_norm(cfg, cfg.d_model, dtype)
+    elif spec.mixer == "mamba2":
+        p["mixer"] = ssm.init_mamba2(cfg, k_mix, dtype)
+        p["norm1"] = init_norm(cfg, cfg.d_model, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm.init_mlstm(cfg, k_mix, dtype)
+        p["norm1"] = init_norm(cfg, cfg.d_model, dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm.init_slstm(cfg, k_mix, dtype)
+        p["norm1"] = init_norm(cfg, cfg.d_model, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["ffn"] = init_mlp(cfg, k_ffn, cfg.d_model, spec.d_ff or cfg.d_ff,
+                            dtype)
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(cfg, k_ffn, dtype)
+        p["norm2"] = init_norm(cfg, cfg.d_model, dtype)
+    return p
+
+
+def apply_layer(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[Params] = None,
+    cache_index=None,
+    attn_impl: str = "blocked",
+    slstm_cost_proxy: bool = False,
+    emb0: Optional[jax.Array] = None,
+    moe_dropless: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array], Optional[Params]]:
+    """One block: pre-norm mixer + residual (+ pre-norm FFN + residual)."""
+    aux: Dict[str, jax.Array] = {}
+    new_cache = None
+    h = apply_norm(cfg, p["norm1"], x)
+    if spec.mixer == "shared_attn":
+        # zamba2: shared weights, input concat(h, embedding stream)
+        h = jnp.concatenate([h, emb0.astype(h.dtype)], axis=-1)
+        h = h @ p["concat_proj"]
+        o, new_cache = attention.apply_attn(
+            cfg, p["mixer"], h, positions, cache=cache,
+            cache_index=cache_index, impl=attn_impl,
+        )
+        o = o + apply_mlp(cfg, p["ffn_shared"], o)
+    elif spec.mixer == "attn":
+        o, new_cache = attention.apply_attn(
+            cfg, p["mixer"], h, positions, cache=cache,
+            cache_index=cache_index, impl=attn_impl,
+        )
+    elif spec.mixer == "mla":
+        o, new_cache = attention.apply_mla(
+            cfg, p["mixer"], h, positions, cache=cache,
+            cache_index=cache_index, impl=attn_impl,
+        )
+    elif spec.mixer == "mamba2":
+        o, new_cache = ssm.apply_mamba2(
+            cfg, p["mixer"], h, state=cache,
+            impl="chunked" if attn_impl != "pallas" else "pallas",
+        )
+    elif spec.mixer == "mlstm":
+        o, new_cache = xlstm.apply_mlstm(cfg, p["mixer"], h, state=cache)
+    elif spec.mixer == "slstm":
+        o, new_cache = xlstm.apply_slstm(
+            cfg, p["mixer"], h, state=cache, cost_proxy=slstm_cost_proxy
+        )
+    else:
+        raise ValueError(spec.mixer)
+    x = x + o
+    if spec.ffn in ("dense", "moe"):
+        h = apply_norm(cfg, p["norm2"], x)
+        if spec.ffn == "dense":
+            x = x + apply_mlp(
+                dataclasses.replace(cfg, d_ff=spec.d_ff or cfg.d_ff),
+                p["ffn"], h,
+            )
+        else:
+            y, aux = moe_mod.apply_moe(cfg, p["ffn"], h,
+                                       dropless=moe_dropless)
+            x = x + y
+    return x, aux, new_cache
+
+
+def init_shared_block(cfg: ModelConfig, key, dtype) -> Params:
+    """zamba2's single shared attention+MLP block (+2D->D concat proj)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    from .layers import dense_init
+    return {
+        "norm1": init_norm(cfg, cfg.d_model, dtype),
+        "concat_proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model, dtype),
+        "mixer": attention.init_attn(cfg, k2, dtype),
+        "ffn_shared": init_mlp(cfg, k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_group_params(cfg: ModelConfig, repeats: int, unit: List[LayerSpec],
+                      key, dtype) -> Params:
+    """Stack per-unit params over the repeat dimension."""
+    def one(r):
+        ku = jax.random.fold_in(key, r)
+        return {
+            f"layer_{i}": _init_layer(cfg, spec, jax.random.fold_in(ku, i),
+                                      dtype)
+            for i, spec in enumerate(unit)
+            if spec.mixer != "shared_attn"
+        }
+    units = [one(r) for r in range(repeats)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+
+def apply_unit(
+    cfg: ModelConfig,
+    unit: List[LayerSpec],
+    unit_params: Params,
+    shared_params: Optional[Params],
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    caches: Optional[List] = None,
+    cache_index=None,
+    attn_impl: str = "blocked",
+    slstm_cost_proxy: bool = False,
+    emb0: Optional[jax.Array] = None,
+    moe_dropless: bool = False,
+):
+    """Apply one repeat unit (list of layers, shared block woven in)."""
+    aux_total: Dict[str, jax.Array] = {}
+    new_caches = [] if caches is not None else None
+    for i, spec in enumerate(unit):
+        if spec.mixer == "shared_attn":
+            p = dict(shared_params)
+            p["ffn_shared"] = shared_params["ffn_shared"]
+        else:
+            p = unit_params[f"layer_{i}"]
+        cache_i = caches[i] if caches is not None else None
+        x, aux, nc = apply_layer(
+            cfg, spec, p, x, positions, cache=cache_i,
+            cache_index=cache_index, attn_impl=attn_impl,
+            slstm_cost_proxy=slstm_cost_proxy, emb0=emb0,
+            moe_dropless=moe_dropless,
+        )
+        for k, v in aux.items():
+            aux_total[k] = aux_total.get(k, 0.0) + v
+        if new_caches is not None:
+            new_caches.append(nc)
+    return x, aux_total, new_caches

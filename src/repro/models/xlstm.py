@@ -1,0 +1,272 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to the xLSTM block structure (Beck et al. 2024): mLSTM is a
+linear-attention-like cell with per-head matrix memory C ∈ R^{dk×dv},
+normalizer n, causal conv on the q/k path, and gated output; sLSTM keeps
+per-unit scalar memories with block-diagonal recurrence and is inherently
+sequential (ratio 7:1 mLSTM:sLSTM in the 1.3b config, so the sequential
+part is ~2% of FLOPs).
+
+Deviation recorded in DESIGN.md: the exponential input gate is replaced by
+a sigmoid gate, which removes the running-max stabilizer and makes the
+chunked parallel training form (same SSD algebra as Mamba2, with an extra
+normalizer channel) numerically safe in bf16/f32.  Memory structure,
+gating topology and normalizer semantics are unchanged.
+
+Training lowers the chunked form (matmul-dominant); decode carries
+O(1) recurrent state per layer — xlstm-1.3b's ``long_500k`` eligibility.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, XLSTMConfig
+from .layers import dense_init
+from .ssm import _causal_conv
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig):
+    x: XLSTMConfig = cfg.xlstm
+    d_inner = int(x.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = d_inner // H
+    return x, d_inner, H, dh
+
+
+def init_mlstm(cfg: ModelConfig, key, dtype) -> Params:
+    x, d_inner, H, dh = _mlstm_dims(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    scale = (1.0 / dh) ** 0.5
+    return {
+        "w_up": dense_init(k1, cfg.d_model, 2 * d_inner, dtype),
+        "conv": 0.1 * jax.random.normal(k2, (x.conv_width, d_inner), dtype),
+        # blocklinear q/k/v: block-diagonal per head (xLSTM paper §mLSTM)
+        "w_q": scale * jax.random.normal(k3, (H, dh, dh), dtype),
+        "w_k": scale * jax.random.normal(k4, (H, dh, dh), dtype),
+        "w_v": scale * jax.random.normal(k5, (H, dh, dh), dtype),
+        "w_gates": dense_init(k6, d_inner, 2 * H, dtype),   # (i, f) per head
+        "gate_bias": jnp.concatenate([
+            jnp.zeros((H,)), 3.0 * jnp.ones((H,))           # forget bias -> ~1
+        ]).astype(jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype=dtype),
+        "w_down": dense_init(jax.random.fold_in(key, 7), d_inner,
+                             cfg.d_model, dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int):
+    """Chunked parallel mLSTM.  q,k,v: (B, L, H, dh); gates: (B, L, H).
+
+    Weight(t,s) = exp(F_t - F_s + log i_s), F = cumsum(log f).  Identical
+    algebra to the SSD chunk decomposition; the normalizer n_t·q_t comes
+    from an appended ones-channel on v.
+    """
+    B, L, H, dh = q.shape
+    c = min(chunk, L)
+    Lp = -(-L // c) * c
+    if Lp != L:
+        pad3 = ((0, 0), (0, Lp - L), (0, 0), (0, 0))
+        q = jnp.pad(q, pad3)
+        k = jnp.pad(k, pad3)
+        v = jnp.pad(v, pad3)
+        log_f = jnp.pad(log_f, ((0, 0), (0, Lp - L), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, Lp - L), (0, 0)),
+                        constant_values=-1e30)   # pad tokens contribute 0
+    nc = Lp // c
+    shp = (B, nc, c, H)
+    qc = q.reshape(B, nc, c, H, dh).astype(jnp.float32)
+    kc = k.reshape(B, nc, c, H, dh).astype(jnp.float32)
+    vc = jnp.concatenate(
+        [v.astype(jnp.float32),
+         jnp.ones((*v.shape[:3], 1), jnp.float32)], -1
+    ).reshape(B, nc, c, H, dh + 1)
+    lf = log_f.reshape(shp).astype(jnp.float32)
+    li = log_i.reshape(shp).astype(jnp.float32)
+
+    F = jnp.cumsum(lf, axis=2)                         # (B, nc, c, H)
+    # intra-chunk: M[t,s] = exp(F_t - F_s + li_s), s<=t
+    seg = F[:, :, :, None, :] - F[:, :, None, :, :] + li[:, :, None, :, :]
+    tril = jnp.tril(jnp.ones((c, c), bool))
+    M = jnp.where(tril[None, None, :, :, None], jnp.exp(seg), 0.0)
+    S = jnp.einsum("bnthd,bnshd->bntsh", qc, kc) / (dh ** 0.5)
+    y_intra = jnp.einsum("bntsh,bntsh,bnshe->bnthe", S, M, vc)
+
+    # inter-chunk: state C (dk, dv+1); in-weights exp(F_c - F_s + li_s)
+    w_in = jnp.exp(F[:, :, -1:, :] - F + li)           # (B, nc, c, H)
+    chunk_state = jnp.einsum("bnsh,bnshd,bnshe->bnhde", w_in, kc, vc)
+    chunk_decay = jnp.exp(F[:, :, -1, :])              # (B, nc, H)
+
+    def carry(Cst, inp):
+        st, dec = inp
+        return Cst * dec[..., None, None] + st, Cst
+    C0 = jnp.zeros((B, H, dh, dh + 1), jnp.float32)
+    _, C_in = jax.lax.scan(
+        carry, C0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    C_in = jnp.moveaxis(C_in, 0, 1)                    # (B, nc, H, dh, dv+1)
+    y_state = jnp.einsum("bnthd,bnhde,bnth->bnthe", qc, C_in,
+                         jnp.exp(F)) / (dh ** 0.5)
+    y = (y_intra + y_state).reshape(B, Lp, H, dh + 1)[:, :L]
+    num, den = y[..., :dh], y[..., dh]
+    return num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+
+def apply_mlstm(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    xcfg, d_inner, H, dh = _mlstm_dims(cfg)
+    B, S, D = x.shape
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_out, new_conv = _causal_conv(
+        xm, p["conv"], None if state is None else state["conv"]
+    )
+    conv_h = conv_out.reshape(B, S, H, dh)
+    xm_h = xm.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", conv_h, p["w_q"])
+    k = jnp.einsum("bshd,hde->bshe", conv_h, p["w_k"])
+    v = jnp.einsum("bshd,hde->bshe", xm_h, p["w_v"])
+    gates = jnp.einsum("bse,eg->bsg", conv_out, p["w_gates"]).astype(
+        jnp.float32) + p["gate_bias"]
+    log_i = jax.nn.log_sigmoid(gates[..., :H])
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+
+    if state is None:
+        h = _mlstm_chunked(q, k, v, log_f, log_i, xcfg.chunk)
+        new_state = None
+    else:
+        # recurrent decode: C (B,H,dh,dh+1), step-by-step
+        def step(carry, inp):
+            C = carry
+            q_t, k_t, v_t, lf_t, li_t = inp
+            v_ext = jnp.concatenate(
+                [v_t, jnp.ones((*v_t.shape[:-1], 1), v_t.dtype)], -1
+            )
+            C = C * jnp.exp(lf_t)[..., None, None] + jnp.exp(li_t)[
+                ..., None, None] * (k_t[..., :, None] * v_ext[..., None, :])
+            y = jnp.einsum("bhd,bhde->bhe", q_t, C) / (dh ** 0.5)
+            num, den = y[..., :dh], y[..., dh]
+            return C, num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in
+                   (q, k, v, log_f, log_i))
+        C_new, hs = jax.lax.scan(step, state["C"].astype(jnp.float32), xs)
+        h = jnp.moveaxis(hs, 0, 1)
+        new_state = {"C": C_new, "conv": new_conv}
+
+    h = h.reshape(B, S, d_inner)
+    hf = h * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    return jnp.einsum("bse,ed->bsd", hf.astype(x.dtype), p["w_down"]), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    xcfg, d_inner, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh + 1), jnp.float32),
+        "conv": jnp.zeros((batch, xcfg.conv_width - 1, d_inner), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ModelConfig, key, dtype) -> Params:
+    x: XLSTMConfig = cfg.xlstm
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    d_up = int(x.slstm_proj_factor * D)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_x": dense_init(k1, D, 4 * D, dtype),          # i, f, z, o
+        "r_h": 0.1 * jax.random.normal(k2, (H, dh, 4 * dh), dtype),
+        "bias": jnp.zeros((4 * D,), dtype=jnp.float32),
+        "norm_scale": jnp.ones((D,), dtype=dtype),
+        "w_up_gate": dense_init(k3, D, d_up, dtype),
+        "w_up": dense_init(jax.random.fold_in(key, 9), D, d_up, dtype),
+        "w_down": dense_init(k4, d_up, D, dtype),
+    }
+
+
+def _slstm_step(p, H, dh, carry, gx_t):
+    """One recurrent step. carry: (c, n, h) each (B, H, dh)."""
+    c, n, h = carry
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r_h"].astype(jnp.float32))
+    g = gx_t + rec                                   # (B, H, 4*dh)
+    i = jax.nn.sigmoid(g[..., :dh])
+    f = jax.nn.sigmoid(g[..., dh:2 * dh] + 2.0)
+    z = jnp.tanh(g[..., 2 * dh:3 * dh])
+    o = jax.nn.sigmoid(g[..., 3 * dh:])
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h), h
+
+
+def apply_slstm(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    *,
+    state: Optional[Params] = None,
+    cost_proxy: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """sLSTM layer.  ``cost_proxy=True`` replaces the sequential scan with a
+    cost-equivalent dense computation (same matmul shapes × S) used ONLY by
+    the dry-run FLOP coster — never for real outputs."""
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    B, S, _ = x.shape
+    gx = (jnp.einsum("bsd,de->bse", x, p["w_x"]).astype(jnp.float32)
+          + p["bias"])
+    gx = gx.reshape(B, S, H, 4 * dh)
+
+    if cost_proxy:
+        # same per-step recurrent matmul cost, parallel shape
+        rec = jnp.einsum("bshd,hde->bshe", gx[..., :dh], p["r_h"].astype(
+            jnp.float32))
+        g = gx + rec
+        h_seq = jnp.tanh(g[..., :dh])
+        new_state = None
+    else:
+        if state is None:
+            c0 = jnp.zeros((B, H, dh), jnp.float32)
+            carry0 = (c0, c0, c0)
+        else:
+            carry0 = (state["c"], state["n"], state["h"])
+        step = lambda carry, g_t: _slstm_step(p, H, dh, carry, g_t)
+        (c, n, h), hs = jax.lax.scan(step, carry0, jnp.moveaxis(gx, 1, 0))
+        h_seq = jnp.moveaxis(hs, 0, 1)                 # (B, S, H, dh)
+        new_state = {"c": c, "n": n, "h": h}
+
+    h = h_seq.reshape(B, S, D)
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(ms + 1e-6) * p["norm_scale"].astype(jnp.float32)
+         ).astype(x.dtype)
+    up = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["w_up_gate"])) \
+        * jnp.einsum("bsd,df->bsf", h, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", up, p["w_down"]), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z}

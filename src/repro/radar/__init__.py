@@ -1,0 +1,14 @@
+"""Radar science workflows over the DataTree (paper §5 case studies)."""
+
+from . import geometry
+from .qpe import QPEResult, qpe_from_session, qpe_from_volumes
+from .qvp import QVPResult, qvp_from_session, qvp_from_volumes
+from .timeseries import (PointSeries, point_series_from_session,
+                         point_series_from_volumes)
+
+__all__ = [
+    "geometry",
+    "QPEResult", "qpe_from_session", "qpe_from_volumes",
+    "QVPResult", "qvp_from_session", "qvp_from_volumes",
+    "PointSeries", "point_series_from_session", "point_series_from_volumes",
+]

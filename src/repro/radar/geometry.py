@@ -1,0 +1,44 @@
+"""Radar beam geometry (4/3-earth model) shared by science workflows."""
+
+from __future__ import annotations
+
+import numpy as np
+
+EARTH_RADIUS_M = 6371000.0
+KE = 4.0 / 3.0
+
+
+def beam_height_m(range_m, elev_deg: float, alt_m: float = 0.0):
+    """Beam centre height above radar level (Doviak & Zrnić eq. 2.28b)."""
+    el = np.deg2rad(elev_deg)
+    r = np.asarray(range_m, dtype=np.float64)
+    return (
+        np.sqrt(r**2 + (KE * EARTH_RADIUS_M) ** 2
+                + 2.0 * r * KE * EARTH_RADIUS_M * np.sin(el))
+        - KE * EARTH_RADIUS_M
+        + alt_m
+    )
+
+
+def ground_range_m(range_m, elev_deg: float):
+    """Great-circle distance along the surface to each gate."""
+    el = np.deg2rad(elev_deg)
+    r = np.asarray(range_m, dtype=np.float64)
+    h = beam_height_m(r, elev_deg)
+    return KE * EARTH_RADIUS_M * np.arcsin(
+        r * np.cos(el) / (KE * EARTH_RADIUS_M + h)
+    )
+
+
+def gate_latlon(site_lat: float, site_lon: float, az_deg, range_m,
+                elev_deg: float):
+    """Approximate (lat, lon) of gates via equirectangular projection."""
+    s = np.asarray(ground_range_m(range_m, elev_deg))
+    az = np.deg2rad(np.asarray(az_deg))
+    dn = s * np.cos(az)
+    de = s * np.sin(az)
+    lat = site_lat + np.rad2deg(dn / EARTH_RADIUS_M)
+    lon = site_lon + np.rad2deg(
+        de / (EARTH_RADIUS_M * np.cos(np.deg2rad(site_lat)))
+    )
+    return lat, lon

@@ -1,0 +1,98 @@
+"""Quasi-Vertical Profiles from a Radar DataTree (paper §5.1).
+
+A QVP (Ryzhkov et al. 2016) composites azimuthal means of a high-elevation
+sweep over time, giving a time–height view of storm microphysics.  Against
+the DataTree store this is: one chunk-aligned lazy read of exactly the
+(sweep, moment[, quality]) arrays requested, then one fused reduction —
+no per-file decoding, which is where the paper's ~100× comes from.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..kernels import ops
+from ..store import Session
+from . import geometry
+
+
+@dataclass
+class QVPResult:
+    profile: np.ndarray          # (time, range) azimuthal means
+    times: np.ndarray            # (time,) epoch seconds
+    height_m: np.ndarray         # (range,) beam height AGL
+    moment: str
+    elevation_deg: float
+
+    @property
+    def shape(self):
+        return self.profile.shape
+
+
+def qvp_from_session(
+    session: Session,
+    *,
+    vcp: str,
+    sweep: int,
+    moment: str = "DBZH",
+    quality_moment: Optional[str] = "RHOHV",
+    quality_min: float = 0.85,
+    time_slice: slice = slice(None),
+    mode: str = "auto",
+) -> QVPResult:
+    """Compute a QVP straight off the transactional store."""
+    base = f"{vcp}/sweep_{sweep}"
+    field_arr = session.array(f"{base}/{moment}")
+    times = session.array(f"{vcp}/time")[time_slice]
+    field = field_arr[time_slice]                     # chunk-aligned read
+    quality = None
+    if quality_moment is not None and session.has_array(
+        f"{base}/{quality_moment}"
+    ):
+        quality = session.array(f"{base}/{quality_moment}")[time_slice]
+
+    profile = np.asarray(
+        ops.qvp_reduce(field, quality, quality_min=quality_min, mode=mode)
+    )
+    rng_m = session.array(f"{base}/range").read()
+    elev = float(session.group_attrs(base)["fixed_angle"])
+    height = geometry.beam_height_m(rng_m, elev)
+    return QVPResult(profile, np.asarray(times), np.asarray(height), moment,
+                     elev)
+
+
+def qvp_from_volumes(
+    volumes,
+    *,
+    sweep: int,
+    moment: str = "DBZH",
+    quality_moment: Optional[str] = "RHOHV",
+    quality_min: float = 0.85,
+) -> QVPResult:
+    """File-based baseline: the Py-ART-style workflow the paper compares
+    against.  Each decoded volume is processed scan-by-scan with plain
+    numpy — including all the moments that were decoded just to be thrown
+    away, as happens with real Level-II files."""
+    profiles, times = [], []
+    elev, rng_m = 0.0, None
+    for vol in volumes:
+        sw = vol["sweeps"][sweep]
+        field = sw["moments"][moment]
+        valid = np.isfinite(field)
+        if quality_moment is not None and quality_moment in sw["moments"]:
+            q = sw["moments"][quality_moment]
+            valid &= np.isfinite(q) & (q >= quality_min)
+        x = np.where(valid, field, 0.0)
+        count = valid.sum(axis=0).astype(np.float32)
+        mean = x.sum(axis=0) / np.maximum(count, 1.0)
+        mean = np.where(count >= 0.1 * field.shape[0], mean, np.nan)
+        profiles.append(mean.astype(np.float32))
+        times.append(vol["time"])
+        elev = sw["elevation"]
+        rng_m = sw["range"]
+    height = geometry.beam_height_m(rng_m, elev)
+    return QVPResult(np.stack(profiles), np.asarray(times),
+                     np.asarray(height), moment, elev)

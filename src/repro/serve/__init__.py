@@ -1,0 +1,3 @@
+from .engine import Completion, Engine, Request, decode, prefill, sample
+
+__all__ = ["Completion", "Engine", "Request", "decode", "prefill", "sample"]

@@ -1,0 +1,174 @@
+"""Serving engine: prefill + decode over explicit caches, batched requests.
+
+Two layers:
+
+* **Steps** — pure jit-able functions.  ``prefill`` runs the prompt through
+  the stack writing KV/latent/SSM caches (chunkable for long prompts);
+  ``decode`` advances one token.  Both are thin views over
+  ``model.decode_step`` (which handles S >= 1), so prefill/decode
+  consistency is structural, not coincidental.
+* **Engine** — a minimal batched scheduler: fixed batch slots, greedy or
+  temperature sampling, per-slot stop handling.  Requests are grouped into
+  aligned batches (shared cache_index), the standard static-batching mode;
+  continuous batching drops in by making ``cache_index`` per-slot and
+  masking — noted in DESIGN.md as future work, not needed for the paper's
+  workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ParallelConfig
+from ..models import model as M
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# pure steps
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, pcfg: ParallelConfig, params: Params,
+            caches: List[Params], tokens: jax.Array,
+            *, attn_impl: str = "blocked",
+            chunk: Optional[int] = None) -> Tuple[jax.Array, List[Params]]:
+    """Prompt -> (last-position logits, filled caches).
+
+    ``chunk`` bounds peak activation memory for very long prompts by
+    running the prompt through in ``chunk``-token slices (each slice
+    attends to all cached earlier slices) — chunked prefill.
+    """
+    S = tokens.shape[-1]
+    if chunk is None or chunk >= S:
+        logits, caches = M.decode_step(cfg, pcfg, params, caches, tokens,
+                                       jnp.int32(0), attn_impl=attn_impl)
+        return _last_pos(cfg, logits), caches
+    logits = None
+    for start in range(0, S, chunk):
+        piece = tokens[..., start:start + chunk]
+        logits, caches = M.decode_step(cfg, pcfg, params, caches, piece,
+                                       jnp.int32(start), attn_impl=attn_impl)
+    return _last_pos(cfg, logits), caches
+
+
+def decode(cfg: ModelConfig, pcfg: ParallelConfig, params: Params,
+           caches: List[Params], tokens: jax.Array, cache_index: jax.Array,
+           *, attn_impl: str = "blocked") -> Tuple[jax.Array, List[Params]]:
+    """One new token per sequence -> (vocab logits, updated caches)."""
+    logits, caches = M.decode_step(cfg, pcfg, params, caches, tokens,
+                                   cache_index, attn_impl=attn_impl)
+    return _last_pos(cfg, logits), caches
+
+
+def _last_pos(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    # (B, S, V) -> (B, V);   (B, K, S, V) -> (B, K, V)
+    return logits[..., -1, :]
+
+
+def sample(logits: jax.Array, key, *, temperature: float = 0.0) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# batched engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    prompt: np.ndarray               # (S,) i32 or (K, S) for audio archs
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+
+
+@dataclass
+class Completion:
+    tokens: np.ndarray               # generated ids, (T,) or (K, T)
+    prompt_len: int
+    finished: str                    # "eos" | "length"
+
+
+class Engine:
+    """Aligned-batch serving: pad prompts to a shared length, prefill once,
+    decode in lockstep; per-slot EOS masking."""
+
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, params: Params,
+                 *, max_len: int = 4096, attn_impl: str = "blocked",
+                 donate_caches: bool = True):
+        self.cfg, self.pcfg, self.params = cfg, pcfg, params
+        self.max_len = max_len
+        self.attn_impl = attn_impl
+
+        def _prefill(params, caches, tokens):
+            return prefill(cfg, pcfg, params, caches, tokens,
+                           attn_impl=attn_impl)
+
+        def _decode(params, caches, tokens, idx):
+            return decode(cfg, pcfg, params, caches, tokens, idx,
+                          attn_impl=attn_impl)
+
+        donate = (1,) if donate_caches else ()
+        self._prefill = jax.jit(_prefill, donate_argnums=donate)
+        self._decode = jax.jit(_decode, donate_argnums=donate)
+
+    def generate(self, requests: List[Request], seed: int = 0
+                 ) -> List[Completion]:
+        cfg = self.cfg
+        B = len(requests)
+        if cfg.n_codebooks > 1:
+            prompts = [np.asarray(r.prompt, np.int32) for r in requests]
+            plen = max(p.shape[-1] for p in prompts)
+            toks = np.zeros((B, cfg.n_codebooks, plen), np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, :, plen - p.shape[-1]:] = p
+        else:
+            prompts = [np.asarray(r.prompt, np.int32) for r in requests]
+            plen = max(p.shape[-1] for p in prompts)
+            toks = np.zeros((B, plen), np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, plen - p.shape[-1]:] = p        # left-pad
+
+        caches = M.init_caches(cfg, self.pcfg, batch=B, max_len=self.max_len)
+        logits, caches = self._prefill(self.params, caches,
+                                       jnp.asarray(toks))
+        key = jax.random.key(seed)
+        max_new = max(r.max_new_tokens for r in requests)
+        done = np.zeros(B, bool)
+        outs: List[List] = [[] for _ in range(B)]
+        finished = ["length"] * B
+        idx = plen
+        for t in range(max_new):
+            key, sub = jax.random.split(key)
+            temp = max(r.temperature for r in requests)
+            next_tok = sample(logits, sub, temperature=temp)  # (B,) | (B,K)
+            nt = np.asarray(next_tok)
+            for i, r in enumerate(requests):
+                if done[i] or t >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                tok_i = nt[i]
+                outs[i].append(tok_i)
+                if r.eos_id is not None and np.all(tok_i == r.eos_id):
+                    done[i] = True
+                    finished[i] = "eos"
+            if done.all() or idx + 1 >= self.max_len:
+                break
+            step_tok = (next_tok[..., None] if cfg.n_codebooks > 1
+                        else next_tok[:, None])
+            logits, caches = self._decode(self.params, caches, step_tok,
+                                          jnp.int32(idx))
+            idx += 1
+        return [
+            Completion(np.stack(o, axis=-1) if o else np.zeros((0,), np.int32),
+                       prompt_len=plen, finished=f)
+            for o, f in zip(outs, finished)
+        ]

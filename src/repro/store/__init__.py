@@ -1,0 +1,21 @@
+"""Transactional, cloud-native chunked storage (Zarr + Icechunk analogue)."""
+
+from .chunks import ChunkGrid, content_hash, decode_chunk, encode_chunk
+from .icechunk import ConflictError, NotFound, Repository, Session, Transaction
+from .object_store import ObjectStore
+from .zarrlite import Array, ArrayMeta
+
+__all__ = [
+    "Array",
+    "ArrayMeta",
+    "ChunkGrid",
+    "ConflictError",
+    "NotFound",
+    "ObjectStore",
+    "Repository",
+    "Session",
+    "Transaction",
+    "content_hash",
+    "decode_chunk",
+    "encode_chunk",
+]

@@ -1,0 +1,100 @@
+"""Chunk-grid math, codecs, and content addressing.
+
+Zarr's core idea — fixed chunk grids over n-d arrays, each chunk an
+independently compressed object — is what aligns storage layout with access
+patterns.  We reuse the same idea twice: once for the radar archive (time ×
+azimuth × range chunks sized to match Pallas BlockSpec tiles) and once for
+model checkpoints (parameter shards as chunks).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass
+from typing import Iterator, Sequence, Tuple
+
+import numpy as np
+import zstandard
+
+_CCTX = zstandard.ZstdCompressor(level=3)
+_DCTX = zstandard.ZstdDecompressor()
+
+
+def compress(raw: bytes) -> bytes:
+    return _CCTX.compress(raw)
+
+
+def decompress(blob: bytes) -> bytes:
+    return _DCTX.decompress(blob)
+
+
+def content_hash(blob: bytes) -> str:
+    """Content address: sha256 truncated to 128 bits (hex)."""
+    return hashlib.sha256(blob).hexdigest()[:32]
+
+
+@dataclass(frozen=True)
+class ChunkGrid:
+    """Regular chunk grid over an n-d array (last chunks may be partial)."""
+
+    shape: Tuple[int, ...]
+    chunks: Tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.chunks):
+            raise ValueError("shape/chunks rank mismatch")
+        if any(c <= 0 for c in self.chunks):
+            raise ValueError("chunk sizes must be positive")
+
+    @property
+    def grid_shape(self) -> Tuple[int, ...]:
+        return tuple(
+            max(1, math.ceil(s / c)) for s, c in zip(self.shape, self.chunks)
+        )
+
+    def n_chunks(self) -> int:
+        return int(np.prod(self.grid_shape))
+
+    def chunk_ids(self) -> Iterator[Tuple[int, ...]]:
+        yield from np.ndindex(*self.grid_shape)
+
+    def chunk_slices(self, cid: Sequence[int]) -> Tuple[slice, ...]:
+        return tuple(
+            slice(i * c, min((i + 1) * c, s))
+            for i, c, s in zip(cid, self.chunks, self.shape)
+        )
+
+    def chunk_shape(self, cid: Sequence[int]) -> Tuple[int, ...]:
+        return tuple(sl.stop - sl.start for sl in self.chunk_slices(cid))
+
+    def chunks_for_selection(
+        self, selection: Sequence[slice]
+    ) -> Iterator[Tuple[int, ...]]:
+        """Chunk ids intersecting an orthogonal slice selection.
+
+        This is the partial-read primitive behind the paper's speedups:
+        a QVP touching one sweep/one variable reads only the chunks under
+        its (time, azimuth, range) selection instead of decoding whole
+        volume files.
+        """
+        ranges = []
+        for sl, c, s in zip(selection, self.chunks, self.shape):
+            start, stop, step = sl.indices(s)
+            if step != 1:
+                raise NotImplementedError("strided chunk selection")
+            if stop <= start:
+                return
+            ranges.append(range(start // c, (stop - 1) // c + 1))
+        for offsets in np.ndindex(*[len(r) for r in ranges]):
+            yield tuple(r[o] for r, o in zip(ranges, offsets))
+
+
+def encode_chunk(arr: np.ndarray) -> bytes:
+    """Serialize one chunk: C-order raw bytes, zstd-compressed."""
+    return compress(np.ascontiguousarray(arr).tobytes())
+
+
+def decode_chunk(blob: bytes, shape: Tuple[int, ...], dtype) -> np.ndarray:
+    raw = decompress(blob)
+    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()

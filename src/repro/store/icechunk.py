@@ -1,0 +1,456 @@
+"""Transactional, versioned storage engine over the object store.
+
+Implements the Icechunk design the paper relies on (§4, §5.4), adapted to
+run against any :class:`~repro.store.object_store.ObjectStore`:
+
+* **Immutable, content-addressed chunks** — every chunk payload is stored
+  once under its sha256 address.  Identical data dedups; nothing is ever
+  overwritten in place.
+* **Per-array manifests** — each array's ``chunk id → content hash`` map is
+  itself a content-addressed object, so a commit that touches one array
+  re-writes one manifest, not the archive.
+* **Snapshots** — a snapshot document references group/array metadata and
+  manifest hashes, plus its parent snapshot.  Snapshot ids are content
+  hashes of the canonical document: the same data produces the same id,
+  which is what makes the paper's "bitwise-identical re-execution" claim
+  checkable.
+* **Atomic commits** — a branch ref flips from parent to child via
+  compare-and-swap.  Staged chunks written before the flip are unreachable
+  until the flip succeeds (write-ahead behaviour); a crash mid-transaction
+  leaves the previous snapshot fully intact (atomicity) and at most some
+  orphaned chunks for GC.
+* **Conflict detection & rebase** — a commit racing another writer fails
+  its CAS, reloads the new head, and either rebases (disjoint array paths)
+  or raises :class:`ConflictError`.
+* **Branches, tags, history, rollback, time-travel reads.**
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import orjson
+
+from .chunks import content_hash
+from .object_store import ObjectStore
+from .zarrlite import Array, ArrayMeta, _chunk_key
+
+
+class ConflictError(RuntimeError):
+    """Concurrent commit touched the same arrays and cannot be rebased."""
+
+
+class NotFound(KeyError):
+    pass
+
+
+def _dumps(doc: Any) -> bytes:
+    return orjson.dumps(doc, option=orjson.OPT_SORT_KEYS)
+
+
+def _loads(blob: bytes) -> Any:
+    return orjson.loads(blob)
+
+
+_EMPTY_SNAPSHOT_ID = "root"
+
+
+@dataclass
+class CommitInfo:
+    snapshot_id: str
+    parent_id: Optional[str]
+    message: str
+    written_at: float
+    touched: List[str]
+
+
+class Repository:
+    """A versioned archive: the durable half of a Radar DataTree."""
+
+    def __init__(self, store: ObjectStore):
+        self.store = store
+
+    # -- creation ------------------------------------------------------
+    @classmethod
+    def create(cls, store_or_path, *, branch: str = "main") -> "Repository":
+        store = (
+            store_or_path
+            if isinstance(store_or_path, ObjectStore)
+            else ObjectStore(store_or_path)
+        )
+        repo = cls(store)
+        empty = {
+            "parent": None,
+            "message": "repository created",
+            "groups": {"": {}},
+            "arrays": {},
+            "manifests": {},
+        }
+        sid = repo._write_snapshot(empty)
+        if not store.compare_and_swap(
+            repo._ref_key(branch), None, _dumps({"snapshot": sid})
+        ):
+            raise RuntimeError(f"branch {branch!r} already exists")
+        return repo
+
+    @classmethod
+    def open(cls, store_or_path) -> "Repository":
+        store = (
+            store_or_path
+            if isinstance(store_or_path, ObjectStore)
+            else ObjectStore(store_or_path)
+        )
+        return cls(store)
+
+    # -- refs ------------------------------------------------------------
+    @staticmethod
+    def _ref_key(branch: str) -> str:
+        return f"refs/branch.{branch}.json"
+
+    @staticmethod
+    def _tag_key(tag: str) -> str:
+        return f"refs/tag.{tag}.json"
+
+    def branch_head(self, branch: str = "main") -> str:
+        try:
+            return _loads(self.store.get(self._ref_key(branch)))["snapshot"]
+        except KeyError:
+            raise NotFound(f"branch {branch!r}") from None
+
+    def branches(self) -> List[str]:
+        out = []
+        for key in self.store.list("refs/"):
+            name = key.rsplit("/", 1)[-1]
+            if name.startswith("branch."):
+                out.append(name[len("branch."):-len(".json")])
+        return sorted(out)
+
+    def create_branch(self, name: str, snapshot_id: str) -> None:
+        if not self.store.compare_and_swap(
+            self._ref_key(name), None, _dumps({"snapshot": snapshot_id})
+        ):
+            raise RuntimeError(f"branch {name!r} already exists")
+
+    def tag(self, name: str, snapshot_id: str) -> None:
+        if not self.store.compare_and_swap(
+            self._tag_key(name), None, _dumps({"snapshot": snapshot_id})
+        ):
+            raise RuntimeError(f"tag {name!r} already exists")
+
+    def tag_head(self, name: str) -> str:
+        try:
+            return _loads(self.store.get(self._tag_key(name)))["snapshot"]
+        except KeyError:
+            raise NotFound(f"tag {name!r}") from None
+
+    def rollback(self, branch: str, snapshot_id: str) -> None:
+        """Reset a branch head to an earlier snapshot (paper §5.4)."""
+        current = self.branch_head(branch)
+        # verify target is an ancestor (or any valid snapshot) — must exist:
+        self._read_snapshot(snapshot_id)
+        ok = self.store.compare_and_swap(
+            self._ref_key(branch),
+            _dumps({"snapshot": current}),
+            _dumps({"snapshot": snapshot_id}),
+        )
+        if not ok:
+            raise ConflictError("branch moved during rollback")
+
+    # -- snapshots ---------------------------------------------------------
+    def _write_snapshot(self, doc: Dict[str, Any]) -> str:
+        blob = _dumps(doc)
+        sid = content_hash(blob)
+        self.store.put(f"snapshots/{sid}.json", blob, if_not_exists=True)
+        return sid
+
+    def _read_snapshot(self, sid: str) -> Dict[str, Any]:
+        try:
+            return _loads(self.store.get(f"snapshots/{sid}.json"))
+        except KeyError:
+            raise NotFound(f"snapshot {sid}") from None
+
+    def history(self, branch: str = "main") -> Iterator[CommitInfo]:
+        sid: Optional[str] = self.branch_head(branch)
+        while sid is not None:
+            doc = self._read_snapshot(sid)
+            yield CommitInfo(
+                snapshot_id=sid,
+                parent_id=doc.get("parent"),
+                message=doc.get("message", ""),
+                written_at=doc.get("written_at", 0.0),
+                touched=sorted(doc.get("touched", [])),
+            )
+            sid = doc.get("parent")
+
+    # -- sessions ----------------------------------------------------------
+    def readonly_session(
+        self, *, branch: str = "main", snapshot_id: Optional[str] = None,
+        tag: Optional[str] = None,
+    ) -> "Session":
+        if snapshot_id is None:
+            snapshot_id = self.tag_head(tag) if tag else self.branch_head(branch)
+        return Session(self, snapshot_id, writable=False)
+
+    def writable_session(self, branch: str = "main") -> "Transaction":
+        head = self.branch_head(branch)
+        return Transaction(self, branch, head)
+
+    # -- garbage collection --------------------------------------------
+    def gc(self) -> Dict[str, int]:
+        """Mark-and-sweep unreferenced chunks/manifests/snapshots."""
+        live_snaps: set = set()
+        stack = []
+        for key in self.store.list("refs/"):
+            stack.append(_loads(self.store.get(key))["snapshot"])
+        while stack:
+            sid = stack.pop()
+            if sid in live_snaps:
+                continue
+            live_snaps.add(sid)
+            parent = self._read_snapshot(sid).get("parent")
+            if parent:
+                stack.append(parent)
+        live_manifests: set = set()
+        live_chunks: set = set()
+        for sid in live_snaps:
+            doc = self._read_snapshot(sid)
+            for mh in doc["manifests"].values():
+                live_manifests.add(mh)
+        for mh in live_manifests:
+            manifest = _loads(self.store.get(f"manifests/{mh}.json"))
+            live_chunks.update(manifest.values())
+        removed = {"snapshots": 0, "manifests": 0, "chunks": 0}
+        for key in list(self.store.list("snapshots/")):
+            if key.rsplit("/", 1)[-1][:-len(".json")] not in live_snaps:
+                self.store.delete(key)
+                removed["snapshots"] += 1
+        for key in list(self.store.list("manifests/")):
+            if key.rsplit("/", 1)[-1][:-len(".json")] not in live_manifests:
+                self.store.delete(key)
+                removed["manifests"] += 1
+        for key in list(self.store.list("chunks/")):
+            if key.rsplit("/", 1)[-1] not in live_chunks:
+                self.store.delete(key)
+                removed["chunks"] += 1
+        return removed
+
+
+class Session:
+    """Read view pinned to one snapshot (snapshot isolation)."""
+
+    def __init__(self, repo: Repository, snapshot_id: str, *, writable: bool):
+        self.repo = repo
+        self.snapshot_id = snapshot_id
+        self.writable = writable
+        self._doc = repo._read_snapshot(snapshot_id)
+        self._manifest_cache: Dict[str, Dict[str, str]] = {}
+
+    # -- structure -------------------------------------------------------
+    def list_groups(self) -> List[str]:
+        return sorted(self._doc["groups"])
+
+    def list_arrays(self, prefix: str = "") -> List[str]:
+        return sorted(p for p in self._doc["arrays"] if p.startswith(prefix))
+
+    def group_attrs(self, path: str) -> Dict[str, Any]:
+        try:
+            return self._doc["groups"][path]
+        except KeyError:
+            raise NotFound(f"group {path!r}") from None
+
+    def has_array(self, path: str) -> bool:
+        return path in self._doc["arrays"]
+
+    def array(self, path: str) -> Array:
+        try:
+            meta = ArrayMeta.from_doc(self._doc["arrays"][path])
+        except KeyError:
+            raise NotFound(f"array {path!r}") from None
+        return Array(self, path, meta)
+
+    # -- chunk plumbing (used by zarrlite.Array) -----------------------
+    def _manifest(self, array_path: str) -> Dict[str, str]:
+        if array_path not in self._manifest_cache:
+            mh = self._doc["manifests"].get(array_path)
+            if mh is None:
+                self._manifest_cache[array_path] = {}
+            else:
+                self._manifest_cache[array_path] = _loads(
+                    self.repo.store.get(f"manifests/{mh}.json")
+                )
+        return self._manifest_cache[array_path]
+
+    def chunk_ref(self, array_path: str, cid: Sequence[int]) -> Optional[str]:
+        return self._manifest(array_path).get(_chunk_key(tuple(cid)))
+
+    def get_blob(self, ref: str) -> bytes:
+        return self.repo.store.get(f"chunks/{ref}")
+
+    def stage_chunk(self, array_path: str, cid, blob: bytes) -> None:
+        raise PermissionError("read-only session")
+
+
+class Transaction(Session):
+    """Writable session: stages changes, commits atomically."""
+
+    def __init__(self, repo: Repository, branch: str, head: str):
+        super().__init__(repo, head, writable=True)
+        self.branch = branch
+        self._staged_chunks: Dict[str, Dict[str, str]] = {}  # path -> key -> hash
+        self._touched: set = set()
+        self._closed = False
+
+    # -- schema edits ------------------------------------------------------
+    def create_group(self, path: str, attrs: Optional[Dict[str, Any]] = None):
+        parts = path.strip("/").split("/") if path.strip("/") else []
+        # create intermediate groups implicitly; only *new* groups (or groups
+        # whose attrs change) count as touched for conflict detection —
+        # otherwise every transaction would conflict on the root group.
+        for i in range(len(parts) + 1):
+            p = "/".join(parts[:i])
+            if p not in self._doc["groups"]:
+                self._doc["groups"][p] = {}
+                self._touched.add(p)
+        if attrs:
+            self._doc["groups"][path.strip("/")].update(attrs)
+            self._touched.add(path.strip("/"))
+
+    def update_group_attrs(self, path: str, attrs: Dict[str, Any]) -> None:
+        self.create_group(path)
+        self._doc["groups"][path.strip("/")].update(attrs)
+
+    def create_array(
+        self,
+        path: str,
+        *,
+        shape: Sequence[int],
+        dtype: str,
+        chunks: Sequence[int],
+        attrs: Optional[Dict[str, Any]] = None,
+        fill_value: float = float("nan"),
+    ) -> Array:
+        path = path.strip("/")
+        parent = path.rsplit("/", 1)[0] if "/" in path else ""
+        self.create_group(parent)
+        import numpy as _np
+        if _np.isnan(fill_value) and not _np.issubdtype(_np.dtype(dtype), _np.floating):
+            fill_value = 0.0
+        meta = ArrayMeta(tuple(shape), dtype, tuple(chunks), dict(attrs or {}),
+                         fill_value)
+        self._doc["arrays"][path] = meta.to_doc()
+        self._touched.add(path)
+        return Array(self, path, meta)
+
+    def resize_array(self, path: str, new_shape: Sequence[int]) -> Array:
+        """Grow an array (e.g. append along time). Chunk grid is preserved."""
+        doc = self._doc["arrays"].get(path)
+        if doc is None:
+            raise NotFound(f"array {path!r}")
+        old = tuple(doc["shape"])
+        new = tuple(new_shape)
+        if len(old) != len(new) or any(n < o for n, o in zip(new, old)):
+            raise ValueError(f"resize must grow: {old} -> {new}")
+        doc["shape"] = list(new)
+        self._touched.add(path)
+        return self.array(path)
+
+    def delete_array(self, path: str) -> None:
+        self._doc["arrays"].pop(path, None)
+        self._doc["manifests"].pop(path, None)
+        self._staged_chunks.pop(path, None)
+        self._manifest_cache.pop(path, None)
+        self._touched.add(path)
+
+    # -- chunk staging -------------------------------------------------
+    def stage_chunk(self, array_path: str, cid, blob: bytes) -> None:
+        """Content-address and persist the chunk now; reference it at commit.
+
+        Writing payloads eagerly (before the ref flip) is the write-ahead
+        log: chunks are invisible until the commit CAS succeeds.
+        """
+        ref = content_hash(blob)
+        self.repo.store.put(f"chunks/{ref}", blob, if_not_exists=True)
+        self._staged_chunks.setdefault(array_path, {})[
+            _chunk_key(tuple(cid))
+        ] = ref
+        self._touched.add(array_path)
+
+    def chunk_ref(self, array_path: str, cid: Sequence[int]) -> Optional[str]:
+        staged = self._staged_chunks.get(array_path, {})
+        key = _chunk_key(tuple(cid))
+        if key in staged:
+            return staged[key]
+        return super().chunk_ref(array_path, cid)
+
+    # -- commit ----------------------------------------------------------
+    def commit(self, message: str, *, max_retries: int = 5) -> str:
+        if self._closed:
+            raise RuntimeError("transaction already committed/aborted")
+        for _attempt in range(max_retries):
+            new_doc = self._build_snapshot_doc(message)
+            sid = self.repo._write_snapshot(new_doc)
+            ok = self.repo.store.compare_and_swap(
+                self.repo._ref_key(self.branch),
+                _dumps({"snapshot": self.snapshot_id}),
+                _dumps({"snapshot": sid}),
+            )
+            if ok:
+                self._closed = True
+                return sid
+            # CAS failed: somebody committed under us.  Try to rebase.
+            new_head = self.repo.branch_head(self.branch)
+            head_doc = self.repo._read_snapshot(new_head)
+            their_touched = set(head_doc.get("touched", []))
+            # walk back to our parent collecting all touched paths
+            sid_walk = head_doc.get("parent")
+            while sid_walk is not None and sid_walk != self.snapshot_id:
+                d = self.repo._read_snapshot(sid_walk)
+                their_touched |= set(d.get("touched", []))
+                sid_walk = d.get("parent")
+            if sid_walk != self.snapshot_id or (their_touched & self._touched):
+                raise ConflictError(
+                    f"commit conflicts on {sorted(their_touched & self._touched)}"
+                )
+            # disjoint: rebase onto the new head and retry
+            self._rebase_onto(new_head, head_doc)
+        raise ConflictError("too many commit retries")
+
+    def abort(self) -> None:
+        self._closed = True
+        self._staged_chunks.clear()
+
+    # -- internals -------------------------------------------------------
+    def _build_snapshot_doc(self, message: str) -> Dict[str, Any]:
+        manifests = dict(self._doc["manifests"])
+        for array_path, staged in self._staged_chunks.items():
+            merged = dict(self._manifest(array_path))
+            merged.update(staged)
+            blob = _dumps(merged)
+            mh = content_hash(blob)
+            self.repo.store.put(f"manifests/{mh}.json", blob, if_not_exists=True)
+            manifests[array_path] = mh
+        return {
+            "parent": self.snapshot_id,
+            "message": message,
+            "written_at": time.time(),
+            "touched": sorted(self._touched),
+            "groups": self._doc["groups"],
+            "arrays": self._doc["arrays"],
+            "manifests": manifests,
+        }
+
+    def _rebase_onto(self, new_head: str, head_doc: Dict[str, Any]) -> None:
+        # adopt their groups/arrays/manifests for paths we did not touch
+        for coll in ("groups", "arrays", "manifests"):
+            theirs = head_doc[coll]
+            ours = self._doc[coll]
+            for path, val in theirs.items():
+                if path not in self._touched:
+                    ours[path] = val
+            for path in list(ours):
+                if path not in self._touched and path not in theirs:
+                    del ours[path]
+        self.snapshot_id = new_head
+        self._manifest_cache.clear()

@@ -1,0 +1,125 @@
+"""Filesystem-backed object store with the minimal cloud-object-store contract.
+
+The paper persists Radar DataTree archives to S3-compatible object storage.
+This module provides the same API surface the transactional layer needs —
+immutable puts, reads, listing, and *conditional atomic swaps* (the
+compare-and-set primitive modern object stores expose, e.g. GCS generation
+preconditions / S3 conditional writes) — backed by a local directory so the
+whole framework runs offline.  A real deployment swaps this class for a GCS
+or S3 client with the identical five methods.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Iterator, Optional
+
+
+class ObjectStore:
+    """Key/value blob store.  Keys are ``/``-separated paths."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- internals ---------------------------------------------------------
+    def _path(self, key: str) -> str:
+        if key.startswith("/") or ".." in key.split("/"):
+            raise ValueError(f"invalid object key: {key!r}")
+        return os.path.join(self.root, key)
+
+    # -- public API --------------------------------------------------------
+    def put(self, key: str, data: bytes, *, if_not_exists: bool = False) -> bool:
+        """Atomically write ``data`` under ``key``.
+
+        Writes to a temp file in the destination directory and renames, so a
+        crash mid-put never leaves a torn object (rename is atomic on POSIX
+        and object-store puts are atomic by contract).  With
+        ``if_not_exists`` the put is skipped when the key is already present
+        (content-addressed chunks are immutable — identical hash, identical
+        bytes — so skipping is both safe and an important dedup fast path).
+        Returns True if this call created the object.
+        """
+        path = self._path(key)
+        if if_not_exists and os.path.exists(path):
+            return False
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return True
+
+    def get(self, key: str) -> bytes:
+        path = self._path(key)
+        try:
+            with open(path, "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise KeyError(key) from None
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        base = self.root
+        start = os.path.join(base, prefix) if prefix else base
+        if not os.path.isdir(start):
+            # prefix may be a partial filename prefix; walk its parent
+            start = os.path.dirname(start) or base
+        for dirpath, _dirnames, filenames in os.walk(start):
+            for name in filenames:
+                if name.startswith(".tmp-"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, name), base)
+                key = rel.replace(os.sep, "/")
+                if key.startswith(prefix):
+                    yield key
+
+    def compare_and_swap(
+        self, key: str, expected: Optional[bytes], new: bytes
+    ) -> bool:
+        """Atomic conditional update of a (small) mutable object.
+
+        ``expected is None`` means "create only if absent".  This is the one
+        mutable primitive in the design — everything else is immutable — and
+        it is what makes commits atomic: the branch ref file flips from one
+        snapshot id to the next in a single rename guarded by a lock file.
+        Returns False (no change) when the precondition fails.
+        """
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        lock = path + ".lock"
+        # O_EXCL lock file: the loser of a race sees EEXIST and retries/fails.
+        try:
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        try:
+            current: Optional[bytes]
+            try:
+                with open(path, "rb") as f:
+                    current = f.read()
+            except FileNotFoundError:
+                current = None
+            if current != expected:
+                return False
+            tfd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), prefix=".tmp-")
+            with os.fdopen(tfd, "wb") as f:
+                f.write(new)
+            os.replace(tmp, path)
+            return True
+        finally:
+            os.close(fd)
+            os.unlink(lock)

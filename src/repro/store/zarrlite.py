@@ -1,0 +1,173 @@
+"""Zarr-like hierarchical array storage over a snapshot manifest.
+
+A *store session* exposes groups and arrays addressed by ``/``-paths.  Array
+metadata (shape, dtype, chunk grid, attrs) lives in the snapshot document;
+chunk payloads are content-addressed immutable objects.  Reads are lazy and
+chunk-granular; writes stage into an open :class:`~repro.store.icechunk.Transaction`.
+
+This module is deliberately storage-format-first: the Radar DataTree layer
+(:mod:`repro.core.datatree`) is a *view* over these primitives, exactly as
+``xarray.DataTree`` is a view over Zarr in the paper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .chunks import ChunkGrid, content_hash, decode_chunk, encode_chunk
+
+
+@dataclass
+class ArrayMeta:
+    shape: Tuple[int, ...]
+    dtype: str
+    chunks: Tuple[int, ...]
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    fill_value: float = float("nan")
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "chunks": list(self.chunks),
+            "attrs": self.attrs,
+            "fill_value": None if np.isnan(self.fill_value) else self.fill_value,
+        }
+
+    @staticmethod
+    def from_doc(doc: Dict[str, Any]) -> "ArrayMeta":
+        fv = doc.get("fill_value")
+        return ArrayMeta(
+            shape=tuple(doc["shape"]),
+            dtype=doc["dtype"],
+            chunks=tuple(doc["chunks"]),
+            attrs=dict(doc.get("attrs", {})),
+            fill_value=float("nan") if fv is None else float(fv),
+        )
+
+    @property
+    def grid(self) -> ChunkGrid:
+        return ChunkGrid(self.shape, self.chunks)
+
+
+def _chunk_key(cid: Sequence[int]) -> str:
+    return "c" + "/".join(str(i) for i in cid) if cid else "c0"
+
+
+class Array:
+    """Lazy chunked array bound to a snapshot (read) or transaction (write)."""
+
+    def __init__(self, session, path: str, meta: ArrayMeta):
+        self._session = session
+        self.path = path
+        self.meta = meta
+
+    # -- reads -------------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.meta.shape
+
+    @property
+    def dtype(self):
+        return np.dtype(self.meta.dtype)
+
+    @property
+    def attrs(self) -> Dict[str, Any]:
+        return self.meta.attrs
+
+    def __getitem__(self, selection) -> np.ndarray:
+        if not isinstance(selection, tuple):
+            selection = (selection,)
+        # normalize: ints become length-1 slices (squeezed at the end)
+        squeeze_axes = []
+        sels = []
+        for ax, s in enumerate(selection):
+            if isinstance(s, int):
+                if s < 0:
+                    s += self.meta.shape[ax]
+                sels.append(slice(s, s + 1))
+                squeeze_axes.append(ax)
+            else:
+                sels.append(s)
+        while len(sels) < len(self.meta.shape):
+            sels.append(slice(None))
+        bounds = [sl.indices(dim) for sl, dim in zip(sels, self.meta.shape)]
+        out_shape = tuple(max(0, b[1] - b[0]) for b in bounds)
+        out = np.full(out_shape, self.meta.fill_value, dtype=self.dtype)
+        grid = self.meta.grid
+        for cid in grid.chunks_for_selection(sels):
+            cslices = grid.chunk_slices(cid)
+            chunk = self._read_chunk(cid)
+            # intersection of chunk extent and request, in both frames
+            src, dst = [], []
+            for (cs, b) in zip(cslices, bounds):
+                lo = max(cs.start, b[0])
+                hi = min(cs.stop, b[1])
+                src.append(slice(lo - cs.start, hi - cs.start))
+                dst.append(slice(lo - b[0], hi - b[0]))
+            out[tuple(dst)] = chunk[tuple(src)]
+        if squeeze_axes:
+            out = np.squeeze(out, axis=tuple(squeeze_axes))
+        return out
+
+    def read(self) -> np.ndarray:
+        return self[tuple(slice(None) for _ in self.meta.shape)]
+
+    def _read_chunk(self, cid) -> np.ndarray:
+        """Read one chunk at its *actual* (possibly edge-clipped) extent.
+
+        Chunks are always persisted at the full chunk shape, padded with
+        ``fill_value`` at array edges — this keeps appends (resize + write)
+        valid without rewriting boundary chunks.
+        """
+        full = self._read_chunk_padded(cid)
+        actual = self.meta.grid.chunk_shape(cid)
+        return full[tuple(slice(0, s) for s in actual)]
+
+    def _read_chunk_padded(self, cid) -> np.ndarray:
+        ref = self._session.chunk_ref(self.path, cid)
+        if ref is None:
+            return np.full(self.meta.chunks, self.meta.fill_value, dtype=self.dtype)
+        blob = self._session.get_blob(ref)
+        return decode_chunk(blob, self.meta.chunks, self.dtype)
+
+    # -- writes (require an open transaction) ------------------------------
+    def __setitem__(self, selection, value) -> None:
+        if not isinstance(selection, tuple):
+            selection = (selection,)
+        sels = list(selection)
+        while len(sels) < len(self.meta.shape):
+            sels.append(slice(None))
+        sels = [
+            slice(s, s + 1) if isinstance(s, int) else s for s in sels
+        ]
+        bounds = [sl.indices(dim) for sl, dim in zip(sels, self.meta.shape)]
+        value = np.asarray(value, dtype=self.dtype)
+        req_shape = tuple(max(0, b[1] - b[0]) for b in bounds)
+        value = np.broadcast_to(value, req_shape)
+        grid = self.meta.grid
+        for cid in grid.chunks_for_selection(sels):
+            cslices = grid.chunk_slices(cid)
+            src, dst = [], []
+            full_cover = True
+            for (cs, b, full_c) in zip(cslices, bounds, self.meta.chunks):
+                lo = max(cs.start, b[0])
+                hi = min(cs.stop, b[1])
+                if lo > cs.start or (hi - lo) < full_c:
+                    full_cover = False
+                dst.append(slice(lo - cs.start, hi - cs.start))
+                src.append(slice(lo - b[0], hi - b[0]))
+            if full_cover:
+                # request covers the whole (full-shape) chunk: no read needed
+                chunk = np.ascontiguousarray(value[tuple(src)])
+            else:
+                # read-modify-write at full padded chunk shape
+                chunk = self._read_chunk_padded(cid)
+                chunk[tuple(dst)] = value[tuple(src)]
+            self._session.stage_chunk(self.path, cid, encode_chunk(chunk))
+
+    def write_full(self, value: np.ndarray) -> None:
+        self[tuple(slice(None) for _ in self.meta.shape)] = value

@@ -1,0 +1,10 @@
+from .checkpoint import CheckpointManager
+from .optimizer import AdamWConfig, OptState, cosine_schedule, make_adamw
+from .step import TrainState, init_train_state, make_train_step, \
+    train_state_specs
+
+__all__ = [
+    "AdamWConfig", "CheckpointManager", "OptState", "TrainState",
+    "cosine_schedule", "init_train_state", "make_adamw", "make_train_step",
+    "train_state_specs",
+]

@@ -1,0 +1,171 @@
+"""AdamW + LR schedules, global-norm clipping, quantized moment option.
+
+Self-contained (no optax in the container): the optimizer is a pair of
+pure functions ``init(params) -> state`` / ``update(grads, state, params,
+step) -> (new_params, new_state)`` so the whole update jits and shards
+with the same rules as the parameters.
+
+``opt_moment_dtype="int8"`` stores the second moment block-quantized
+(per-tensor absmax int8 with an fp32 scale) — the distributed-optimization
+memory trick; moments dequantize inside the fused update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ParallelConfig
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
+        t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant_schedule(lr_value: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.float32(lr_value)
+
+
+# ---------------------------------------------------------------------------
+# moment (de)quantization — block-wise absmax int8 (bitsandbytes-style);
+# the second moment is stored in sqrt domain to compress its dynamic range
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+def _quantize(x: jax.Array, *, sqrt_domain: bool = False
+              ) -> Dict[str, jax.Array]:
+    if sqrt_domain:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _QBLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    return {"q": jnp.round(blocks / scale).astype(jnp.int8),
+            "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(q: Dict[str, jax.Array], shape, *,
+                sqrt_domain: bool = False) -> jax.Array:
+    flat = (q["q"].astype(jnp.float32) * q["scale"]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    x = flat[:n].reshape(shape)
+    return x * x if sqrt_domain else x
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    schedule: str = "cosine"          # cosine|constant
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+def make_adamw(ocfg: AdamWConfig, pcfg: ParallelConfig):
+    """-> (init_fn, update_fn)."""
+    sched = (cosine_schedule(ocfg.peak_lr, ocfg.warmup_steps, ocfg.total_steps)
+             if ocfg.schedule == "cosine" else constant_schedule(ocfg.peak_lr))
+    mdt = pcfg.opt_moment_dtype
+
+    def _zero_moment(p):
+        if mdt == "int8":
+            n = 1
+            for s in p.shape:
+                n *= s
+            nb = -(-n // 256)
+            return {"q": jnp.zeros((nb, 256), jnp.int8),
+                    "scale": jnp.zeros((nb, 1), jnp.float32)}
+        return jnp.zeros(p.shape, jnp.dtype(mdt))
+
+    def init(params: Params) -> OptState:
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(_zero_moment, params),
+            nu=jax.tree.map(_zero_moment, params),
+        )
+
+    def _load(m, shape, *, second: bool = False):
+        if mdt == "int8":
+            return _dequantize(m, shape, sqrt_domain=second)
+        return m.astype(jnp.float32)
+
+    def _store(m, *, second: bool = False):
+        if mdt == "int8":
+            return _quantize(m, sqrt_domain=second)
+        return m.astype(jnp.dtype(mdt))
+
+    def update(grads: Params, state: OptState, params: Params
+               ) -> Tuple[Params, OptState, Dict[str, jax.Array]]:
+        step = state.step + 1
+        gflat = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in gflat))
+        clip = jnp.minimum(1.0, ocfg.grad_clip_norm / (gnorm + 1e-9))
+        lr = sched(step)
+        b1, b2 = ocfg.b1, ocfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu_q, nu_q):
+            g = g.astype(jnp.float32) * clip
+            mu = b1 * _load(mu_q, p.shape) + (1 - b1) * g
+            nu = b2 * _load(nu_q, p.shape, second=True) + (1 - b2) * g * g
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + ocfg.eps)
+            decay = ocfg.weight_decay if p.ndim >= 2 else 0.0
+            newp = p.astype(jnp.float32) * (1 - lr * decay) - lr * delta
+            return newp.astype(p.dtype), _store(mu), _store(nu, second=True)
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and set(x) == {"q", "scale"})
+        # unzip the 3-tuples
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, OptState(step, new_mu, new_nu), metrics
+
+    return init, update

@@ -1,0 +1,96 @@
+"""Train-step factory: microbatched grad accumulation, mixed precision.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with the sharding rules from
+:mod:`repro.distributed.sharding`.  Gradient accumulation is a
+``lax.scan`` over microbatches, so the gradient all-reduce (inserted by
+GSPMD against the FSDP/DP-sharded params) happens once per step, after
+the scan — not once per microbatch.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelConfig
+from ..models import model as M
+from .optimizer import AdamWConfig, OptState, make_adamw
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, ocfg: AdamWConfig,
+                     pcfg: ParallelConfig, key) -> TrainState:
+    params = M.init_params(cfg, key, dtype=jnp.dtype(pcfg.param_dtype))
+    opt_init, _ = make_adamw(ocfg, pcfg)
+    return TrainState(params=params, opt=opt_init(params))
+
+
+def train_state_specs(cfg: ModelConfig, ocfg: AdamWConfig,
+                      pcfg: ParallelConfig) -> TrainState:
+    """ShapeDtypeStruct stand-in (dry-run / checkpoint restore planning)."""
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, ocfg, pcfg, k), jax.random.key(0)
+    )
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int) -> Dict:
+    def split(x):
+        B = x.shape[0]
+        assert B % n == 0, f"global batch {B} % microbatches {n} != 0"
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: AdamWConfig,
+    pcfg: ParallelConfig,
+    *,
+    attn_impl: str = "blocked",
+    grad_transform: Callable[[Params], Params] | None = None,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict]]:
+    """``grad_transform`` hooks cross-pod compression (see
+    distributed.compression) between accumulation and the optimizer."""
+    _, opt_update = make_adamw(ocfg, pcfg)
+
+    def loss_fn(params, mb):
+        return M.loss_fn(cfg, pcfg, params, mb, attn_impl=attn_impl,
+                         slstm_cost_proxy=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        n = pcfg.n_microbatches
+        if n <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            mbs = _split_microbatches(batch, n)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / n, acc, g)
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, zero, mbs)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda v: jnp.mean(v), ms)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, opt_metrics = opt_update(
+            grads, state.opt, state.params)
+        metrics = {**metrics, **opt_metrics, "loss_total": loss}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,169 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness assertions; decode-path smoke for serve shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import ParallelConfig
+from repro.data.batches import make_batch
+from repro.models import model as M
+
+PCFG = ParallelConfig(scan_layers=True, remat="block")
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def reduced_setups():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).reduced()
+            params = M.init_params(cfg, jax.random.key(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name, reduced_setups):
+    cfg, params = reduced_setups(name)
+    batch = make_batch(cfg, batch=2, seq=32, seed=1)
+    logits, aux = M.forward(cfg, PCFG, params, batch)
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (2, cfg.n_codebooks, 32, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 32, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{name}: non-finite logits"
+    for k, v in aux.items():
+        assert jnp.isfinite(v), f"{name}: non-finite aux {k}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_one_train_step_reduces_loss_direction(name, reduced_setups):
+    """One SGD step on one batch must produce finite loss and grads."""
+    cfg, params = reduced_setups(name)
+    batch = make_batch(cfg, batch=2, seq=16, seed=2)
+    loss_fn = lambda p: M.loss_fn(cfg, PCFG, p, batch)[0]
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss), f"{name}: loss not finite"
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and gnorm > 0, f"{name}: bad grad norm"
+    # a small step along -grad lowers this batch's loss
+    lr = 1e-2
+    params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params,
+                           grads)
+    loss2 = loss_fn(params2)
+    assert loss2 < loss + 1e-4, f"{name}: {loss} -> {loss2}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_full_forward(name, reduced_setups):
+    """Prefill+decode equivalence: token-by-token decode with caches must
+    reproduce the full-sequence forward logits (serving correctness)."""
+    cfg, params = reduced_setups(name)
+    if cfg.family == "vlm":
+        pytest.skip("decode equivalence covered by token archs; vlm uses "
+                    "embeds input (frontend stub)")
+    B, S = 1, 12
+    batch = make_batch(cfg, batch=B, seq=S, seed=3)
+    # serving semantics: dropless MoE in both prefill and decode (training's
+    # capacity dispatch may drop tokens and is NOT decode-equivalent).
+    # f32 compute: this asserts path equivalence, not bf16 roundoff.
+    pcfg = ParallelConfig(scan_layers=True, remat="block",
+                          compute_dtype="float32",
+                          kv_cache_dtype="float32")
+    full_logits, _ = M.forward(cfg, pcfg, params, batch, moe_dropless=True)
+
+    caches = M.init_caches(cfg, pcfg, batch=B, max_len=S)
+    outs = []
+    for t in range(S):
+        if cfg.n_codebooks > 1:
+            tok = batch["codes"][:, :, t : t + 1]
+        else:
+            tok = batch["tokens"][:, t : t + 1]
+        logits, caches = M.decode_step(
+            cfg, pcfg, params, caches, tok, jnp.int32(t)
+        )
+        outs.append(logits)
+    axis = 2 if cfg.n_codebooks > 1 else 1
+    dec = jnp.concatenate(outs, axis=axis)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full_logits, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_unrolled_matches_scanned():
+    """scan_layers=True and False must agree (dry-run unroll validity)."""
+    cfg = get_config("llama3.2-1b").reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, batch=2, seq=16, seed=4)
+    # f32: asserts structural equivalence, not bf16 fusion-order roundoff
+    p1 = ParallelConfig(scan_layers=True, compute_dtype="float32")
+    p2 = ParallelConfig(scan_layers=False, compute_dtype="float32")
+    l1, _ = M.forward(cfg, p1, params, batch)
+    l2, _ = M.forward(cfg, p2, params, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_attention_impls_agree():
+    """blocked (runtime) vs naive (costing) vs pallas-interpret kernels."""
+    cfg = get_config("llama3.2-1b").reduced()
+    params = M.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, batch=2, seq=48, seed=5)
+    pcfg = ParallelConfig(scan_layers=True, remat="block",
+                          compute_dtype="float32")
+    la, _ = M.forward(cfg, pcfg, params, batch, attn_impl="blocked")
+    lb, _ = M.forward(cfg, pcfg, params, batch, attn_impl="naive")
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_mla_cache_is_latent_sized():
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    caches = M.init_caches(cfg, PCFG, batch=2, max_len=64)
+    # grouped layout: group 1 = the stacked MoE+MLA layers
+    lat = caches[1][0]["latent"]
+    reps = cfg.n_layers - cfg.moe.first_dense
+    assert lat.shape == (reps, 2, 64, cfg.mla.kv_lora_rank)
+    # latent + rope, shared across heads — not H*dh per token
+    per_tok = lat.shape[-1] + caches[1][0]["k_rope"].shape[-1]
+    assert per_tok < 2 * cfg.n_heads * cfg.head_dim
+
+
+def test_moe_capacity_dispatch_matches_dropless_when_ample():
+    """With capacity ≥ T·K no token drops, so the training-path capacity
+    dispatch must agree with the exact dropless einsum."""
+    import dataclasses
+    from repro.models import moe as moe_mod
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    # capacity_factor large enough that capacity = T*K covers worst case
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    p = moe_mod.init_moe(cfg, jax.random.key(7), jnp.float32)
+    x = jax.random.normal(jax.random.key(8), (2, 16, cfg.d_model), jnp.float32)
+    y_cap, _ = moe_mod.apply_moe(cfg, p, x, dropless=False)
+    y_drop, _ = moe_mod.apply_moe(cfg, p, x, dropless=True)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_drop),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_decode_state_is_constant_size():
+    cfg = get_config("zamba2-1.2b").reduced()
+    caches = M.init_caches(cfg, PCFG, batch=2, max_len=10_000)
+    ssm_caches = [c for group in caches for c in group
+                  if c is not None and "ssm" in c]
+    assert ssm_caches, "zamba2 must carry SSM states"
+    for c in ssm_caches:
+        assert c["ssm"].shape[1] == 2        # (reps, B, H, P, N)
+        # no sequence-length dimension anywhere in the state
+        assert 10_000 not in c["ssm"].shape and 10_000 not in c["conv"].shape

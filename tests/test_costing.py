@@ -1,0 +1,89 @@
+"""Roofline costing: HLO parsers + probe reassembly sanity."""
+
+import numpy as np
+import pytest
+
+from repro.launch.costing import (CostTerms, _shape_bytes,
+                                  collective_bytes_from_text,
+                                  hbm_bytes_from_text)
+
+HLO = """
+HloModule jit_f
+
+%add (a: f32[]) -> f32[] {
+}
+
+ENTRY %main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %p1 = f32[1024,512]{1,0} parameter(1)
+  %ag = f32[64,1024]{1,0} all-gather(%p0), replica_groups=[4,2]<=[8], dimensions={0}
+  %dot = f32[64,512]{1,0} dot(%ag, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[64,512]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8], to_apply=%add
+  %rs = f32[8,512]{1,0} reduce-scatter(%ar), dimensions={0}, to_apply=%add
+  %cp = s32[8]{0} collective-permute(%rs), source_target_pairs={{0,1}}
+  %bc = f32[64,512]{1,0} broadcast(%rs), dimensions={}
+  ROOT %t = (f32[8,512]{1,0}) tuple(%rs)
+}
+"""
+
+
+def test_shape_bytes_parses_arrays_and_tuples():
+    assert _shape_bytes("f32[16,1024]") == 16 * 1024 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("u32[0]") == 0
+
+
+def test_collective_parse_by_kind():
+    per = collective_bytes_from_text(HLO)
+    assert per["all-gather"] == 64 * 1024 * 4
+    assert per["all-reduce"] == 64 * 512 * 4
+    assert per["reduce-scatter"] == 8 * 512 * 4
+    assert per["collective-permute"] == 8 * 4
+    assert per["all-to-all"] == 0
+
+
+def test_hbm_bytes_keeps_dot_drops_broadcast():
+    b = hbm_bytes_from_text(HLO)
+    dot = 64 * 512 * 4 + 64 * 1024 * 4 + 1024 * 512 * 4  # result + operands
+    assert b >= dot
+    # exact accounting: dot + the four collectives (result + operands each);
+    # broadcast/tuple/parameter contribute nothing of their own
+    coll = ((64 * 1024 * 4 + 16 * 1024 * 4)      # all-gather + its operand
+            + (64 * 512 * 4) * 2                 # all-reduce
+            + (8 * 512 * 4 + 64 * 512 * 4)       # reduce-scatter
+            + (8 * 4 + 8 * 512 * 4))             # collective-permute
+    assert b == dot + coll, b
+
+
+def test_async_start_done_counted_once():
+    hlo = """
+ENTRY %m {
+  %p = f32[128]{0} parameter(0)
+  %s = f32[512]{0} all-gather-start(%p), dimensions={0}
+  %d = f32[512]{0} all-gather-done(%s)
+}
+"""
+    per = collective_bytes_from_text(hlo)
+    assert per["all-gather"] == 512 * 4
+
+
+def test_cost_terms_algebra():
+    a = CostTerms(1.0, 2.0, 3.0, {"all-reduce": 3.0}, 4.0)
+    b = CostTerms(10.0, 20.0, 30.0, {"all-gather": 30.0}, 40.0)
+    c = (a + b).scaled(2.0)
+    assert c.flops == 22.0 and c.bytes_accessed == 44.0
+    assert c.per_collective == {"all-reduce": 6.0, "all-gather": 60.0}
+    r = c.roofline(n_chips=2)
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["bound_s"] == max(r["t_compute_s"], r["t_memory_s"],
+                               r["t_collective_s"])
+
+
+def test_roofline_terms_use_hardware_constants():
+    t = CostTerms(flops=197e12 * 4, bytes_accessed=0.0, collective_bytes=0.0)
+    r = t.roofline(n_chips=4)
+    np.testing.assert_allclose(r["t_compute_s"], 1.0)
+    t = CostTerms(flops=0.0, bytes_accessed=819e9 * 8, collective_bytes=0.0)
+    np.testing.assert_allclose(t.roofline(8)["t_memory_s"], 1.0)

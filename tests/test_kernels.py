@@ -1,0 +1,193 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Every Pallas kernel is swept over shapes/dtypes (hypothesis) and asserted
+allclose against ``repro.kernels.ref`` — the contract the system relies on
+when it dispatches kernels on TPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba2_scan import mamba2_scan_pallas
+from repro.kernels.qvp_reduce import qvp_reduce_pallas
+from repro.kernels.zr_accum import zr_accum_pallas
+
+
+def _radar_field(rng, t, a, r, nan_frac=0.15):
+    f = rng.normal(20.0, 12.0, size=(t, a, r)).astype(np.float32)
+    f[rng.random((t, a, r)) < nan_frac] = np.nan
+    return f
+
+
+# ---------------------------------------------------------------------------
+# qvp_reduce
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.integers(1, 9),
+    a=st.integers(4, 48),
+    r=st.integers(3, 300),
+    seed=st.integers(0, 999),
+)
+@settings(max_examples=20, deadline=None)
+def test_qvp_reduce_matches_ref(t, a, r, seed):
+    rng = np.random.default_rng(seed)
+    field = _radar_field(rng, t, a, r)
+    quality = rng.uniform(0.5, 1.0, size=(t, a, r)).astype(np.float32)
+    got = qvp_reduce_pallas(field, quality, bt=4, br=128, interpret=True)
+    want = ref.qvp_reduce(field, quality)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qvp_reduce_no_quality_path():
+    rng = np.random.default_rng(0)
+    field = _radar_field(rng, 4, 360, 250)
+    got = qvp_reduce_pallas(field, field, quality_min=float("-inf"),
+                            interpret=True)
+    want = ref.qvp_reduce(field, None)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_qvp_reduce_all_invalid_row_is_nan():
+    field = np.full((2, 8, 16), np.nan, dtype=np.float32)
+    out = qvp_reduce_pallas(field, np.ones_like(field), interpret=True)
+    assert np.isnan(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# zr_accum
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.integers(1, 12),
+    a=st.integers(2, 40),
+    r=st.integers(2, 300),
+    seed=st.integers(0, 999),
+)
+@settings(max_examples=20, deadline=None)
+def test_zr_accum_matches_ref(t, a, r, seed):
+    rng = np.random.default_rng(seed)
+    dbz = _radar_field(rng, t, a, r)
+    dt_s = rng.uniform(200.0, 400.0, size=(t,)).astype(np.float32)
+    got = zr_accum_pallas(dbz, dt_s, bt=4, ba=16, br=128, interpret=True)
+    want = ref.zr_accum(dbz, dt_s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_zr_accum_zero_below_threshold():
+    dbz = np.full((3, 4, 8), -5.0, dtype=np.float32)
+    out = zr_accum_pallas(dbz, np.full(3, 300.0, np.float32), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_zr_accum_known_value():
+    """40 dBZ for one hour under Marshall-Palmer ≈ 11.53 mm."""
+    dbz = np.full((1, 1, 1), 40.0, dtype=np.float32)
+    out = zr_accum_pallas(dbz, np.array([3600.0], np.float32), interpret=True)
+    expected = (1e4 / 200.0) ** (1 / 1.6)
+    np.testing.assert_allclose(np.asarray(out)[0, 0], expected, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 2),
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    sq=st.integers(1, 130),
+    skv_extra=st.integers(0, 140),
+    d=st.sampled_from([16, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=25, deadline=None)
+def test_flash_attention_matches_ref(b, hkv, group, sq, skv_extra, d, causal,
+                                     seed):
+    rng = np.random.default_rng(seed)
+    hq = hkv * group
+    skv = sq + skv_extra  # decode-style: queries align to the sequence end
+    q = rng.normal(size=(b, hq, sq, d)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, skv, d)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, skv, d)).astype(np.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=64, bk=64,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), dtype=jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), dtype=jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), dtype=jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_flash_attention_decode_single_query():
+    """Sq=1 against a long cache — the serve_step hot path."""
+    rng = np.random.default_rng(5)
+    q = rng.normal(size=(2, 8, 1, 64)).astype(np.float32)
+    k = rng.normal(size=(2, 2, 700, 64)).astype(np.float32)
+    v = rng.normal(size=(2, 2, 700, 64)).astype(np.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2_scan
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 2),
+    l=st.integers(1, 200),
+    h=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([8, 16]),
+    n=st.sampled_from([8, 16]),
+    seed=st.integers(0, 99),
+)
+@settings(max_examples=20, deadline=None)
+def test_mamba2_scan_matches_ref(b, l, h, p, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, l, h, p)).astype(np.float32)
+    dt = rng.uniform(0.001, 0.1, size=(b, l, h)).astype(np.float32)
+    A = -rng.uniform(0.5, 4.0, size=(h,)).astype(np.float32)
+    Bm = rng.normal(size=(b, l, n)).astype(np.float32)
+    Cm = rng.normal(size=(b, l, n)).astype(np.float32)
+    y_got, h_got = mamba2_scan_pallas(x, dt, A, Bm, Cm, cs=64, interpret=True)
+    y_want, h_want = ref.mamba2_scan(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y_got, y_want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(h_got, h_want, rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_scan_state_continuation():
+    """Scanning [first half] then [second half with h0] == full scan."""
+    rng = np.random.default_rng(11)
+    b, l, h, p, n = 1, 64, 2, 8, 8
+    x = rng.normal(size=(b, l, h, p)).astype(np.float32)
+    dt = rng.uniform(0.001, 0.1, size=(b, l, h)).astype(np.float32)
+    A = -rng.uniform(0.5, 4.0, size=(h,)).astype(np.float32)
+    Bm = rng.normal(size=(b, l, n)).astype(np.float32)
+    Cm = rng.normal(size=(b, l, n)).astype(np.float32)
+    y_full, h_full = ref.mamba2_scan(x, dt, A, Bm, Cm)
+    half = l // 2
+    y1, h1 = ref.mamba2_scan(x[:, :half], dt[:, :half], A, Bm[:, :half],
+                             Cm[:, :half])
+    y2, h2 = ref.mamba2_scan(x[:, half:], dt[:, half:], A, Bm[:, half:],
+                             Cm[:, half:], h0=h1)
+    np.testing.assert_allclose(
+        np.concatenate([y1, y2], axis=1), y_full, rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(h2, h_full, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,144 @@
+"""Integration: ETL -> transactional store -> science workflows.
+
+Validates the paper's core correctness claim implicitly: the DataTree path
+and the file-based (Py-ART-style) baseline produce *identical* science
+products — the speedup (benchmarks/) comes for free, not from approximation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import RadarArchive, fm301
+from repro.etl import generate_raw_archive, ingest, level2
+from repro.radar import (
+    point_series_from_session,
+    point_series_from_volumes,
+    qpe_from_session,
+    qpe_from_volumes,
+    qvp_from_session,
+    qvp_from_volumes,
+)
+from repro.store import ObjectStore, Repository
+
+
+@pytest.fixture(scope="module")
+def small_archive(tmp_path_factory):
+    raw = ObjectStore(str(tmp_path_factory.mktemp("raw")))
+    keys = generate_raw_archive(
+        raw, n_scans=6, n_az=72, n_gates=200, n_sweeps=4, seed=3
+    )
+    repo = Repository.create(str(tmp_path_factory.mktemp("repo")))
+    report = ingest(raw, repo, batch_size=3)
+    volumes = [level2.decode_volume(raw.get(k)) for k in keys]
+    return raw, repo, volumes, report
+
+
+def test_ingest_report(small_archive):
+    _raw, _repo, _vols, report = small_archive
+    assert report.n_files == 6
+    assert report.n_volumes == 6
+    assert report.n_commits == 2
+
+
+def test_tree_structure_fm301(small_archive):
+    _raw, repo, _vols, _report = small_archive
+    tree = RadarArchive(repo).tree()
+    assert "VCP-212" in tree
+    node = tree["VCP-212/sweep_0"]
+    assert node.attrs["fixed_angle"] == pytest.approx(0.5)
+    assert node.attrs["sweep_mode"] == "azimuth_surveillance"
+    dbzh = tree["VCP-212/sweep_0/DBZH"]
+    assert dbzh.dims == ("time", "azimuth", "range")
+    assert dbzh.shape == (6, 72, 200)
+    assert dbzh.attrs["units"] == "dBZ"
+    assert tree.attrs["Conventions"].startswith("Cf/Radial-2.1")
+
+
+def test_level2_roundtrip(small_archive):
+    raw, _repo, volumes, _report = small_archive
+    vol = volumes[0]
+    blob = level2.encode_volume(vol)
+    back = level2.decode_volume(blob)
+    assert back["time"] == vol["time"]
+    assert back["vcp"].vcp_id == vol["vcp"].vcp_id
+    # int16 packing quantizes at the moment resolution; DBZH scale=0.01
+    np.testing.assert_allclose(
+        back["sweeps"][0]["moments"]["DBZH"],
+        vol["sweeps"][0]["moments"]["DBZH"],
+        atol=0.011,
+    )
+
+
+def test_qvp_datatree_matches_filebased(small_archive):
+    _raw, repo, volumes, _report = small_archive
+    session = RadarArchive(repo).session()
+    got = qvp_from_session(session, vcp="VCP-212", sweep=3, moment="DBZH")
+    want = qvp_from_volumes(volumes, sweep=3, moment="DBZH")
+    assert got.profile.shape == want.profile.shape == (6, 200)
+    np.testing.assert_allclose(got.profile, want.profile, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(got.height_m, want.height_m, rtol=1e-6)
+    assert got.elevation_deg == pytest.approx(want.elevation_deg)
+
+
+def test_qvp_pallas_kernel_path_matches(small_archive):
+    _raw, repo, _vols, _report = small_archive
+    session = RadarArchive(repo).session()
+    a = qvp_from_session(session, vcp="VCP-212", sweep=2, mode="ref")
+    b = qvp_from_session(session, vcp="VCP-212", sweep=2, mode="kernel")
+    np.testing.assert_allclose(a.profile, b.profile, rtol=1e-5, atol=1e-5)
+
+
+def test_qpe_datatree_matches_filebased(small_archive):
+    _raw, repo, volumes, _report = small_archive
+    session = RadarArchive(repo).session()
+    got = qpe_from_session(session, vcp="VCP-212", sweep=0)
+    want = qpe_from_volumes(volumes, sweep=0)
+    assert got.accum_mm.shape == (72, 200)
+    np.testing.assert_allclose(got.accum_mm, want.accum_mm, rtol=1e-3,
+                               atol=1e-4)
+    assert got.n_scans == want.n_scans == 6
+    assert got.total_hours == pytest.approx(want.total_hours)
+    assert np.all(got.accum_mm >= 0.0)
+
+
+def test_point_series_datatree_matches_filebased(small_archive):
+    _raw, repo, volumes, _report = small_archive
+    session = RadarArchive(repo).session()
+    got = point_series_from_session(
+        session, vcp="VCP-212", az_deg=45.0, range_m=20_000.0
+    )
+    want = point_series_from_volumes(volumes, az_deg=45.0, range_m=20_000.0)
+    assert (got.az_idx, got.rng_idx) == (want.az_idx, want.rng_idx)
+    np.testing.assert_allclose(got.values, want.values, rtol=1e-4, atol=1e-4)
+
+
+def test_qvp_time_slice_partial_read(small_archive):
+    _raw, repo, _vols, _report = small_archive
+    session = RadarArchive(repo).session()
+    full = qvp_from_session(session, vcp="VCP-212", sweep=1)
+    part = qvp_from_session(session, vcp="VCP-212", sweep=1,
+                            time_slice=slice(2, 5))
+    np.testing.assert_allclose(part.profile, full.profile[2:5], rtol=1e-5)
+    assert part.times.shape == (3,)
+
+
+def test_append_then_reanalyze_bitwise(small_archive):
+    """§5.4 incremental construction: analyses on the same snapshot are
+    bitwise stable even while the archive grows."""
+    raw, repo, _vols, _report = small_archive
+    arch = RadarArchive(repo)
+    sid_before = repo.branch_head()
+    q1 = qpe_from_session(repo.readonly_session(snapshot_id=sid_before),
+                          vcp="VCP-212")
+    # live append of one more scan
+    more = generate_raw_archive(
+        raw, n_scans=1, n_az=72, n_gates=200, n_sweeps=4, seed=3,
+        t0=1305849600.0 + 6 * 270.0,
+    )
+    ingest(raw, repo, keys=more)
+    q2 = qpe_from_session(repo.readonly_session(snapshot_id=sid_before),
+                          vcp="VCP-212")
+    assert q1.accum_mm.tobytes() == q2.accum_mm.tobytes()
+    # and the live head now has 7 scans
+    assert RadarArchive(repo).tree()["VCP-212/time"].shape == (7,)

@@ -1,0 +1,316 @@
+"""Store substrate tests: chunk grid math, zarrlite arrays, icechunk ACID.
+
+The property tests pin the invariants the paper's §5.4 claims rest on:
+atomicity, snapshot isolation, content-address determinism (bitwise
+reproducibility), and conflict safety.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.store import (
+    ChunkGrid,
+    ConflictError,
+    ObjectStore,
+    Repository,
+    content_hash,
+    decode_chunk,
+    encode_chunk,
+)
+
+
+# ---------------------------------------------------------------------------
+# chunk grid math
+# ---------------------------------------------------------------------------
+
+@given(
+    shape=st.lists(st.integers(1, 40), min_size=1, max_size=3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_chunk_grid_covers_array_exactly(shape, seed):
+    rng = np.random.default_rng(seed)
+    chunks = tuple(int(rng.integers(1, s + 3)) for s in shape)
+    grid = ChunkGrid(tuple(shape), chunks)
+    seen = np.zeros(shape, dtype=np.int32)
+    for cid in grid.chunk_ids():
+        seen[grid.chunk_slices(cid)] += 1
+    assert (seen == 1).all(), "chunks must tile the array exactly once"
+
+
+@given(
+    n=st.integers(1, 60),
+    c=st.integers(1, 20),
+    lo=st.integers(0, 59),
+    hi=st.integers(0, 60),
+)
+@settings(max_examples=60, deadline=None)
+def test_chunks_for_selection_minimal_and_sufficient(n, c, lo, hi):
+    lo = min(lo, n)
+    hi = min(hi, n)
+    grid = ChunkGrid((n,), (c,))
+    hit = list(grid.chunks_for_selection((slice(lo, hi),)))
+    covered = set()
+    for cid in hit:
+        sl = grid.chunk_slices(cid)[0]
+        covered.update(range(sl.start, sl.stop))
+        # sufficiency+minimality: every selected chunk intersects the request
+        assert sl.start < hi and sl.stop > lo
+    assert set(range(lo, hi)) <= covered
+
+
+def test_encode_decode_roundtrip_dtypes():
+    for dtype in ("float32", "float64", "int16", "int32", "uint8"):
+        arr = (np.random.default_rng(0).standard_normal((7, 13)) * 50).astype(dtype)
+        blob = encode_chunk(arr)
+        out = decode_chunk(blob, arr.shape, dtype)
+        np.testing.assert_array_equal(arr, out)
+
+
+def test_content_hash_deterministic():
+    a = np.arange(100, dtype=np.float32)
+    assert content_hash(encode_chunk(a)) == content_hash(encode_chunk(a.copy()))
+
+
+# ---------------------------------------------------------------------------
+# object store
+# ---------------------------------------------------------------------------
+
+def test_object_store_cas(tmp_path):
+    s = ObjectStore(str(tmp_path))
+    assert s.compare_and_swap("ref", None, b"v1")
+    assert not s.compare_and_swap("ref", None, b"v2"), "create-if-absent must fail"
+    assert s.compare_and_swap("ref", b"v1", b"v2")
+    assert not s.compare_and_swap("ref", b"v1", b"v3"), "stale expected must fail"
+    assert s.get("ref") == b"v2"
+
+
+def test_object_store_put_if_not_exists(tmp_path):
+    s = ObjectStore(str(tmp_path))
+    assert s.put("chunks/ab", b"x", if_not_exists=True)
+    assert not s.put("chunks/ab", b"y", if_not_exists=True)
+    assert s.get("chunks/ab") == b"x"
+
+
+def test_object_store_rejects_escape(tmp_path):
+    s = ObjectStore(str(tmp_path))
+    with pytest.raises(ValueError):
+        s.put("../evil", b"x")
+
+
+# ---------------------------------------------------------------------------
+# zarrlite arrays within icechunk transactions
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def repo(tmp_path):
+    return Repository.create(str(tmp_path / "repo"))
+
+
+def test_array_roundtrip_and_partial_reads(repo):
+    tx = repo.writable_session()
+    data = np.random.default_rng(1).standard_normal((9, 17, 31)).astype("float32")
+    a = tx.create_array("g/x", shape=data.shape, dtype="float32", chunks=(4, 8, 16))
+    a.write_full(data)
+    tx.commit("write")
+    arr = repo.readonly_session().array("g/x")
+    np.testing.assert_array_equal(arr.read(), data)
+    np.testing.assert_array_equal(arr[3:7, 2:9, 20:], data[3:7, 2:9, 20:])
+    np.testing.assert_array_equal(arr[5], data[5])
+    np.testing.assert_array_equal(arr[-1, 0, :5], data[-1, 0, :5])
+
+
+@given(
+    shape=st.tuples(st.integers(1, 20), st.integers(1, 20)),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_random_region_writes_match_numpy(tmp_path_factory, shape, seed):
+    rng = np.random.default_rng(seed)
+    repo = Repository.create(
+        str(tmp_path_factory.mktemp("r") / f"repo{seed}")
+    )
+    chunks = (int(rng.integers(1, shape[0] + 1)), int(rng.integers(1, shape[1] + 1)))
+    tx = repo.writable_session()
+    a = tx.create_array("x", shape=shape, dtype="float32", chunks=chunks,
+                        fill_value=0.0)
+    mirror = np.zeros(shape, dtype="float32")
+    for _ in range(4):
+        r0, r1 = sorted(rng.integers(0, shape[0] + 1, size=2).tolist())
+        c0, c1 = sorted(rng.integers(0, shape[1] + 1, size=2).tolist())
+        if r1 == r0 or c1 == c0:
+            continue
+        block = rng.standard_normal((r1 - r0, c1 - c0)).astype("float32")
+        a[r0:r1, c0:c1] = block
+        mirror[r0:r1, c0:c1] = block
+    tx.commit("writes")
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("x").read(), mirror
+    )
+
+
+def test_unwritten_chunks_read_fill_value(repo):
+    tx = repo.writable_session()
+    tx.create_array("sparse", shape=(6, 6), dtype="float32", chunks=(2, 2))
+    tx.array("sparse")[0:2, 0:2] = 7.0
+    tx.commit("sparse write")
+    out = repo.readonly_session().array("sparse").read()
+    assert (out[:2, :2] == 7.0).all()
+    assert np.isnan(out[2:, 2:]).all()
+
+
+# ---------------------------------------------------------------------------
+# icechunk ACID properties
+# ---------------------------------------------------------------------------
+
+def test_snapshot_isolation(repo):
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(4,), dtype="int32", chunks=(4,)).write_full(
+        np.arange(4, dtype="int32")
+    )
+    sid1 = tx.commit("v1")
+    reader = repo.readonly_session()  # pinned at v1
+    tx2 = repo.writable_session()
+    tx2.array("x").write_full(np.full(4, 9, dtype="int32"))
+    tx2.commit("v2")
+    np.testing.assert_array_equal(reader.array("x").read(), np.arange(4))
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("x").read(), np.full(4, 9)
+    )
+    np.testing.assert_array_equal(
+        repo.readonly_session(snapshot_id=sid1).array("x").read(), np.arange(4)
+    )
+
+
+def test_uncommitted_writes_invisible_and_abortable(repo):
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(4,), dtype="int32", chunks=(4,)).write_full(
+        np.arange(4, dtype="int32")
+    )
+    assert not repo.readonly_session().has_array("x"), "WAL leak before commit"
+    tx.abort()
+    assert not repo.readonly_session().has_array("x")
+
+
+def test_atomicity_under_simulated_crash(tmp_path):
+    """Crash after chunks staged but before the ref CAS: old head intact."""
+    repo = Repository.create(str(tmp_path / "r"))
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(4,), dtype="int32", chunks=(2,)).write_full(
+        np.arange(4, dtype="int32")
+    )
+    sid1 = tx.commit("v1")
+    tx2 = repo.writable_session()
+    tx2.array("x").write_full(np.full(4, 5, dtype="int32"))
+    # simulate crash: transaction object dropped, no commit
+    del tx2
+    assert repo.branch_head() == sid1
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("x").read(), np.arange(4)
+    )
+    # orphaned chunks are swept by gc, live data survives
+    repo.gc()
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("x").read(), np.arange(4)
+    )
+
+
+def test_disjoint_commits_rebase(repo):
+    t1 = repo.writable_session()
+    t2 = repo.writable_session()
+    t1.create_array("a", shape=(2,), dtype="int32", chunks=(2,)).write_full(
+        np.array([1, 2], dtype="int32")
+    )
+    t2.create_array("b", shape=(2,), dtype="int32", chunks=(2,)).write_full(
+        np.array([3, 4], dtype="int32")
+    )
+    t1.commit("a")
+    t2.commit("b")  # must rebase, not conflict
+    s = repo.readonly_session()
+    np.testing.assert_array_equal(s.array("a").read(), [1, 2])
+    np.testing.assert_array_equal(s.array("b").read(), [3, 4])
+
+
+def test_overlapping_commits_conflict(repo):
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(2,), dtype="int32", chunks=(2,)).write_full(
+        np.zeros(2, dtype="int32")
+    )
+    tx.commit("init")
+    t1 = repo.writable_session()
+    t2 = repo.writable_session()
+    t1.array("x").write_full(np.ones(2, dtype="int32"))
+    t2.array("x").write_full(np.full(2, 2, dtype="int32"))
+    t1.commit("w1")
+    with pytest.raises(ConflictError):
+        t2.commit("w2")
+
+
+def test_rollback_and_bitwise_reproducibility(repo):
+    """Paper §5.4: rollback + re-execution gives bitwise-identical data."""
+    rng = np.random.default_rng(7)
+    day1 = rng.standard_normal((3, 8)).astype("float32")
+    day2 = rng.standard_normal((2, 8)).astype("float32")
+    tx = repo.writable_session()
+    a = tx.create_array("z", shape=(3, 8), dtype="float32", chunks=(1, 8))
+    a.write_full(day1)
+    sid1 = tx.commit("day1")
+    tx = repo.writable_session()
+    a = tx.resize_array("z", (5, 8))
+    a[3:5] = day2
+    sid2 = tx.commit("day2")
+    before = repo.readonly_session().array("z").read().tobytes()
+    # rollback to day1 and replay day2
+    repo.rollback("main", sid1)
+    tx = repo.writable_session()
+    a = tx.resize_array("z", (5, 8))
+    a[3:5] = day2
+    sid2_replayed = tx.commit("day2")
+    after = repo.readonly_session().array("z").read().tobytes()
+    assert before == after, "replay must be bitwise identical"
+    # content addressing: identical data -> identical chunk manifests
+    s_a = repo.readonly_session(snapshot_id=sid2)
+    s_b = repo.readonly_session(snapshot_id=sid2_replayed)
+    assert s_a._doc["manifests"] == s_b._doc["manifests"]
+
+
+def test_history_and_tags(repo):
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(1,), dtype="int32", chunks=(1,)).write_full(
+        np.array([1], dtype="int32")
+    )
+    sid = tx.commit("first")
+    repo.tag("v1.0", sid)
+    msgs = [c.message for c in repo.history()]
+    assert msgs == ["first", "repository created"]
+    assert repo.tag_head("v1.0") == sid
+    np.testing.assert_array_equal(
+        repo.readonly_session(tag="v1.0").array("x").read(), [1]
+    )
+
+
+def test_gc_keeps_all_reachable_history(repo):
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(2,), dtype="int32", chunks=(2,)).write_full(
+        np.array([1, 1], dtype="int32")
+    )
+    sid1 = tx.commit("v1")
+    tx = repo.writable_session()
+    tx.array("x").write_full(np.array([2, 2], dtype="int32"))
+    tx.commit("v2")
+    repo.gc()
+    np.testing.assert_array_equal(
+        repo.readonly_session(snapshot_id=sid1).array("x").read(), [1, 1]
+    )
+
+
+def test_chunk_dedup_across_commits(repo):
+    """Identical payloads share one content-addressed object."""
+    data = np.ones((4, 4), dtype="float32")
+    tx = repo.writable_session()
+    tx.create_array("a", shape=(4, 4), dtype="float32", chunks=(4, 4)).write_full(data)
+    tx.create_array("b", shape=(4, 4), dtype="float32", chunks=(4, 4)).write_full(data)
+    tx.commit("dup")
+    n_chunks = len(list(repo.store.list("chunks/")))
+    assert n_chunks == 1, f"expected dedup to 1 chunk, got {n_chunks}"
