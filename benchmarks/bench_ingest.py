@@ -1,36 +1,101 @@
-"""Fig. 1: Raw2Zarr ETL throughput (extract -> decode -> tree -> load)."""
+"""Fig. 1: Raw2Zarr ETL throughput (extract -> decode -> tree -> load).
+
+Two arms over the same synthetic KVNX archive: ``workers=1`` (the serial
+reference pipeline) and ``workers=4`` (pipelined extract/decode pool +
+pooled commit-time chunk encode).  Snapshot ids must match bitwise
+between the arms — determinism under concurrency is part of the claim.
+
+Runnable standalone::
+
+    PYTHONPATH=src python benchmarks/bench_ingest.py [--quick]
+"""
 
 from __future__ import annotations
 
+import argparse
 import shutil
+import sys
 import tempfile
 import time
 from pathlib import Path
 from typing import List
 
+if __package__:
+    from .common import N_AZ, N_GATES, N_SWEEPS, Record
+else:  # executed as a script: put the repo root on sys.path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import N_AZ, N_GATES, N_SWEEPS, Record
+
 from repro.etl import generate_raw_archive, ingest
 from repro.store import ObjectStore, Repository
 
-from .common import N_AZ, N_GATES, N_SWEEPS, Record
+WORKERS = 4
 
 
-def run() -> List[Record]:
+def run(*, n_scans: int = 24, batch_size: int = 24,
+        trials: int = 3) -> List[Record]:
     base = Path(tempfile.mkdtemp(prefix="repro-ingest-"))
     try:
         raw = ObjectStore(str(base / "raw"))
-        keys = generate_raw_archive(raw, n_scans=8, n_az=N_AZ,
+        keys = generate_raw_archive(raw, n_scans=n_scans, n_az=N_AZ,
                                     n_gates=N_GATES, n_sweeps=N_SWEEPS,
                                     seed=5)
         raw_bytes = sum(len(raw.get(k)) for k in keys)
-        repo = Repository.create(str(base / "store"))
-        t0 = time.perf_counter()
-        report = ingest(raw, repo, batch_size=4)
-        dt = time.perf_counter() - t0
+        # alternate the arms and keep each arm's best wall time: the box
+        # this runs on is share-throttled, so min-of-N (timeit-style) is
+        # the noise-robust estimator
+        walls = {1: [], WORKERS: []}
+        reports = {}
+        for trial in range(trials):
+            for w in (1, WORKERS):
+                repo = Repository.create(str(base / f"store-{trial}-{w}"))
+                t0 = time.perf_counter()
+                reports[w] = ingest(raw, repo, batch_size=batch_size,
+                                    workers=w)
+                walls[w].append(time.perf_counter() - t0)
+        if reports[1].snapshot_ids != reports[WORKERS].snapshot_ids:
+            raise AssertionError(
+                "parallel ingest diverged: snapshot ids differ between "
+                f"workers=1 and workers={WORKERS}"
+            )
+        dt1, dtn = min(walls[1]), min(walls[WORKERS])
+        report = reports[WORKERS]
+        stage = report.stage_seconds
         return [
-            Record("ingest", "scans_per_s", report.n_volumes / dt, "scan/s"),
+            Record("ingest", "scans_per_s_serial", n_scans / dt1, "scan/s"),
+            Record("ingest", f"scans_per_s_workers{WORKERS}",
+                   n_scans / dtn, "scan/s"),
             Record("ingest", "throughput_mb_s",
-                   raw_bytes / dt / 2**20, "MiB/s"),
+                   raw_bytes / dtn / 2**20, "MiB/s"),
+            Record("ingest", "parallel_speedup", dt1 / dtn, "x",
+                   extra={"workers": WORKERS, "trials": trials,
+                          "snapshot_ids_identical": True}),
             Record("ingest", "commits", float(report.n_commits), "commits"),
+            Record("ingest", "decode_busy_s",
+                   stage.get("decode_s", 0.0), "s"),
+            Record("ingest", "load_busy_s", stage.get("load_s", 0.0), "s"),
         ]
     finally:
         shutil.rmtree(base, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="single-commit configuration (~1 min)")
+    args = ap.parse_args()
+    kwargs = dict(n_scans=16, trials=2) if args.quick else {}
+    records = run(**kwargs)
+    print("bench,name,value,unit")
+    speedup = None
+    for r in records:
+        print(r.csv())
+        if r.name == "parallel_speedup":
+            speedup = r.value
+    if speedup is not None and speedup < 1.5:
+        print(f"# WARNING: parallel speedup {speedup:.2f}x below 1.5x "
+              "target (noisy host?)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Smoke check: full test suite + quick ingest benchmark.
+#
+#   ./scripts/smoke.sh
+#
+# Requires only numpy/jax/pandas/psutil (stdlib codecs + hypothesis shim
+# cover the rest); `pip install -e .[speed,test]` enables the fast paths.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest =="
+python -m pytest -x -q
+
+echo "== ingest benchmark (quick) =="
+python benchmarks/bench_ingest.py --quick

@@ -158,9 +158,14 @@ class RadarArchive:
     TIME_CHUNK = 16         # scans per time chunk
     RANGE_CHUNK = 256       # gates per range chunk (aligned with kernel tiles)
 
-    def __init__(self, repo: Repository, branch: str = "main"):
+    def __init__(self, repo: Repository, branch: str = "main",
+                 codec: Optional[str] = None):
         self.repo = repo
         self.branch = branch
+        # per-array codec for every array this archive creates; None defers
+        # to the store default (zlib in every environment — deterministic
+        # snapshot ids; pass codec="zstd" explicitly for the fast path)
+        self.codec = codec
 
     # -- reading ---------------------------------------------------------
     def tree(self, *, snapshot_id: Optional[str] = None,
@@ -207,6 +212,7 @@ class RadarArchive:
                 chunks=(self.TIME_CHUNK,),
                 attrs={DIMS_ATTR: ["time"], "units": "seconds since 1970-01-01",
                        "standard_name": "time"},
+                codec=self.codec,
             )
         t_arr = tx.array(t_path)
         n_time = t_arr.shape[0]
@@ -223,6 +229,7 @@ class RadarArchive:
                     f"{g}/azimuth", shape=(n_az,), dtype="float32",
                     chunks=(n_az,),
                     attrs={DIMS_ATTR: ["azimuth"], "units": "degrees"},
+                    codec=self.codec,
                 )
                 az.write_full(sweep["azimuth"].astype("float32"))
                 rg = tx.create_array(
@@ -230,6 +237,7 @@ class RadarArchive:
                     chunks=(n_rg,),
                     attrs={DIMS_ATTR: ["range"], "units": "meters",
                            "meters_between_gates": vcp.gate_m},
+                    codec=self.codec,
                 )
                 rg.write_full(sweep["range"].astype("float32"))
             for mname, mdata in sweep["moments"].items():
@@ -243,9 +251,10 @@ class RadarArchive:
                                 min(self.RANGE_CHUNK, n_rg)),
                         attrs={DIMS_ATTR: ["time", "azimuth", "range"],
                                **fm301.MOMENTS.get(mname, {})},
+                        codec=self.codec,
                     )
                 arr = tx.resize_array(apath, (n_time + 1, n_az, n_rg))
-                arr[n_time] = mdata.astype("float32")
+                arr[n_time] = np.asarray(mdata, dtype="float32")
 
         if own_tx and commit:
             return tx.commit(

@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..jaxcompat import get_abstract_mesh
 from ..configs.base import ModelConfig, ParallelConfig
 
 # leaf name -> which *logical* dim (negative index) tensor-parallelizes
@@ -219,7 +220,7 @@ def constrain_like_params(cfg: ModelConfig, pcfg: ParallelConfig,
     layer's full weights at once (measured: 62 GiB/device temp on
     llama3.2-1b train_4k).  With the body-side constraint the gather runs
     per layer and its result is transient."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return tree
     fsdp = (tuple(a for a in ("pod", "data") if a in mesh.axis_names)

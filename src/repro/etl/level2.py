@@ -9,30 +9,32 @@ benchmarks against.
 
 Format (little-endian)::
 
-    magic  b"RDT2" | u16 version | site_id 4s | f64 lat, lon, alt
-    u16 vcp_id | f64 scan_time | u16 n_sweeps
+    magic  b"RDT2" | u16 version | codec 8s (v3+) | site_id 4s
+    f64 lat, lon, alt | u16 vcp_id | f64 scan_time | u16 n_sweeps
     per sweep:
         f32 elevation | u32 n_az | u32 n_gates | f32 gate_m | u16 n_moments
         per moment:
             name 8s | f32 scale | f32 offset | u32 nbytes
-            zstd(int16[n_az * n_gates])
+            codec(int16[n_az * n_gates])
+
+Version 2 files (the pre-codec-registry format) carry no codec field and
+are always zstd-compressed; version 3 names its codec in the header, so a
+file written where ``zstandard`` is absent (stdlib ``zlib``) still decodes
+anywhere.
 """
 
 from __future__ import annotations
 
 import struct
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
-import zstandard
 
 from ..core import fm301
+from ..store import codecs
 
 MAGIC = b"RDT2"
-VERSION = 2
-
-_CCTX = zstandard.ZstdCompressor(level=1)
-_DCTX = zstandard.ZstdDecompressor()
+VERSION = 3
 
 
 def _pack_moment(name: str, data: np.ndarray) -> np.ndarray:
@@ -46,17 +48,33 @@ def _pack_moment(name: str, data: np.ndarray) -> np.ndarray:
 
 def _unpack_moment(name: str, packed: np.ndarray) -> np.ndarray:
     scale, offset = fm301.MOMENT_PACKING.get(name, (0.01, 0.0))
-    out = packed.astype(np.float32) * np.float32(scale) + np.float32(offset)
-    return np.where(packed == fm301.MISSING_I16, np.nan, out).astype(np.float32)
+    # in-place ops: this runs on the ETL's decode hot path, where every
+    # temporary is a GIL-held full-array pass that throttles pipelining
+    out = packed.astype(np.float32)
+    np.multiply(out, np.float32(scale), out=out)
+    np.add(out, np.float32(offset), out=out)
+    out[packed == fm301.MISSING_I16] = np.nan
+    return out
 
 
-def encode_volume(volume: Dict) -> bytes:
-    """Serialize one decoded volume dict to the binary format."""
+def encode_volume(volume: Dict, codec: Optional[str] = None) -> bytes:
+    """Serialize one decoded volume dict to the binary format.
+
+    Defaults to the fastest available codec (zstd level 1 when the wheel
+    is installed, stdlib zlib otherwise): raw-archive encoding is
+    write-rate-bound, unlike the chunk store's read-optimized default.
+    """
+    cdc = codecs.get_codec(codec or codecs.fast_codec())
+    if len(cdc.name.encode()) > 8:
+        raise ValueError(
+            f"codec name {cdc.name!r} exceeds the 8-byte header field"
+        )
     site: fm301.RadarSite = volume["site"]
     vcp: fm301.VCPDef = volume["vcp"]
     parts: List[bytes] = [
         MAGIC,
         struct.pack("<H", VERSION),
+        cdc.name.encode().ljust(8)[:8],
         site.site_id.encode().ljust(4)[:4],
         struct.pack("<ddd", site.latitude, site.longitude, site.altitude_m),
         struct.pack("<H", vcp.vcp_id),
@@ -73,12 +91,32 @@ def encode_volume(volume: Dict) -> bytes:
                         len(moments))
         )
         for name, data in moments.items():
-            blob = _CCTX.compress(_pack_moment(name, data).tobytes())
+            blob = cdc.encode(_pack_moment(name, data).tobytes())
             parts.append(name.encode().ljust(8)[:8])
             scale, offset = fm301.MOMENT_PACKING.get(name, (0.01, 0.0))
             parts.append(struct.pack("<ffI", scale, offset, len(blob)))
             parts.append(blob)
     return b"".join(parts)
+
+
+def peek_header(blob: bytes) -> Tuple[str, str, float]:
+    """Read ``(site_id, vcp_name, scan_time)`` from the fixed header only.
+
+    The ETL uses this to establish the deterministic (vcp, time) append
+    order *before* paying for full decompression — the cheap pre-sort that
+    lets stage-2 decode run in a thread pool without reordering appends.
+    """
+    off = 6  # magic + version
+    (version,) = struct.unpack_from("<H", blob, 4)
+    if version == VERSION:
+        off += 8  # codec field
+    elif version != 2:
+        raise ValueError(f"unsupported version {version}")
+    site_id = blob[off : off + 4].decode().strip()
+    off += 4 + 24  # site_id + lat/lon/alt
+    (vcp_id,) = struct.unpack_from("<H", blob, off)
+    (scan_time,) = struct.unpack_from("<d", blob, off + 2)
+    return site_id, f"VCP-{vcp_id}", scan_time
 
 
 def decode_volume(blob: bytes) -> Dict:
@@ -94,7 +132,11 @@ def decode_volume(blob: bytes) -> Dict:
     if take(4) != MAGIC:
         raise ValueError("not an RDT2 volume file")
     (version,) = struct.unpack("<H", take(2))
-    if version != VERSION:
+    if version == 2:
+        cdc = codecs.get_codec("zstd")  # v2 predates the codec field
+    elif version == VERSION:
+        cdc = codecs.get_codec(take(8).decode().strip())
+    else:
         raise ValueError(f"unsupported version {version}")
     site_id = take(4).decode().strip()
     lat, lon, alt = struct.unpack("<ddd", take(24))
@@ -116,7 +158,7 @@ def decode_volume(blob: bytes) -> Dict:
             name = take(8).decode().strip()
             scale, offset, nbytes = struct.unpack("<ffI", take(12))
             packed = np.frombuffer(
-                _DCTX.decompress(take(nbytes)), dtype=np.int16
+                cdc.decode(take(nbytes)), dtype=np.int16
             ).reshape(n_az, n_gates)
             moments[name] = _unpack_moment(name, packed)
         az = (np.arange(n_az, dtype=np.float32) + 0.5) * (360.0 / n_az)

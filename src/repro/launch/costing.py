@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..jaxcompat import set_mesh
 from ..configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from ..data.batches import input_specs
 from ..distributed.sharding import batch_shardings, param_shardings
@@ -305,7 +306,7 @@ def _unit_probe(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
 
     args = (up_specs, shared_specs, x, pos)
     shards = (upshard, shshard, xs, ps)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(probe, in_shardings=shards).lower(*args).compile()
     return cost_from_compiled(compiled, mesh.size)
 
@@ -343,7 +344,7 @@ def _boundary_probe(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
         return jnp.mean(lse - gathered)
 
     probe = jax.grad(fn) if with_grad else fn
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(
             probe, in_shardings=(eshard, bshard)).lower(
             emb_specs, batch).compile()
@@ -363,7 +364,7 @@ def _optimizer_probe(cfg: ModelConfig, pcfg: ParallelConfig,
     def fn(grads, opt, params):
         return opt_update(grads, opt, params)[:2]
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(
             fn, in_shardings=(pshard, oshard, pshard)).lower(
             specs, opt_specs, specs).compile()

@@ -17,22 +17,19 @@ from typing import Tuple
 
 import jax
 
+from ..jaxcompat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     """Single-process mesh over whatever devices exist (CPU smoke/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
 def fsdp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

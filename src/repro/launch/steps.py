@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..jaxcompat import set_mesh
 from ..configs import SHAPES, get_config
 from ..configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from ..data.batches import input_specs
@@ -221,5 +222,5 @@ def lower_cell(prog: CellProgram, mesh):
         out_shardings=prog.out_shardings,
         donate_argnums=prog.donate_argnums,
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         return jitted.lower(*prog.args)

@@ -31,6 +31,7 @@ from repro.configs.base import ParallelConfig
 from repro.data.batches import make_batch
 from repro.distributed.fault_tolerance import Supervisor
 from repro.distributed.sharding import batch_shardings, param_shardings
+from repro.jaxcompat import set_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import opt_shardings_like
 from repro.store import Repository
@@ -109,11 +110,11 @@ def main() -> None:
         latest = mgr.latest_step()
         if latest is not None:
             print(f"resuming from checkpoint step {latest}")
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 state = mgr.restore(specs, step=latest, shardings=sshard)
             start_step = latest
     if start_step == 0:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             state = jax.jit(
                 lambda k: init_train_state(cfg, ocfg, pcfg, k),
                 out_shardings=sshard,
@@ -129,7 +130,7 @@ def main() -> None:
                      devices_per_host=len(jax.devices()))
     it = batch_iter(start_step)
     t_last = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for step in range(start_step, args.steps):
             batch = {k: v for k, v in next(it).items() if k != "step"}
             state, metrics = jstep(state, batch)

@@ -19,6 +19,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..jaxcompat import get_abstract_mesh
 from ..configs.base import MLAConfig, ModelConfig
 from ..kernels import ops as kops
 from .layers import apply_mrope, apply_rope, dense_init
@@ -122,7 +123,7 @@ def _flash_decode_core(q, k, v, *, scale: float, kv_len,
     G = Hq // Hkv
     dp_size = 1
     if n_chunks is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
         if mesh is not None and mesh.axis_names:
             shape = dict(mesh.shape)
             n_chunks = shape.get("model", 1)

@@ -12,6 +12,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..jaxcompat import get_abstract_mesh
 from ..configs.base import ModelConfig
 
 Params = Dict[str, jax.Array]
@@ -187,7 +188,7 @@ def constrain(x: jax.Array, *axes) -> jax.Array:
     """`with_sharding_constraint` against the ambient mesh, silently
     dropping (a) axes the mesh does not have and (b) axes whose size does
     not divide the dimension (no padded shards; no-op on unmeshed runs)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = set(mesh.axis_names)

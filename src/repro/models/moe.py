@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..jaxcompat import get_abstract_mesh
 from ..configs.base import ModelConfig, MoEConfig
 from .layers import dense_init
 
@@ -97,7 +98,7 @@ def _dispatch_sorted(xt: jax.Array, gate_vals: jax.Array,
 
 
 def _dp_axes_in_mesh() -> Tuple[str, ...]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return ()
     return tuple(a for a in ("pod", "data")
@@ -155,7 +156,7 @@ def apply_moe(
         dp = _dp_axes_in_mesh()
         local = partial(_dispatch_sorted, n_experts=E,
                         capacity_factor=m.capacity_factor)
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
         dp_size = 1
         for a in dp:
             dp_size *= dict(mesh.shape)[a]

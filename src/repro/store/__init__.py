@@ -1,6 +1,17 @@
 """Transactional, cloud-native chunked storage (Zarr + Icechunk analogue)."""
 
 from .chunks import ChunkGrid, content_hash, decode_chunk, encode_chunk
+from .codecs import (
+    Codec,
+    UnknownCodecError,
+    available_codecs,
+    default_codec,
+    get_codec,
+    json_dumps,
+    json_loads,
+    register_codec,
+    set_default_codec,
+)
 from .icechunk import ConflictError, NotFound, Repository, Session, Transaction
 from .object_store import ObjectStore
 from .zarrlite import Array, ArrayMeta
@@ -9,13 +20,22 @@ __all__ = [
     "Array",
     "ArrayMeta",
     "ChunkGrid",
+    "Codec",
     "ConflictError",
     "NotFound",
     "ObjectStore",
     "Repository",
     "Session",
     "Transaction",
+    "UnknownCodecError",
+    "available_codecs",
     "content_hash",
     "decode_chunk",
+    "default_codec",
     "encode_chunk",
+    "get_codec",
+    "json_dumps",
+    "json_loads",
+    "register_codec",
+    "set_default_codec",
 ]

@@ -12,21 +12,19 @@ from __future__ import annotations
 import hashlib
 import math
 from dataclasses import dataclass
-from typing import Iterator, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
-import zstandard
 
-_CCTX = zstandard.ZstdCompressor(level=3)
-_DCTX = zstandard.ZstdDecompressor()
+from .codecs import get_codec
 
 
-def compress(raw: bytes) -> bytes:
-    return _CCTX.compress(raw)
+def compress(raw: bytes, codec: Optional[str] = None) -> bytes:
+    return get_codec(codec).encode(raw)
 
 
-def decompress(blob: bytes) -> bytes:
-    return _DCTX.decompress(blob)
+def decompress(blob: bytes, codec: Optional[str] = None) -> bytes:
+    return get_codec(codec).decode(blob)
 
 
 def content_hash(blob: bytes) -> str:
@@ -90,11 +88,13 @@ class ChunkGrid:
             yield tuple(r[o] for r, o in zip(ranges, offsets))
 
 
-def encode_chunk(arr: np.ndarray) -> bytes:
-    """Serialize one chunk: C-order raw bytes, zstd-compressed."""
-    return compress(np.ascontiguousarray(arr).tobytes())
+def encode_chunk(arr: np.ndarray, codec: Optional[str] = None) -> bytes:
+    """Serialize one chunk: C-order raw bytes through the named codec."""
+    return compress(np.ascontiguousarray(arr).tobytes(), codec)
 
 
-def decode_chunk(blob: bytes, shape: Tuple[int, ...], dtype) -> np.ndarray:
-    raw = decompress(blob)
+def decode_chunk(
+    blob: bytes, shape: Tuple[int, ...], dtype, codec: Optional[str] = None
+) -> np.ndarray:
+    raw = decompress(blob, codec)
     return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()

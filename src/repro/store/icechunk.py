@@ -31,9 +31,8 @@ import time
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
-import orjson
-
-from .chunks import content_hash
+from .chunks import content_hash, encode_chunk
+from .codecs import get_codec, json_dumps, json_loads
 from .object_store import ObjectStore
 from .zarrlite import Array, ArrayMeta, _chunk_key
 
@@ -46,12 +45,14 @@ class NotFound(KeyError):
     pass
 
 
-def _dumps(doc: Any) -> bytes:
-    return orjson.dumps(doc, option=orjson.OPT_SORT_KEYS)
+# canonical JSON (stdlib, sorted keys, compact) — the hashed byte encoding
+_dumps = json_dumps
+_loads = json_loads
 
-
-def _loads(blob: bytes) -> Any:
-    return orjson.loads(blob)
+# fields excluded from the snapshot's content address: wall-clock metadata
+# must not change the id, or "same data -> same id" (and the determinism of
+# replayed/parallel ingests) breaks.
+_VOLATILE_SNAPSHOT_FIELDS = ("written_at",)
 
 
 _EMPTY_SNAPSHOT_ID = "root"
@@ -160,9 +161,11 @@ class Repository:
 
     # -- snapshots ---------------------------------------------------------
     def _write_snapshot(self, doc: Dict[str, Any]) -> str:
-        blob = _dumps(doc)
-        sid = content_hash(blob)
-        self.store.put(f"snapshots/{sid}.json", blob, if_not_exists=True)
+        hashable = {
+            k: v for k, v in doc.items() if k not in _VOLATILE_SNAPSHOT_FIELDS
+        }
+        sid = content_hash(_dumps(hashable))
+        self.store.put(f"snapshots/{sid}.json", _dumps(doc), if_not_exists=True)
         return sid
 
     def _read_snapshot(self, sid: str) -> Dict[str, Any]:
@@ -288,7 +291,14 @@ class Session:
     def get_blob(self, ref: str) -> bytes:
         return self.repo.store.get(f"chunks/{ref}")
 
+    def staged_chunk_array(self, array_path: str, cid) -> Optional[Any]:
+        """Decoded chunk staged in this session, if any (None when pinned)."""
+        return None
+
     def stage_chunk(self, array_path: str, cid, blob: bytes) -> None:
+        raise PermissionError("read-only session")
+
+    def stage_chunk_array(self, array_path: str, cid, chunk) -> None:
         raise PermissionError("read-only session")
 
 
@@ -299,8 +309,18 @@ class Transaction(Session):
         super().__init__(repo, head, writable=True)
         self.branch = branch
         self._staged_chunks: Dict[str, Dict[str, str]] = {}  # path -> key -> hash
+        # decoded chunks not yet encoded: path -> key -> ndarray.  Encoding
+        # is deferred to commit so N appends into one chunk pay the codec
+        # once, and the encodes can fan out over `encode_workers` threads
+        # (zlib/lzma/zstd all release the GIL).
+        self._staged_arrays: Dict[str, Dict[str, Any]] = {}
         self._touched: set = set()
         self._closed = False
+        self.encode_workers = 1
+        # optional shared executor for commit-time encode: lets a pipelined
+        # caller keep one work-conserving pool for decode *and* encode
+        # instead of oversubscribing cores with a second pool
+        self.encode_pool = None
 
     # -- schema edits ------------------------------------------------------
     def create_group(self, path: str, attrs: Optional[Dict[str, Any]] = None):
@@ -330,15 +350,17 @@ class Transaction(Session):
         chunks: Sequence[int],
         attrs: Optional[Dict[str, Any]] = None,
         fill_value: float = float("nan"),
+        codec: Optional[str] = None,
     ) -> Array:
         path = path.strip("/")
         parent = path.rsplit("/", 1)[0] if "/" in path else ""
         self.create_group(parent)
+        codec = get_codec(codec).name  # resolve default + fail fast on unknown
         import numpy as _np
         if _np.isnan(fill_value) and not _np.issubdtype(_np.dtype(dtype), _np.floating):
             fill_value = 0.0
         meta = ArrayMeta(tuple(shape), dtype, tuple(chunks), dict(attrs or {}),
-                         fill_value)
+                         fill_value, codec)
         self._doc["arrays"][path] = meta.to_doc()
         self._touched.add(path)
         return Array(self, path, meta)
@@ -360,6 +382,7 @@ class Transaction(Session):
         self._doc["arrays"].pop(path, None)
         self._doc["manifests"].pop(path, None)
         self._staged_chunks.pop(path, None)
+        self._staged_arrays.pop(path, None)
         self._manifest_cache.pop(path, None)
         self._touched.add(path)
 
@@ -377,6 +400,22 @@ class Transaction(Session):
         ] = ref
         self._touched.add(array_path)
 
+    def stage_chunk_array(self, array_path: str, cid, chunk) -> None:
+        """Stage one *decoded* chunk; encoding is deferred to commit.
+
+        Re-staging the same chunk object is idempotent, so in-place
+        read-modify-write cycles (the append hot path) never re-encode.
+        """
+        self._staged_arrays.setdefault(array_path, {})[
+            _chunk_key(tuple(cid))
+        ] = chunk
+        self._touched.add(array_path)
+
+    def staged_chunk_array(self, array_path: str, cid) -> Optional[Any]:
+        return self._staged_arrays.get(array_path, {}).get(
+            _chunk_key(tuple(cid))
+        )
+
     def chunk_ref(self, array_path: str, cid: Sequence[int]) -> Optional[str]:
         staged = self._staged_chunks.get(array_path, {})
         key = _chunk_key(tuple(cid))
@@ -388,6 +427,9 @@ class Transaction(Session):
     def commit(self, message: str, *, max_retries: int = 5) -> str:
         if self._closed:
             raise RuntimeError("transaction already committed/aborted")
+        # encode + persist staged decoded chunks exactly once, before the
+        # CAS loop (write-ahead: payloads land before the ref can flip)
+        self._flush_staged_arrays()
         for _attempt in range(max_retries):
             new_doc = self._build_snapshot_doc(message)
             sid = self.repo._write_snapshot(new_doc)
@@ -420,8 +462,66 @@ class Transaction(Session):
     def abort(self) -> None:
         self._closed = True
         self._staged_chunks.clear()
+        self._staged_arrays.clear()
 
     # -- internals -------------------------------------------------------
+    def _flush_staged_arrays(self) -> None:
+        jobs = []
+        for path, chunks in self._staged_arrays.items():
+            codec = ArrayMeta.from_doc(self._doc["arrays"][path]).codec
+            for key, arr in chunks.items():
+                jobs.append((path, key, arr, codec))
+
+        def encode(job):
+            path, key, arr, codec = job
+            blob = encode_chunk(arr, codec)
+            ref = content_hash(blob)
+            # persist from the worker: refs are unique content addresses,
+            # and put-if-not-exists is idempotent, so concurrent writers
+            # (even of identical chunks) are safe; the file write also
+            # releases the GIL, overlapping I/O with sibling encodes
+            self.repo.store.put(f"chunks/{ref}", blob, if_not_exists=True)
+            return path, key, ref
+
+        def drain(pending):
+            # work-stealing worker: list.pop() is atomic under the GIL, so
+            # the committing thread and pool threads share one job list —
+            # flush runs at full width even while the pool finishes
+            # earlier-queued work (e.g. pipelined decode-ahead)
+            out = []
+            while True:
+                try:
+                    job = pending.pop()
+                except IndexError:
+                    return out
+                out.append(encode(job))
+
+        parallel = self.encode_pool is not None or self.encode_workers > 1
+        if parallel and len(jobs) > 1:
+            if self.encode_pool is not None:
+                pool, transient = self.encode_pool, None
+            else:
+                from concurrent.futures import ThreadPoolExecutor
+
+                transient = ThreadPoolExecutor(max_workers=self.encode_workers)
+                pool = transient
+            try:
+                pending = list(jobs)
+                futures = [
+                    pool.submit(drain, pending)
+                    for _ in range(self.encode_workers)
+                ]
+                encoded = drain(pending)  # committing thread helps
+                for f in futures:
+                    encoded.extend(f.result())
+            finally:
+                if transient is not None:
+                    transient.shutdown()
+        else:
+            encoded = [encode(j) for j in jobs]
+        for path, key, ref in encoded:
+            self._staged_chunks.setdefault(path, {})[key] = ref
+        self._staged_arrays.clear()
     def _build_snapshot_doc(self, message: str) -> Dict[str, Any]:
         manifests = dict(self._doc["manifests"])
         for array_path, staged in self._staged_chunks.items():

@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from .chunks import ChunkGrid, content_hash, decode_chunk, encode_chunk
+from .codecs import default_codec
 
 
 @dataclass
@@ -27,6 +28,7 @@ class ArrayMeta:
     chunks: Tuple[int, ...]
     attrs: Dict[str, Any] = field(default_factory=dict)
     fill_value: float = float("nan")
+    codec: str = field(default_factory=default_codec)
 
     def to_doc(self) -> Dict[str, Any]:
         return {
@@ -35,6 +37,7 @@ class ArrayMeta:
             "chunks": list(self.chunks),
             "attrs": self.attrs,
             "fill_value": None if np.isnan(self.fill_value) else self.fill_value,
+            "codec": self.codec,
         }
 
     @staticmethod
@@ -46,6 +49,8 @@ class ArrayMeta:
             chunks=tuple(doc["chunks"]),
             attrs=dict(doc.get("attrs", {})),
             fill_value=float("nan") if fv is None else float(fv),
+            # snapshots written before codecs were pluggable used zstd
+            codec=doc.get("codec", "zstd"),
         )
 
     @property
@@ -128,11 +133,14 @@ class Array:
         return full[tuple(slice(0, s) for s in actual)]
 
     def _read_chunk_padded(self, cid) -> np.ndarray:
+        staged = self._session.staged_chunk_array(self.path, cid)
+        if staged is not None:
+            return staged
         ref = self._session.chunk_ref(self.path, cid)
         if ref is None:
             return np.full(self.meta.chunks, self.meta.fill_value, dtype=self.dtype)
         blob = self._session.get_blob(ref)
-        return decode_chunk(blob, self.meta.chunks, self.dtype)
+        return decode_chunk(blob, self.meta.chunks, self.dtype, self.meta.codec)
 
     # -- writes (require an open transaction) ------------------------------
     def __setitem__(self, selection, value) -> None:
@@ -161,13 +169,21 @@ class Array:
                 dst.append(slice(lo - cs.start, hi - cs.start))
                 src.append(slice(lo - b[0], hi - b[0]))
             if full_cover:
-                # request covers the whole (full-shape) chunk: no read needed
-                chunk = np.ascontiguousarray(value[tuple(src)])
+                # request covers the whole (full-shape) chunk: no read
+                # needed.  Always materialize a private copy — `value` may
+                # be (a view of) the caller's buffer or a read-only
+                # broadcast, and staged chunks must be caller-isolated and
+                # writable for later in-place RMW
+                chunk = np.array(value[tuple(src)], dtype=self.dtype,
+                                 order="C")
             else:
-                # read-modify-write at full padded chunk shape
+                # read-modify-write at full padded chunk shape; if the chunk
+                # is already staged decoded, this mutates it in place and
+                # re-staging is a no-op — repeated appends to the same time
+                # chunk pay the codec exactly once, at commit
                 chunk = self._read_chunk_padded(cid)
                 chunk[tuple(dst)] = value[tuple(src)]
-            self._session.stage_chunk(self.path, cid, encode_chunk(chunk))
+            self._session.stage_chunk_array(self.path, cid, chunk)
 
     def write_full(self, value: np.ndarray) -> None:
         self[tuple(slice(None) for _ in self.meta.shape)] = value

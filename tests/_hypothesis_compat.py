@@ -1,0 +1,226 @@
+"""Hypothesis shim: re-export the real library, or degrade gracefully.
+
+The tier-1 suite must collect and pass in an environment with only
+``numpy``/``jax``/``pandas``/``psutil`` installed.  When ``hypothesis``
+is available it is re-exported untouched, so the property tests keep
+their full shrinking/falsification power.  When it is absent, this
+module provides just enough of the API the test-suite uses — ``@given``
+(positional and keyword strategies), ``@settings(max_examples=...,
+deadline=...)``, and the handful of strategies under ``st.`` — driven by
+a *seeded* ``numpy.random.default_rng``: property tests degrade to
+deterministic sampled tests instead of collection errors.
+
+Fallback semantics:
+
+* the RNG seed is derived from the test's qualified name, so example
+  sequences are stable across runs and processes;
+* each strategy contributes its boundary values first (min/max, first/
+  last choice), then random draws — a cheap nod to hypothesis's
+  edge-case bias;
+* ``REPRO_SHIM_MAX_EXAMPLES`` caps examples per test (default 10) to
+  keep the sampled suite fast; set it higher for a deeper local sweep.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import HealthCheck, assume, given, settings, strategies
+
+except ImportError:
+    import functools
+    import hashlib
+    import inspect
+    import os
+    import types
+    from typing import Any, List, Sequence
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 100
+    _EXAMPLE_CAP = int(os.environ.get("REPRO_SHIM_MAX_EXAMPLES", "10"))
+
+    class _Strategy:
+        """A value source: boundary examples first, then seeded randoms."""
+
+        def edge_cases(self) -> List[Any]:
+            return []
+
+        def draw(self, rng: np.random.Generator) -> Any:
+            raise NotImplementedError
+
+        def example(self, rng: np.random.Generator, index: int) -> Any:
+            edges = self.edge_cases()
+            if index < len(edges):
+                return edges[index]
+            return self.draw(rng)
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=None, max_value=None):
+            self.lo = -(2 ** 31) if min_value is None else int(min_value)
+            self.hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+        def edge_cases(self):
+            return [self.lo, self.hi] if self.hi > self.lo else [self.lo]
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=None, max_value=None, allow_nan=True,
+                     allow_infinity=None, width=64):
+            self.lo = -1e9 if min_value is None else float(min_value)
+            self.hi = 1e9 if max_value is None else float(max_value)
+            self.allow_nan = allow_nan and min_value is None and max_value is None
+
+        def edge_cases(self):
+            edges = [self.lo, self.hi, (self.lo + self.hi) / 2.0]
+            if self.allow_nan:
+                edges.append(float("nan"))
+            return edges
+
+        def draw(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+    class _Booleans(_Strategy):
+        def edge_cases(self):
+            return [False, True]
+
+        def draw(self, rng):
+            return bool(rng.integers(0, 2))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements: Sequence[Any]):
+            self.elements = list(elements)
+            if not self.elements:
+                raise ValueError("sampled_from requires a non-empty sequence")
+
+        def edge_cases(self):
+            return [self.elements[0], self.elements[-1]]
+
+        def draw(self, rng):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
+    class _Just(_Strategy):
+        def __init__(self, value):
+            self.value = value
+
+        def draw(self, rng):
+            return self.value
+
+    class _Lists(_Strategy):
+        def __init__(self, elements: _Strategy, min_size=0, max_size=None):
+            self.elements = elements
+            self.min_size = min_size
+            self.max_size = min_size + 5 if max_size is None else max_size
+
+        def edge_cases(self):
+            rng = np.random.default_rng(0)
+            return [
+                [self.elements.draw(rng) for _ in range(self.min_size)],
+                [self.elements.draw(rng) for _ in range(self.max_size)],
+            ]
+
+        def draw(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elements.draw(rng) for _ in range(n)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *strategies: _Strategy):
+            self.strategies = strategies
+
+        def edge_cases(self):
+            edges = [s.edge_cases() or [s.draw(np.random.default_rng(0))]
+                     for s in self.strategies]
+            return [tuple(e[0] for e in edges), tuple(e[-1] for e in edges)]
+
+        def draw(self, rng):
+            return tuple(s.draw(rng) for s in self.strategies)
+
+    strategies = types.SimpleNamespace(
+        integers=_Integers,
+        floats=_Floats,
+        booleans=_Booleans,
+        sampled_from=_SampledFrom,
+        just=_Just,
+        lists=_Lists,
+        tuples=_Tuples,
+    )
+
+    class HealthCheck:  # accepted and ignored by the fallback
+        all = staticmethod(lambda: [])
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        function_scoped_fixture = "function_scoped_fixture"
+
+    def settings(*args, max_examples: int = _DEFAULT_MAX_EXAMPLES, **kwargs):
+        """Record max_examples on the function; other knobs are no-ops."""
+
+        def decorate(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def assume(condition: bool) -> bool:
+        # the fallback cannot re-draw, so a failed assumption just skips
+        # the example by raising; given() catches it
+        if not condition:
+            raise _AssumptionFailed
+        return True
+
+    class _AssumptionFailed(Exception):
+        pass
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        def decorate(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            mapping = dict(kw_strategies)
+            if arg_strategies:
+                # hypothesis fills positional strategies from the right,
+                # leaving leading parameters for pytest fixtures
+                for name, strat in zip(
+                    names[len(names) - len(arg_strategies):], arg_strategies
+                ):
+                    mapping[name] = strat
+            fixture_names = [n for n in names if n not in mapping]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n_examples = min(
+                    getattr(wrapper, "_shim_max_examples", None)
+                    or getattr(fn, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES),
+                    _EXAMPLE_CAP,
+                )
+                seed = int.from_bytes(
+                    hashlib.sha256(
+                        f"{fn.__module__}.{fn.__qualname__}".encode()
+                    ).digest()[:8],
+                    "little",
+                )
+                rng = np.random.default_rng(seed)
+                for i in range(n_examples):
+                    drawn = {
+                        name: strat.example(rng, i)
+                        for name, strat in mapping.items()
+                    }
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except _AssumptionFailed:
+                        continue
+                    except Exception as err:
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n_examples}): "
+                            f"{drawn!r}"
+                        ) from err
+
+            # expose only the fixture parameters to pytest
+            wrapper.__signature__ = sig.replace(
+                parameters=[sig.parameters[n] for n in fixture_names]
+            )
+            return wrapper
+
+        return decorate
+
+
+__all__ = ["HealthCheck", "assume", "given", "settings", "strategies"]

@@ -1,0 +1,189 @@
+"""Codec & serialization subsystem tests.
+
+Pins the contract the store's content addressing rests on: every
+registered codec round-trips bytes exactly, per-array codec choice is
+recorded in metadata and honoured on read (even across processes and
+environments), and the canonical JSON encoding — hence every snapshot
+id — is byte-stable against golden hashes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.store import (
+    ArrayMeta,
+    Repository,
+    UnknownCodecError,
+    available_codecs,
+    content_hash,
+    decode_chunk,
+    default_codec,
+    encode_chunk,
+    get_codec,
+    json_dumps,
+    json_loads,
+)
+
+
+# ---------------------------------------------------------------------------
+# codec registry + round trips
+# ---------------------------------------------------------------------------
+
+def test_stdlib_codecs_always_registered():
+    names = available_codecs()
+    for required in ("raw", "zlib", "lzma"):
+        assert required in names
+    assert default_codec() in names
+
+
+def test_unknown_codec_raises_with_candidates():
+    with pytest.raises(UnknownCodecError) as ei:
+        get_codec("snappy")
+    assert "zlib" in str(ei.value)
+
+
+@pytest.mark.parametrize("codec", ["raw", "zlib", "lzma"])
+@pytest.mark.parametrize(
+    "shape,dtype",
+    [
+        ((), "float64"),            # 0-d
+        ((1,), "uint8"),
+        ((7, 13), "float32"),
+        ((3, 5, 11), "int16"),
+        ((16, 360, 88), "float32"), # partial edge-chunk geometry
+    ],
+)
+def test_chunk_roundtrip_every_codec(codec, shape, dtype):
+    rng = np.random.default_rng(hash((codec, shape, dtype)) % 2**32)
+    arr = (rng.standard_normal(shape) * 100).astype(dtype)
+    blob = encode_chunk(arr, codec)
+    out = decode_chunk(blob, shape, dtype, codec)
+    np.testing.assert_array_equal(arr, out)
+    assert out.dtype == np.dtype(dtype)
+
+
+def test_roundtrip_nan_payload():
+    arr = np.full((4, 6), np.nan, dtype="float32")
+    arr[1, 2] = 7.5
+    for codec in available_codecs():
+        out = decode_chunk(encode_chunk(arr, codec), arr.shape, "float32",
+                           codec)
+        np.testing.assert_array_equal(arr, out)
+
+
+def test_codec_output_deterministic():
+    arr = np.arange(1000, dtype="int32")
+    for codec in available_codecs():
+        assert encode_chunk(arr, codec) == encode_chunk(arr.copy(), codec)
+
+
+# ---------------------------------------------------------------------------
+# canonical JSON: golden bytes + golden hashes
+# ---------------------------------------------------------------------------
+
+GOLDEN_DOC = {
+    "zebra": 1,
+    "alpha": [1.5, None, "x", True],
+    "nested": {"k": [0, -3], "empty": {}},
+    "unicode": "雷达",
+    "num": 1305849600.25,
+}
+GOLDEN_BYTES = (
+    b'{"alpha":[1.5,null,"x",true],"nested":{"empty":{},"k":[0,-3]},'
+    b'"num":1305849600.25,"unicode":"\xe9\x9b\xb7\xe8\xbe\xbe","zebra":1}'
+)
+GOLDEN_HASH = "febbc383c863d87b769dfa6078ebb008"
+
+# the empty-repository snapshot document, hashed: this id is baked into
+# every fresh repo, so it must never drift across environments/versions
+GOLDEN_ROOT_SNAPSHOT_ID = "a8a03ceb6feb9ac4accb300f06e1fc2f"
+
+
+def test_canonical_json_golden_bytes():
+    assert json_dumps(GOLDEN_DOC) == GOLDEN_BYTES
+    assert content_hash(json_dumps(GOLDEN_DOC)) == GOLDEN_HASH
+
+
+def test_canonical_json_key_order_independent():
+    reordered = dict(reversed(list(GOLDEN_DOC.items())))
+    assert json_dumps(reordered) == GOLDEN_BYTES
+
+
+def test_json_roundtrip():
+    assert json_loads(json_dumps(GOLDEN_DOC)) == GOLDEN_DOC
+
+
+def test_fresh_repository_root_snapshot_id_is_golden(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    assert repo.branch_head() == GOLDEN_ROOT_SNAPSHOT_ID
+
+
+def test_snapshot_ids_deterministic_across_repos(tmp_path):
+    """Same writes, two repos, different wall clocks -> same ids."""
+    sids = []
+    for name in ("a", "b"):
+        repo = Repository.create(str(tmp_path / name))
+        tx = repo.writable_session()
+        arr = tx.create_array("g/x", shape=(5, 7), dtype="float32",
+                              chunks=(2, 4), codec="zlib")
+        arr.write_full(np.arange(35, dtype="float32").reshape(5, 7))
+        sids.append(tx.commit("write x"))
+    assert sids[0] == sids[1]
+
+
+# ---------------------------------------------------------------------------
+# per-array codec selection through the store
+# ---------------------------------------------------------------------------
+
+def test_array_meta_records_codec_and_defaults():
+    meta = ArrayMeta((4,), "float32", (2,))
+    assert meta.codec == default_codec()
+    doc = meta.to_doc()
+    assert doc["codec"] == default_codec()
+    # docs written before codecs were pluggable decode as zstd
+    legacy = {k: v for k, v in doc.items() if k != "codec"}
+    assert ArrayMeta.from_doc(legacy).codec == "zstd"
+
+
+def test_cross_codec_write_reopen_read(tmp_path):
+    """Write arrays under different codecs, re-open the repo, read both."""
+    data = np.random.default_rng(3).standard_normal((6, 10)).astype("float32")
+    repo = Repository.create(str(tmp_path / "repo"))
+    tx = repo.writable_session()
+    tx.create_array("z", shape=data.shape, dtype="float32", chunks=(4, 4),
+                    codec="zlib").write_full(data)
+    tx.create_array("l", shape=data.shape, dtype="float32", chunks=(5, 3),
+                    codec="lzma").write_full(data)
+    tx.create_array("r", shape=data.shape, dtype="float32", chunks=(6, 10),
+                    codec="raw").write_full(data)
+    tx.commit("three codecs")
+
+    reopened = Repository.open(str(tmp_path / "repo"))
+    sess = reopened.readonly_session()
+    for path in ("z", "l", "r"):
+        arr = sess.array(path)
+        np.testing.assert_array_equal(arr.read(), data)
+    assert sess.array("z").meta.codec == "zlib"
+    assert sess.array("l").meta.codec == "lzma"
+    assert sess.array("r").meta.codec == "raw"
+
+
+def test_create_array_rejects_unknown_codec(tmp_path):
+    repo = Repository.create(str(tmp_path / "repo"))
+    tx = repo.writable_session()
+    with pytest.raises(UnknownCodecError):
+        tx.create_array("x", shape=(2,), dtype="float32", chunks=(2,),
+                        codec="not-a-codec")
+
+
+def test_partial_edge_chunks_roundtrip_through_store(tmp_path):
+    """Chunk grid that does not divide the shape: edge chunks pad+clip."""
+    data = np.random.default_rng(9).standard_normal((7, 11)).astype("float64")
+    repo = Repository.create(str(tmp_path / "repo"))
+    tx = repo.writable_session()
+    tx.create_array("e", shape=(7, 11), dtype="float64", chunks=(4, 4),
+                    codec="zlib").write_full(data)
+    tx.commit("edge")
+    out = repo.readonly_session().array("e")
+    np.testing.assert_array_equal(out.read(), data)
+    np.testing.assert_array_equal(out[5:, 9:], data[5:, 9:])

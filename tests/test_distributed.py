@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
@@ -22,8 +22,9 @@ PCFG = ParallelConfig()
 
 def FakeMesh(shape):
     """Device-free mesh at production sizes (AbstractMesh lowers fine)."""
-    return jax.sharding.AbstractMesh(tuple(shape.values()),
-                                     tuple(shape.keys()))
+    from repro.jaxcompat import abstract_mesh
+
+    return abstract_mesh(tuple(shape.values()), tuple(shape.keys()))
 
 
 @pytest.mark.parametrize("arch", sorted(ARCHS))

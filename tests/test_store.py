@@ -7,7 +7,7 @@ reproducibility), and conflict safety.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.store import (
     ChunkGrid,
@@ -147,6 +147,23 @@ def test_random_region_writes_match_numpy(tmp_path_factory, shape, seed):
     tx.commit("writes")
     np.testing.assert_array_equal(
         repo.readonly_session().array("x").read(), mirror
+    )
+
+
+def test_staged_writes_isolated_from_caller_buffer(repo):
+    """Mutating the source array after a write must not alter the commit,
+    and RMW after a full-cover write must work (staged chunks writable)."""
+    tx = repo.writable_session()
+    buf = np.arange(16, dtype="float32").reshape(4, 4)
+    a = tx.create_array("iso", shape=(4, 4), dtype="float32", chunks=(4, 4))
+    a.write_full(buf)
+    expected = buf.copy()
+    buf[:] = -99.0                      # caller reuses their buffer
+    a[0, 0] = 42.0                      # in-place RMW of the staged chunk
+    expected[0, 0] = 42.0
+    tx.commit("isolation")
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("iso").read(), expected
     )
 
 
