@@ -2,25 +2,47 @@
 
 The DataTree path demonstrates the chunk-granular partial read: a point
 query touches only the chunks containing that (azimuth, range) cell, not
-the full field.
+the full field.  Three DataTree arms separate the wins: ``datatree_s``
+(serial, cold session), ``datatree_parallel_s`` (multi-chunk selections
+fanned out over a reader pool), and ``datatree_warm_s`` (same session
+re-queried — decoded-chunk LRU cache hits).
+
+Runnable standalone::
+
+    PYTHONPATH=src python benchmarks/bench_timeseries.py [--quick]
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
+from pathlib import Path
 from typing import List
 
 import numpy as np
+
+if __package__:
+    from .common import Record, reference_archive, timeit
+else:  # executed as a script: put the repo root on sys.path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import Record, reference_archive, timeit
 
 from repro.core import RadarArchive
 from repro.etl import level2
 from repro.radar import point_series_from_session, point_series_from_volumes
 
-from .common import Record, reference_archive, timeit
+READ_WORKERS = 8
 
 
-def run() -> List[Record]:
-    raw, repo, keys = reference_archive()
-    session = RadarArchive(repo).session()
+def run(*, quick: bool = False) -> List[Record]:
+    if quick:
+        raw, repo, keys = reference_archive("quick", n_scans=8)
+    else:
+        raw, repo, keys = reference_archive()
+
+    def query(session):
+        return point_series_from_session(session, vcp="VCP-212",
+                                         az_deg=123.0, range_m=45_000.0)
 
     def file_based():
         volumes = [level2.decode_volume(raw.get(k)) for k in keys]
@@ -28,15 +50,77 @@ def run() -> List[Record]:
                                          range_m=45_000.0)
 
     def datatree():
-        return point_series_from_session(session, vcp="VCP-212",
-                                         az_deg=123.0, range_m=45_000.0)
+        # fresh session per call: cold caches, serial chunk reads
+        return query(RadarArchive(repo).session())
+
+    def datatree_parallel():
+        session = RadarArchive(repo, read_workers=READ_WORKERS).session()
+        try:
+            return query(session)
+        finally:
+            session.close()
+
+    warm_session = RadarArchive(repo).session()
+
+    def datatree_warm():
+        return query(warm_session)
+
+    # cold full-sweep read: a multi-chunk selection where the reader pool
+    # has real fan-out (the point query above touches only 1-2 chunks)
+    def sweep_read(workers):
+        session = RadarArchive(repo, read_workers=workers).session()
+        try:
+            return session.array("VCP-212/sweep_0/DBZH").read()
+        finally:
+            session.close()
 
     t_file, want = timeit(file_based, repeat=3, warmup=0)
     t_tree, got = timeit(datatree, repeat=3, warmup=1)
-    np.testing.assert_allclose(got.values, want.values, rtol=1e-4, atol=1e-4)
+    t_par, got_par = timeit(datatree_parallel, repeat=3, warmup=1)
+    datatree_warm()  # populate the cache once
+    t_warm, got_warm = timeit(datatree_warm, repeat=3, warmup=0)
+    t_sweep, sweep_a = timeit(lambda: sweep_read(1), repeat=3, warmup=1)
+    t_sweep_par, sweep_b = timeit(lambda: sweep_read(READ_WORKERS),
+                                  repeat=3, warmup=1)
+    np.testing.assert_array_equal(sweep_a, sweep_b)
+    for arm in (got, got_par, got_warm):
+        np.testing.assert_allclose(arm.values, want.values,
+                                   rtol=1e-4, atol=1e-4)
     return [
         Record("timeseries", "file_based_s", t_file, "s"),
         Record("timeseries", "datatree_s", t_tree, "s"),
+        Record("timeseries", "datatree_parallel_s", t_par, "s",
+               {"read_workers": READ_WORKERS}),
+        Record("timeseries", "datatree_warm_s", t_warm, "s",
+               {"cache": "decoded-chunk LRU"}),
         Record("timeseries", "speedup", t_file / t_tree, "x",
                {"paper_claim": ">10x (§5.2)"}),
+        Record("timeseries", "parallel_speedup", t_tree / t_par, "x"),
+        Record("timeseries", "warm_speedup", t_tree / t_warm, "x"),
+        Record("timeseries", "sweep_read_s", t_sweep, "s"),
+        Record("timeseries", "sweep_read_parallel_s", t_sweep_par, "s",
+               {"read_workers": READ_WORKERS}),
+        Record("timeseries", "sweep_read_parallel_speedup",
+               t_sweep / t_sweep_par, "x"),
     ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small-archive configuration for CI smoke runs")
+    args = ap.parse_args()
+    records = run(quick=args.quick)
+    print("bench,name,value,unit")
+    values = {}
+    for r in records:
+        print(r.csv())
+        values[r.name] = r.value
+    if values.get("speedup", 0.0) < 1.0:
+        print("# FAILED: datatree slower than file-based baseline",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

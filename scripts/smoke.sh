@@ -10,8 +10,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== byte-compile src/ =="
+python -m compileall -q src
+
 echo "== pytest =="
 python -m pytest -x -q
 
 echo "== ingest benchmark (quick) =="
 python benchmarks/bench_ingest.py --quick
+
+echo "== transactional benchmark (quick: manifest-format regression gate) =="
+python benchmarks/bench_transactional.py --quick
+
+echo "== timeseries benchmark (quick: read-path regression gate) =="
+python benchmarks/bench_timeseries.py --quick

@@ -159,25 +159,40 @@ class RadarArchive:
     RANGE_CHUNK = 256       # gates per range chunk (aligned with kernel tiles)
 
     def __init__(self, repo: Repository, branch: str = "main",
-                 codec: Optional[str] = None):
+                 codec: Optional[str] = None, *,
+                 read_workers: int = 1,
+                 cache_bytes: Optional[int] = None):
         self.repo = repo
         self.branch = branch
         # per-array codec for every array this archive creates; None defers
         # to the store default (zlib in every environment — deterministic
         # snapshot ids; pass codec="zstd" explicitly for the fast path)
         self.codec = codec
+        # read-path knobs forwarded to every session this archive opens:
+        # a reader thread pool for multi-chunk selections and the decoded-
+        # chunk LRU budget (None -> store default)
+        self.read_workers = read_workers
+        self.cache_bytes = cache_bytes
+
+    def _session_kw(self, kw: Dict[str, Any]) -> Dict[str, Any]:
+        kw.setdefault("read_workers", self.read_workers)
+        if self.cache_bytes is not None:
+            kw.setdefault("cache_bytes", self.cache_bytes)
+        return kw
 
     # -- reading ---------------------------------------------------------
     def tree(self, *, snapshot_id: Optional[str] = None,
              tag: Optional[str] = None) -> DataTree:
         """Open the archive as a lazy DataTree (one object, Fig. 2 style)."""
         session = self.repo.readonly_session(
-            branch=self.branch, snapshot_id=snapshot_id, tag=tag
+            branch=self.branch, snapshot_id=snapshot_id, tag=tag,
+            **self._session_kw({}),
         )
         return tree_from_session(session)
 
     def session(self, **kw) -> Session:
-        return self.repo.readonly_session(branch=self.branch, **kw)
+        return self.repo.readonly_session(branch=self.branch,
+                                          **self._session_kw(kw))
 
     # -- writing -----------------------------------------------------------
     def append_scan(

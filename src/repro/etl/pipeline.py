@@ -206,9 +206,12 @@ def ingest(
         nonlocal load_s
         tx = repo.writable_session(branch)
         # fan commit-time chunk encode out over the shared pipeline pool
-        # (work-conserving with in-flight decodes) or a transient pool
+        # (work-conserving with in-flight decodes) or a transient pool;
+        # the same pool backs the transaction's read fan-out, so RMW
+        # appends that touch many existing chunks share one set of threads
         tx.encode_pool = pool
         tx.encode_workers = n_threads
+        tx.read_pool = pool
         n = 0
         for vol in volumes:
             t0 = time.perf_counter()

@@ -9,7 +9,7 @@ file-based baseline decodes every volume in full.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -32,6 +32,27 @@ def _nearest_gate(az_deg: float, range_m: float, azimuth: np.ndarray,
     return az_idx, rng_idx
 
 
+def _az_window_runs(center: int, halfwidth: int, n: int
+                    ) -> List[Tuple[int, int]]:
+    """Contiguous index runs covering the azimuth window, wrapped.
+
+    The azimuth axis is circular — the gate-distance metric in
+    :func:`_nearest_gate` already wraps — so a neighbourhood straddling
+    the 0/N seam must wrap too, not clamp.  Returns 1 run when the window
+    is interior (or covers the whole circle), 2 when it straddles the
+    seam; runs are expressed as half-open ``[start, stop)`` row ranges so
+    both the chunked store (slice reads) and in-memory baselines consume
+    them identically.
+    """
+    width = 2 * halfwidth + 1
+    if width >= n:
+        return [(0, n)]
+    lo = (center - halfwidth) % n
+    if lo + width <= n:
+        return [(lo, lo + width)]
+    return [(lo, n), (0, lo + width - n)]
+
+
 def point_series_from_session(
     session: Session,
     *,
@@ -47,9 +68,11 @@ def point_series_from_session(
     azimuth = session.array(f"{base}/azimuth").read()
     rng = session.array(f"{base}/range").read()
     ai, ri = _nearest_gate(az_deg, range_m, azimuth, rng)
-    a0, a1 = max(0, ai - halfwidth), min(len(azimuth), ai + halfwidth + 1)
     r0, r1 = max(0, ri - halfwidth), min(len(rng), ri + halfwidth + 1)
-    block = session.array(f"{base}/{moment}")[:, a0:a1, r0:r1]
+    arr = session.array(f"{base}/{moment}")
+    parts = [arr[:, a0:a1, r0:r1]
+             for a0, a1 in _az_window_runs(ai, halfwidth, len(azimuth))]
+    block = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=1)
     values = np.nanmedian(block.reshape(block.shape[0], -1), axis=1)
     times = session.array(f"{vcp}/time").read()
     return PointSeries(values.astype(np.float32), times, ai, ri, moment)
@@ -70,9 +93,13 @@ def point_series_from_volumes(
     for vol in volumes:
         sw = vol["sweeps"][sweep]
         ai, ri = _nearest_gate(az_deg, range_m, sw["azimuth"], sw["range"])
-        a0, a1 = max(0, ai - halfwidth), ai + halfwidth + 1
         r0, r1 = max(0, ri - halfwidth), ri + halfwidth + 1
-        block = sw["moments"][moment][a0:a1, r0:r1]
+        m = sw["moments"][moment]
+        block = np.concatenate(
+            [m[a0:a1, r0:r1]
+             for a0, a1 in _az_window_runs(ai, halfwidth, len(sw["azimuth"]))],
+            axis=0,
+        )
         values.append(np.nanmedian(block))
         times.append(vol["time"])
     return PointSeries(np.asarray(values, np.float32), np.asarray(times),

@@ -12,7 +12,17 @@ from .codecs import (
     register_codec,
     set_default_codec,
 )
-from .icechunk import ConflictError, NotFound, Repository, Session, Transaction
+from .icechunk import (
+    DEFAULT_CACHE_BYTES,
+    GC_GRACE_SECONDS,
+    MANIFEST_FORMAT,
+    MANIFEST_SHARD_CHUNKS,
+    ConflictError,
+    NotFound,
+    Repository,
+    Session,
+    Transaction,
+)
 from .object_store import ObjectStore
 from .zarrlite import Array, ArrayMeta
 
@@ -22,6 +32,10 @@ __all__ = [
     "ChunkGrid",
     "Codec",
     "ConflictError",
+    "DEFAULT_CACHE_BYTES",
+    "GC_GRACE_SECONDS",
+    "MANIFEST_FORMAT",
+    "MANIFEST_SHARD_CHUNKS",
     "NotFound",
     "ObjectStore",
     "Repository",

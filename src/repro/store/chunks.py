@@ -94,7 +94,18 @@ def encode_chunk(arr: np.ndarray, codec: Optional[str] = None) -> bytes:
 
 
 def decode_chunk(
-    blob: bytes, shape: Tuple[int, ...], dtype, codec: Optional[str] = None
+    blob: bytes,
+    shape: Tuple[int, ...],
+    dtype,
+    codec: Optional[str] = None,
+    *,
+    writable: bool = True,
 ) -> np.ndarray:
     raw = decompress(blob, codec)
-    return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+    arr = np.frombuffer(raw, dtype=dtype).reshape(shape)
+    if writable:
+        return arr.copy()
+    # read-only view over the decompressed buffer (zero-copy for ``raw``);
+    # the session chunk cache shares these across readers, so they must
+    # stay immutable
+    return arr

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import json
 import lzma
+import threading
 import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -108,14 +109,36 @@ register_codec(
 )
 
 if _zstandard is not None:
-    _ZC = _zstandard.ZstdCompressor(level=3)
-    _ZD = _zstandard.ZstdDecompressor()
-    register_codec(Codec("zstd", _ZC.compress, _ZD.decompress))
+    # ZstdCompressor/ZstdDecompressor objects are NOT safe to share across
+    # threads, and both the commit-time encode fan-out and the parallel
+    # read path call codecs concurrently — keep one (de)compressor per
+    # thread per level instead of module-level singletons.
+    _ZSTD_TLS = threading.local()
+
+    def _zstd_compress(data: bytes, level: int) -> bytes:
+        key = f"c{level}"
+        c = getattr(_ZSTD_TLS, key, None)
+        if c is None:
+            c = _zstandard.ZstdCompressor(level=level)
+            setattr(_ZSTD_TLS, key, c)
+        return c.compress(data)
+
+    def _zstd_decompress(blob: bytes) -> bytes:
+        d = getattr(_ZSTD_TLS, "d", None)
+        if d is None:
+            d = _zstandard.ZstdDecompressor()
+            _ZSTD_TLS.d = d
+        return d.decompress(blob)
+
+    register_codec(
+        Codec("zstd", lambda b: _zstd_compress(b, 3), _zstd_decompress)
+    )
     # level-1 variant for write-rate-bound paths (e.g. raw volume
     # encoding); decodes with the same decompressor.  NOTE: the name must
     # fit the level2 header's 8-byte codec field.
-    _ZC1 = _zstandard.ZstdCompressor(level=1)
-    register_codec(Codec("zstd1", _ZC1.compress, _ZD.decompress))
+    register_codec(
+        Codec("zstd1", lambda b: _zstd_compress(b, 1), _zstd_decompress)
+    )
 
 
 def fast_codec() -> str:

@@ -6,9 +6,18 @@ run against any :class:`~repro.store.object_store.ObjectStore`:
 * **Immutable, content-addressed chunks** — every chunk payload is stored
   once under its sha256 address.  Identical data dedups; nothing is ever
   overwritten in place.
-* **Per-array manifests** — each array's ``chunk id → content hash`` map is
-  itself a content-addressed object, so a commit that touches one array
-  re-writes one manifest, not the archive.
+* **Sharded per-array manifests** — each array's ``chunk id → content
+  hash`` map is split into content-addressed *shards* keyed by chunk-grid
+  region along the leading (time) axis, so an append re-writes one small
+  shard, not the whole manifest: metadata bytes per commit stay
+  O(changed data), independent of archive length.  Snapshot documents
+  reference ``{array → [shard hashes]}`` (format v2); the single-manifest
+  v1 format (``{array → manifest hash}``) written by older repositories
+  is read transparently and migrated per-array on first write.
+* **Cached, concurrent reads** — every session carries an LRU decoded-
+  chunk cache plus a manifest-shard cache, and multi-chunk selections can
+  fan out over a thread pool (object-store ``get`` and codec decode both
+  release the GIL), so QVP/time-series workloads issue parallel reads.
 * **Snapshots** — a snapshot document references group/array metadata and
   manifest hashes, plus its parent snapshot.  Snapshot ids are content
   hashes of the canonical document: the same data produces the same id,
@@ -27,11 +36,13 @@ run against any :class:`~repro.store.object_store.ObjectStore`:
 
 from __future__ import annotations
 
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
-from .chunks import content_hash, encode_chunk
+from .chunks import content_hash, decode_chunk, encode_chunk
 from .codecs import get_codec, json_dumps, json_loads
 from .object_store import ObjectStore
 from .zarrlite import Array, ArrayMeta, _chunk_key
@@ -57,6 +68,45 @@ _VOLATILE_SNAPSHOT_FIELDS = ("written_at",)
 
 _EMPTY_SNAPSHOT_ID = "root"
 
+# -- manifest format -------------------------------------------------------
+# v1: snapshot["manifests"][path] is the content hash (str) of one flat
+#     {chunk key -> chunk hash} document covering the whole array.
+# v2: snapshot["manifests"][path] is a list of shard hashes (or None for
+#     all-empty shards); shard i holds the keys of chunks whose leading
+#     (time) grid coordinate falls in [i*span, (i+1)*span).  Shard
+#     membership is a pure function of the chunk id, so an append rewrites
+#     exactly the shards its chunks land in.
+MANIFEST_FORMAT = 2
+# time-chunks per manifest shard; a *v2 format constant* — changing it
+# changes which shard a chunk key belongs to, i.e. a new format version.
+MANIFEST_SHARD_CHUNKS = 8
+
+# objects younger than this survive gc even when unreferenced: staged
+# chunks/manifests/snapshots land *before* the commit CAS by design
+# (write-ahead), so a concurrent gc must not sweep an in-flight commit.
+GC_GRACE_SECONDS = 3600.0
+
+# decoded-chunk LRU budget per session (bytes)
+DEFAULT_CACHE_BYTES = 128 << 20
+# manifest-shard/manifest-object LRU entries per session
+_OBJ_CACHE_ENTRIES = 1024
+
+
+def _shard_index(chunk_key: str) -> int:
+    """Manifest shard holding ``chunk_key`` ("c<i0>/<i1>/...")."""
+    first = chunk_key[1:].split("/", 1)[0]
+    return int(first) // MANIFEST_SHARD_CHUNKS
+
+
+def _entry_shard_hashes(entry) -> List[str]:
+    """All manifest-object hashes referenced by a snapshot manifest entry
+    (v1 str or v2 list)."""
+    if entry is None:
+        return []
+    if isinstance(entry, str):
+        return [entry]
+    return [h for h in entry if h]
+
 
 @dataclass
 class CommitInfo:
@@ -70,18 +120,24 @@ class CommitInfo:
 class Repository:
     """A versioned archive: the durable half of a Radar DataTree."""
 
-    def __init__(self, store: ObjectStore):
+    def __init__(self, store: ObjectStore, *,
+                 manifest_format: int = MANIFEST_FORMAT):
+        if manifest_format not in (1, 2):
+            raise ValueError(f"unknown manifest format {manifest_format!r}")
         self.store = store
+        # the format this repository *writes*; both formats are always read
+        self.manifest_format = manifest_format
 
     # -- creation ------------------------------------------------------
     @classmethod
-    def create(cls, store_or_path, *, branch: str = "main") -> "Repository":
+    def create(cls, store_or_path, *, branch: str = "main",
+               manifest_format: int = MANIFEST_FORMAT) -> "Repository":
         store = (
             store_or_path
             if isinstance(store_or_path, ObjectStore)
             else ObjectStore(store_or_path)
         )
-        repo = cls(store)
+        repo = cls(store, manifest_format=manifest_format)
         empty = {
             "parent": None,
             "message": "repository created",
@@ -97,13 +153,14 @@ class Repository:
         return repo
 
     @classmethod
-    def open(cls, store_or_path) -> "Repository":
+    def open(cls, store_or_path, *,
+             manifest_format: int = MANIFEST_FORMAT) -> "Repository":
         store = (
             store_or_path
             if isinstance(store_or_path, ObjectStore)
             else ObjectStore(store_or_path)
         )
-        return cls(store)
+        return cls(store, manifest_format=manifest_format)
 
     # -- refs ------------------------------------------------------------
     @staticmethod
@@ -124,7 +181,8 @@ class Repository:
         out = []
         for key in self.store.list("refs/"):
             name = key.rsplit("/", 1)[-1]
-            if name.startswith("branch."):
+            # ignore transient CAS .lock files a racing commit may hold
+            if name.startswith("branch.") and name.endswith(".json"):
                 out.append(name[len("branch."):-len(".json")])
         return sorted(out)
 
@@ -191,22 +249,47 @@ class Repository:
     def readonly_session(
         self, *, branch: str = "main", snapshot_id: Optional[str] = None,
         tag: Optional[str] = None,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
+        read_workers: int = 1,
     ) -> "Session":
         if snapshot_id is None:
             snapshot_id = self.tag_head(tag) if tag else self.branch_head(branch)
-        return Session(self, snapshot_id, writable=False)
+        return Session(self, snapshot_id, writable=False,
+                       cache_bytes=cache_bytes, read_workers=read_workers)
 
-    def writable_session(self, branch: str = "main") -> "Transaction":
+    def writable_session(self, branch: str = "main",
+                         **session_kw) -> "Transaction":
         head = self.branch_head(branch)
-        return Transaction(self, branch, head)
+        return Transaction(self, branch, head, **session_kw)
 
     # -- garbage collection --------------------------------------------
-    def gc(self) -> Dict[str, int]:
-        """Mark-and-sweep unreferenced chunks/manifests/snapshots."""
+    def gc(self, *, grace_seconds: float = GC_GRACE_SECONDS) -> Dict[str, int]:
+        """Mark-and-sweep unreferenced chunks/manifests/snapshots.
+
+        Unreferenced objects younger than ``grace_seconds`` are kept: a
+        transaction persists chunk payloads, manifest shards and its
+        snapshot document *before* the branch-ref CAS (write-ahead), so an
+        object can legitimately be unreferenced for the duration of an
+        in-flight commit.  ``grace_seconds=0`` restores the aggressive
+        sweep (only safe when no writer can be mid-commit).
+        """
+        now = time.time()
+
+        def expendable(key: str) -> bool:
+            try:
+                return now - self.store.mtime(key) >= grace_seconds
+            except KeyError:  # raced with another delete
+                return False
+
         live_snaps: set = set()
         stack = []
         for key in self.store.list("refs/"):
-            stack.append(_loads(self.store.get(key))["snapshot"])
+            if not key.endswith(".json"):
+                continue  # transient CAS .lock file of an in-flight commit
+            try:
+                stack.append(_loads(self.store.get(key))["snapshot"])
+            except KeyError:  # ref deleted between list and get
+                continue
         while stack:
             sid = stack.pop()
             if sid in live_snaps:
@@ -219,36 +302,112 @@ class Repository:
         live_chunks: set = set()
         for sid in live_snaps:
             doc = self._read_snapshot(sid)
-            for mh in doc["manifests"].values():
-                live_manifests.add(mh)
+            for entry in doc["manifests"].values():
+                live_manifests.update(_entry_shard_hashes(entry))
         for mh in live_manifests:
             manifest = _loads(self.store.get(f"manifests/{mh}.json"))
             live_chunks.update(manifest.values())
         removed = {"snapshots": 0, "manifests": 0, "chunks": 0}
         for key in list(self.store.list("snapshots/")):
-            if key.rsplit("/", 1)[-1][:-len(".json")] not in live_snaps:
+            if (key.rsplit("/", 1)[-1][:-len(".json")] not in live_snaps
+                    and expendable(key)):
                 self.store.delete(key)
                 removed["snapshots"] += 1
         for key in list(self.store.list("manifests/")):
-            if key.rsplit("/", 1)[-1][:-len(".json")] not in live_manifests:
+            if (key.rsplit("/", 1)[-1][:-len(".json")] not in live_manifests
+                    and expendable(key)):
                 self.store.delete(key)
                 removed["manifests"] += 1
         for key in list(self.store.list("chunks/")):
-            if key.rsplit("/", 1)[-1] not in live_chunks:
+            if (key.rsplit("/", 1)[-1] not in live_chunks
+                    and expendable(key)):
                 self.store.delete(key)
                 removed["chunks"] += 1
         return removed
 
 
 class Session:
-    """Read view pinned to one snapshot (snapshot isolation)."""
+    """Read view pinned to one snapshot (snapshot isolation).
 
-    def __init__(self, repo: Repository, snapshot_id: str, *, writable: bool):
+    Carries two LRU caches shared by all arrays it opens — decoded chunks
+    (budgeted in bytes) and manifest shards (budgeted in entries) — plus an
+    optional reader thread pool (``read_workers``) that
+    :meth:`~repro.store.zarrlite.Array.__getitem__` fans multi-chunk
+    selections out over.  Cached chunks are read-only and keyed by content
+    hash, so they are immutable by construction; writers always mutate
+    private copies.
+    """
+
+    def __init__(self, repo: Repository, snapshot_id: str, *, writable: bool,
+                 cache_bytes: int = DEFAULT_CACHE_BYTES,
+                 read_workers: int = 1):
         self.repo = repo
         self.snapshot_id = snapshot_id
         self.writable = writable
         self._doc = repo._read_snapshot(snapshot_id)
         self._manifest_cache: Dict[str, Dict[str, str]] = {}
+        self.cache_bytes = int(cache_bytes)
+        self.read_workers = max(1, int(read_workers))
+        # externally shared executor wins over the session-owned one (the
+        # ETL pipeline lends its ingest pool here)
+        self.read_pool = None
+        self._own_pool = None
+        self._cache_lock = threading.Lock()
+        # manifest-object cache: shard/manifest hash -> {chunk key -> ref}
+        self._obj_cache: "OrderedDict[str, Dict[str, str]]" = OrderedDict()
+        # decoded-chunk cache: (ref, chunks, dtype, codec) -> read-only array
+        self._chunk_cache: "OrderedDict[Tuple, Any]" = OrderedDict()
+        self._chunk_cache_nbytes = 0
+
+    # -- caches / concurrency ------------------------------------------
+    def reader_pool(self):
+        """Executor for multi-chunk read fan-out; None means read serially."""
+        if self.read_pool is not None:
+            return self.read_pool
+        if self.read_workers <= 1:
+            return None
+        with self._cache_lock:  # two first-readers must not both build one
+            if self._own_pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+
+                self._own_pool = ThreadPoolExecutor(
+                    max_workers=self.read_workers,
+                    thread_name_prefix="repro-read",
+                )
+            return self._own_pool
+
+    def close(self) -> None:
+        """Release the session-owned reader pool (caches die with the
+        session object)."""
+        if self._own_pool is not None:
+            self._own_pool.shutdown(wait=False)
+            self._own_pool = None
+
+    def cache_stats(self) -> Dict[str, int]:
+        with self._cache_lock:
+            return {
+                "chunk_entries": len(self._chunk_cache),
+                "chunk_bytes": self._chunk_cache_nbytes,
+                "manifest_entries": len(self._obj_cache),
+            }
+
+    def _obj_cache_put(self, mh: str, obj: Dict[str, str]) -> None:
+        with self._cache_lock:
+            self._obj_cache[mh] = obj
+            self._obj_cache.move_to_end(mh)
+            while len(self._obj_cache) > _OBJ_CACHE_ENTRIES:
+                self._obj_cache.popitem(last=False)
+
+    def _manifest_obj(self, mh: str) -> Dict[str, str]:
+        """One manifest object (v2 shard or v1 flat map), LRU-cached."""
+        with self._cache_lock:
+            obj = self._obj_cache.get(mh)
+            if obj is not None:
+                self._obj_cache.move_to_end(mh)
+                return obj
+        obj = _loads(self.repo.store.get(f"manifests/{mh}.json"))
+        self._obj_cache_put(mh, obj)
+        return obj
 
     # -- structure -------------------------------------------------------
     def list_groups(self) -> List[str]:
@@ -275,21 +434,69 @@ class Session:
 
     # -- chunk plumbing (used by zarrlite.Array) -----------------------
     def _manifest(self, array_path: str) -> Dict[str, str]:
+        """Full merged chunk map for one array (commit/gc path — reads
+        every shard; partial reads go through :meth:`chunk_ref` instead)."""
         if array_path not in self._manifest_cache:
-            mh = self._doc["manifests"].get(array_path)
-            if mh is None:
-                self._manifest_cache[array_path] = {}
-            else:
-                self._manifest_cache[array_path] = _loads(
-                    self.repo.store.get(f"manifests/{mh}.json")
-                )
+            entry = self._doc["manifests"].get(array_path)
+            if entry is None:
+                merged: Dict[str, str] = {}
+            elif isinstance(entry, str):  # v1: one flat map
+                merged = dict(self._manifest_obj(entry))
+            else:  # v2: merge shards (disjoint by construction)
+                merged = {}
+                for sh in entry:
+                    if sh:
+                        merged.update(self._manifest_obj(sh))
+            self._manifest_cache[array_path] = merged
         return self._manifest_cache[array_path]
 
     def chunk_ref(self, array_path: str, cid: Sequence[int]) -> Optional[str]:
-        return self._manifest(array_path).get(_chunk_key(tuple(cid)))
+        key = _chunk_key(tuple(cid))
+        entry = self._doc["manifests"].get(array_path)
+        if entry is None:
+            return None
+        if isinstance(entry, str):  # v1
+            return self._manifest_obj(entry).get(key)
+        si = _shard_index(key)
+        if si >= len(entry) or not entry[si]:
+            return None
+        return self._manifest_obj(entry[si]).get(key)
 
     def get_blob(self, ref: str) -> bytes:
         return self.repo.store.get(f"chunks/{ref}")
+
+    def decoded_chunk(self, array_path: str, cid,
+                      meta: ArrayMeta) -> Optional[Any]:
+        """Decoded chunk at full padded shape, **read-only**, LRU-cached.
+
+        Returns None when the chunk was never written (caller substitutes
+        fill value).  The cache key is the chunk's content hash plus its
+        decode parameters, so identical payloads shared by several arrays
+        decode once.
+        """
+        ref = self.chunk_ref(array_path, cid)
+        if ref is None:
+            return None
+        key = (ref, tuple(meta.chunks), meta.dtype, meta.codec)
+        with self._cache_lock:
+            hit = self._chunk_cache.get(key)
+            if hit is not None:
+                self._chunk_cache.move_to_end(key)
+                return hit
+        blob = self.get_blob(ref)
+        chunk = decode_chunk(blob, tuple(meta.chunks), meta.dtype,
+                             meta.codec, writable=False)
+        with self._cache_lock:
+            winner = self._chunk_cache.get(key)
+            if winner is not None:  # lost a decode race: share the winner
+                return winner
+            self._chunk_cache[key] = chunk
+            self._chunk_cache_nbytes += chunk.nbytes
+            while (self._chunk_cache_nbytes > self.cache_bytes
+                   and self._chunk_cache):
+                _, old = self._chunk_cache.popitem(last=False)
+                self._chunk_cache_nbytes -= old.nbytes
+        return chunk
 
     def staged_chunk_array(self, array_path: str, cid) -> Optional[Any]:
         """Decoded chunk staged in this session, if any (None when pinned)."""
@@ -305,8 +512,9 @@ class Session:
 class Transaction(Session):
     """Writable session: stages changes, commits atomically."""
 
-    def __init__(self, repo: Repository, branch: str, head: str):
-        super().__init__(repo, head, writable=True)
+    def __init__(self, repo: Repository, branch: str, head: str,
+                 **session_kw):
+        super().__init__(repo, head, writable=True, **session_kw)
         self.branch = branch
         self._staged_chunks: Dict[str, Dict[str, str]] = {}  # path -> key -> hash
         # decoded chunks not yet encoded: path -> key -> ndarray.  Encoding
@@ -340,6 +548,11 @@ class Transaction(Session):
     def update_group_attrs(self, path: str, attrs: Dict[str, Any]) -> None:
         self.create_group(path)
         self._doc["groups"][path.strip("/")].update(attrs)
+        # mark touched even when the group already existed: a rebase would
+        # otherwise adopt the other writer's version of this group and
+        # silently drop the attr update, and two writers updating the same
+        # group would never be detected as a conflict
+        self._touched.add(path.strip("/"))
 
     def create_array(
         self,
@@ -522,15 +735,54 @@ class Transaction(Session):
         for path, key, ref in encoded:
             self._staged_chunks.setdefault(path, {})[key] = ref
         self._staged_arrays.clear()
+    def _put_manifest_obj(self, obj: Dict[str, str]) -> str:
+        """Persist one content-addressed manifest object; seed the cache."""
+        blob = _dumps(obj)
+        mh = content_hash(blob)
+        self.repo.store.put(f"manifests/{mh}.json", blob, if_not_exists=True)
+        self._obj_cache_put(mh, obj)
+        return mh
+
+    def _sharded_entry(self, array_path: str,
+                       staged: Dict[str, str]) -> List[Optional[str]]:
+        """Merge staged chunk refs into the array's v2 shard list, writing
+        only the shards that received new keys (plus a one-time v1→v2
+        split when the array still carries a flat v1 manifest)."""
+        entry = self._doc["manifests"].get(array_path)
+        if isinstance(entry, list):
+            shards: List[Optional[str]] = list(entry)
+        elif isinstance(entry, str):
+            split: Dict[int, Dict[str, str]] = {}
+            for key, ref in self._manifest_obj(entry).items():
+                split.setdefault(_shard_index(key), {})[key] = ref
+            shards = []
+            for si, m in sorted(split.items()):
+                while len(shards) <= si:
+                    shards.append(None)
+                shards[si] = self._put_manifest_obj(m)
+        else:
+            shards = []
+        by_shard: Dict[int, Dict[str, str]] = {}
+        for key, ref in staged.items():
+            by_shard.setdefault(_shard_index(key), {})[key] = ref
+        for si, add in sorted(by_shard.items()):
+            while len(shards) <= si:
+                shards.append(None)
+            base = dict(self._manifest_obj(shards[si])) if shards[si] else {}
+            base.update(add)
+            shards[si] = self._put_manifest_obj(base)
+        return shards
+
     def _build_snapshot_doc(self, message: str) -> Dict[str, Any]:
         manifests = dict(self._doc["manifests"])
         for array_path, staged in self._staged_chunks.items():
-            merged = dict(self._manifest(array_path))
-            merged.update(staged)
-            blob = _dumps(merged)
-            mh = content_hash(blob)
-            self.repo.store.put(f"manifests/{mh}.json", blob, if_not_exists=True)
-            manifests[array_path] = mh
+            if self.repo.manifest_format == 1:
+                merged = dict(self._manifest(array_path))
+                merged.update(staged)
+                manifests[array_path] = self._put_manifest_obj(merged)
+            else:
+                manifests[array_path] = self._sharded_entry(array_path,
+                                                            staged)
         return {
             "parent": self.snapshot_id,
             "message": message,

@@ -43,7 +43,17 @@ class ObjectStore:
         """
         path = self._path(key)
         if if_not_exists and os.path.exists(path):
-            return False
+            # refresh LastModified even when dedup skips the write: callers
+            # use if_not_exists for write-ahead content-addressed objects,
+            # and the gc grace window keys off mtime — an old orphaned
+            # object being re-staged must look freshly written or a
+            # concurrent gc could sweep it out from under an in-flight
+            # commit.  (A cloud store would issue the equivalent touch.)
+            try:
+                os.utime(path)
+                return False
+            except FileNotFoundError:
+                pass  # deleted between exists() and utime(): write below
         os.makedirs(os.path.dirname(path), exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), prefix=".tmp-")
         try:
@@ -65,6 +75,18 @@ class ObjectStore:
 
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))
+
+    def mtime(self, key: str) -> float:
+        """Last-modified time (epoch seconds) of an object.
+
+        Cloud object stores expose this as the LastModified attribute; the
+        GC grace window uses it to avoid sweeping objects that an in-flight
+        transaction wrote ahead of its commit CAS.
+        """
+        try:
+            return os.stat(self._path(key)).st_mtime
+        except FileNotFoundError:
+            raise KeyError(key) from None
 
     def delete(self, key: str) -> None:
         try:

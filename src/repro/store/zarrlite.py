@@ -17,7 +17,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .chunks import ChunkGrid, content_hash, decode_chunk, encode_chunk
+from .chunks import ChunkGrid
 from .codecs import default_codec
 
 
@@ -83,6 +83,16 @@ class Array:
     def attrs(self) -> Dict[str, Any]:
         return self.meta.attrs
 
+    def _normalize_int(self, ax: int, s: int) -> int:
+        dim = self.meta.shape[ax]
+        if s < 0:
+            s += dim
+        if not 0 <= s < dim:
+            raise IndexError(
+                f"index {s} out of bounds for axis {ax} with size {dim}"
+            )
+        return s
+
     def __getitem__(self, selection) -> np.ndarray:
         if not isinstance(selection, tuple):
             selection = (selection,)
@@ -90,9 +100,8 @@ class Array:
         squeeze_axes = []
         sels = []
         for ax, s in enumerate(selection):
-            if isinstance(s, int):
-                if s < 0:
-                    s += self.meta.shape[ax]
+            if isinstance(s, (int, np.integer)):
+                s = self._normalize_int(ax, int(s))
                 sels.append(slice(s, s + 1))
                 squeeze_axes.append(ax)
             else:
@@ -103,7 +112,8 @@ class Array:
         out_shape = tuple(max(0, b[1] - b[0]) for b in bounds)
         out = np.full(out_shape, self.meta.fill_value, dtype=self.dtype)
         grid = self.meta.grid
-        for cid in grid.chunks_for_selection(sels):
+
+        def fill_from(cid) -> None:
             cslices = grid.chunk_slices(cid)
             chunk = self._read_chunk(cid)
             # intersection of chunk extent and request, in both frames
@@ -114,6 +124,16 @@ class Array:
                 src.append(slice(lo - cs.start, hi - cs.start))
                 dst.append(slice(lo - b[0], hi - b[0]))
             out[tuple(dst)] = chunk[tuple(src)]
+
+        cids = list(grid.chunks_for_selection(sels))
+        pool = self._session.reader_pool() if len(cids) > 1 else None
+        if pool is None:
+            for cid in cids:
+                fill_from(cid)
+        else:
+            # destination regions are disjoint per chunk, so concurrent
+            # fills never overlap; store get + codec decode release the GIL
+            list(pool.map(fill_from, cids))
         if squeeze_axes:
             out = np.squeeze(out, axis=tuple(squeeze_axes))
         return out
@@ -132,15 +152,18 @@ class Array:
         actual = self.meta.grid.chunk_shape(cid)
         return full[tuple(slice(0, s) for s in actual)]
 
-    def _read_chunk_padded(self, cid) -> np.ndarray:
+    def _read_chunk_padded(self, cid, *, writable: bool = False) -> np.ndarray:
+        """Full padded chunk.  The default return may be a **read-only**
+        array shared via the session's chunk cache; pass ``writable=True``
+        to get a private mutable copy (the RMW write path)."""
         staged = self._session.staged_chunk_array(self.path, cid)
         if staged is not None:
-            return staged
-        ref = self._session.chunk_ref(self.path, cid)
-        if ref is None:
-            return np.full(self.meta.chunks, self.meta.fill_value, dtype=self.dtype)
-        blob = self._session.get_blob(ref)
-        return decode_chunk(blob, self.meta.chunks, self.dtype, self.meta.codec)
+            return staged  # already private to this transaction
+        chunk = self._session.decoded_chunk(self.path, cid, self.meta)
+        if chunk is None:
+            return np.full(self.meta.chunks, self.meta.fill_value,
+                           dtype=self.dtype)
+        return chunk.copy() if writable else chunk
 
     # -- writes (require an open transaction) ------------------------------
     def __setitem__(self, selection, value) -> None:
@@ -149,9 +172,17 @@ class Array:
         sels = list(selection)
         while len(sels) < len(self.meta.shape):
             sels.append(slice(None))
-        sels = [
-            slice(s, s + 1) if isinstance(s, int) else s for s in sels
-        ]
+        # normalize ints exactly like __getitem__ — in particular negative
+        # indices, which previously produced an empty slice here and made
+        # ``arr[-1] = x`` a silent no-op
+        norm = []
+        for ax, s in enumerate(sels):
+            if isinstance(s, (int, np.integer)):
+                i = self._normalize_int(ax, int(s))
+                norm.append(slice(i, i + 1))
+            else:
+                norm.append(s)
+        sels = norm
         bounds = [sl.indices(dim) for sl, dim in zip(sels, self.meta.shape)]
         value = np.asarray(value, dtype=self.dtype)
         req_shape = tuple(max(0, b[1] - b[0]) for b in bounds)
@@ -180,8 +211,9 @@ class Array:
                 # read-modify-write at full padded chunk shape; if the chunk
                 # is already staged decoded, this mutates it in place and
                 # re-staging is a no-op — repeated appends to the same time
-                # chunk pay the codec exactly once, at commit
-                chunk = self._read_chunk_padded(cid)
+                # chunk pay the codec exactly once, at commit.  writable=True
+                # keeps the mutation off the session's shared read cache.
+                chunk = self._read_chunk_padded(cid, writable=True)
                 chunk[tuple(dst)] = value[tuple(src)]
             self._session.stage_chunk_array(self.path, cid, chunk)
 

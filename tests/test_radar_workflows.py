@@ -113,6 +113,34 @@ def test_point_series_datatree_matches_filebased(small_archive):
     np.testing.assert_allclose(got.values, want.values, rtol=1e-4, atol=1e-4)
 
 
+def test_point_series_wraps_azimuth_seam(small_archive):
+    """Regression: the gate neighbourhood used to be clamped at azimuth
+    index 0/N instead of wrapping the circular axis; both baselines must
+    wrap and agree, and the wrapped window must match a direct np.take."""
+    _raw, repo, volumes, _report = small_archive
+    session = RadarArchive(repo).session()
+    # az 0.0° sits on the seam: the nearest azimuth row is index 0, so a
+    # halfwidth-2 window spans rows [-2..2] i.e. wraps through N-1
+    got = point_series_from_session(
+        session, vcp="VCP-212", az_deg=0.0, range_m=20_000.0, halfwidth=2
+    )
+    want = point_series_from_volumes(
+        volumes, az_deg=0.0, range_m=20_000.0, halfwidth=2
+    )
+    assert got.az_idx == want.az_idx == 0
+    np.testing.assert_allclose(got.values, want.values, rtol=1e-4, atol=1e-4)
+    # pin against a direct wrapped-window computation on the raw volumes
+    expect = []
+    for vol in volumes:
+        sw = vol["sweeps"][0]
+        m = sw["moments"]["DBZH"]
+        ri = got.rng_idx
+        rows = np.take(m, np.arange(-2, 3), axis=0, mode="wrap")
+        expect.append(np.nanmedian(rows[:, max(0, ri - 2): ri + 3]))
+    np.testing.assert_allclose(got.values, np.asarray(expect, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_qvp_time_slice_partial_read(small_archive):
     _raw, repo, _vols, _report = small_archive
     session = RadarArchive(repo).session()

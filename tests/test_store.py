@@ -167,6 +167,33 @@ def test_staged_writes_isolated_from_caller_buffer(repo):
     )
 
 
+def test_negative_int_read_and_write(repo):
+    """Regression: ``arr[-1] = x`` used to be a silent no-op (negative ints
+    were normalized in __getitem__ but not __setitem__)."""
+    tx = repo.writable_session()
+    data = np.arange(24, dtype="float32").reshape(6, 4)
+    a = tx.create_array("neg", shape=(6, 4), dtype="float32", chunks=(2, 4))
+    a.write_full(data)
+    a[-1] = 99.0
+    a[-2, -1] = -7.0
+    tx.commit("neg writes")
+    out = repo.readonly_session().array("neg")
+    np.testing.assert_array_equal(out[-1], np.full(4, 99.0))
+    np.testing.assert_array_equal(out[5], np.full(4, 99.0))
+    assert out[-2, -1] == -7.0
+    assert out[4, 3] == -7.0
+    np.testing.assert_array_equal(out[0], data[0])
+
+
+def test_int_index_out_of_bounds_raises(repo):
+    tx = repo.writable_session()
+    a = tx.create_array("oob", shape=(3,), dtype="float32", chunks=(3,))
+    with pytest.raises(IndexError):
+        a[3]
+    with pytest.raises(IndexError):
+        a[-4] = 1.0
+
+
 def test_unwritten_chunks_read_fill_value(repo):
     tx = repo.writable_session()
     tx.create_array("sparse", shape=(6, 6), dtype="float32", chunks=(2, 2))
@@ -262,6 +289,99 @@ def test_overlapping_commits_conflict(repo):
     t1.commit("w1")
     with pytest.raises(ConflictError):
         t2.commit("w2")
+
+
+def test_group_attr_update_conflicts_with_concurrent_writer(repo):
+    """Regression: update_group_attrs did not mark the path touched, so a
+    racing commit rebased right over the attr update and silently lost it."""
+    tx = repo.writable_session()
+    tx.create_group("site", {"name": "KVNX"})
+    tx.commit("init")
+    t1 = repo.writable_session()
+    t2 = repo.writable_session()
+    t1.update_group_attrs("site", {"name": "KABC"})
+    t2.update_group_attrs("site", {"name": "KXYZ"})
+    t1.commit("rename 1")
+    with pytest.raises(ConflictError):
+        t2.commit("rename 2")
+    assert repo.readonly_session().group_attrs("site")["name"] == "KABC"
+
+
+def test_group_attr_update_survives_disjoint_rebase(repo):
+    """Two-writer rebase: a group-attr update on one path must survive a
+    concurrent commit to a different path."""
+    t1 = repo.writable_session()
+    t2 = repo.writable_session()
+    t1.update_group_attrs("meta", {"calibrated": True})
+    t2.create_array("other/x", shape=(2,), dtype="int32",
+                    chunks=(2,)).write_full(np.array([1, 2], dtype="int32"))
+    t2.commit("other")          # lands first; t1 must rebase
+    t1.commit("meta attrs")
+    s = repo.readonly_session()
+    assert s.group_attrs("meta")["calibrated"] is True
+    np.testing.assert_array_equal(s.array("other/x").read(), [1, 2])
+
+
+def test_gc_grace_protects_inflight_commit(repo):
+    """A concurrent gc (default grace) must not break a pending commit whose
+    write-ahead chunks have landed but whose ref CAS hasn't happened yet."""
+    tx = repo.writable_session()
+    data = np.arange(8, dtype="float32")
+    tx.create_array("wal", shape=(8,), dtype="float32",
+                    chunks=(2,)).write_full(data)
+    tx._flush_staged_arrays()       # chunks persisted, commit still pending
+    repo.gc()                       # concurrent sweep with the grace window
+    tx.commit("after gc")
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("wal").read(), data
+    )
+
+
+def test_gc_grace_survives_dedup_against_old_orphan(repo):
+    """A re-staged chunk that dedups against an *old* orphaned object must
+    look freshly written (mtime refreshed), or a concurrent gc sweeps it
+    out from under the in-flight commit."""
+    import os
+    data = np.arange(6, dtype="float32")
+    orphan = repo.writable_session()
+    orphan.create_array("x", shape=(6,), dtype="float32",
+                        chunks=(6,)).write_full(data)
+    orphan._flush_staged_arrays()
+    orphan.abort()                     # chunk object left behind, unreferenced
+    (chunk_key,) = list(repo.store.list("chunks/"))
+    # age the orphan far past any grace window
+    old = repo.store.mtime(chunk_key) - 7200
+    os.utime(repo.store._path(chunk_key), (old, old))
+    # a new transaction stages identical content: put dedups, but must
+    # restart the object's grace clock
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(6,), dtype="float32",
+                    chunks=(6,)).write_full(data)
+    tx._flush_staged_arrays()
+    removed = repo.gc()                # concurrent gc, default grace
+    assert removed["chunks"] == 0, "swept a write-ahead chunk mid-commit"
+    tx.commit("after gc")
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("x").read(), data
+    )
+
+
+def test_gc_zero_grace_sweeps_orphans(repo):
+    tx = repo.writable_session()
+    tx.create_array("keep", shape=(2,), dtype="int32",
+                    chunks=(2,)).write_full(np.array([1, 2], dtype="int32"))
+    tx.commit("keep")
+    orphan = repo.writable_session()
+    orphan.array("keep").write_full(np.array([8, 9], dtype="int32"))
+    orphan._flush_staged_arrays()
+    orphan.abort()                  # chunks now unreferenced forever
+    before = len(list(repo.store.list("chunks/")))
+    removed = repo.gc(grace_seconds=0)
+    after = len(list(repo.store.list("chunks/")))
+    assert removed["chunks"] >= 1 and after < before
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("keep").read(), [1, 2]
+    )
 
 
 def test_rollback_and_bitwise_reproducibility(repo):

@@ -1,0 +1,246 @@
+"""Manifest shard format (v2) + cached/concurrent read path.
+
+Pins the properties this layer exists for: bounded metadata cost per
+append (O(changed shards), not O(archive length)), transparent v1
+compatibility, content-address determinism across formats and worker
+counts, and cache/parallel-read correctness.
+"""
+
+import numpy as np
+import pytest
+
+from repro.store import (
+    MANIFEST_SHARD_CHUNKS,
+    ObjectStore,
+    Repository,
+)
+from repro.store.icechunk import _shard_index
+from repro.store.zarrlite import _chunk_key
+
+
+@pytest.fixture
+def repo(tmp_path):
+    return Repository.create(str(tmp_path / "repo"))
+
+
+def _manifest_keys_sizes(repo):
+    return {k: len(repo.store.get(k)) for k in repo.store.list("manifests/")}
+
+
+def _append_row(repo, path, i, width, value=None):
+    tx = repo.writable_session()
+    a = tx.resize_array(path, (i + 1, width))
+    a[i] = np.full(width, i if value is None else value, dtype="float32")
+    return tx.commit(f"append {i}")
+
+
+def _fresh_series_repo(root, *, manifest_format=2, width=16):
+    repo = Repository.create(str(root), manifest_format=manifest_format)
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(0, width), dtype="float32", chunks=(1, width))
+    tx.commit("init")
+    return repo
+
+
+# ---------------------------------------------------------------------------
+# format shape
+# ---------------------------------------------------------------------------
+
+def test_shard_index_is_time_chunk_aligned():
+    assert _shard_index(_chunk_key((0, 3, 9))) == 0
+    assert _shard_index(_chunk_key((MANIFEST_SHARD_CHUNKS - 1, 0))) == 0
+    assert _shard_index(_chunk_key((MANIFEST_SHARD_CHUNKS, 0))) == 1
+    assert _shard_index(_chunk_key((5 * MANIFEST_SHARD_CHUNKS + 2,))) == 5
+    assert _shard_index(_chunk_key(())) == 0  # scalar arrays: shard 0
+
+
+def test_v2_snapshot_references_shard_lists(repo):
+    tx = repo.writable_session()
+    a = tx.create_array("x", shape=(4, 4), dtype="float32", chunks=(2, 4))
+    a.write_full(np.ones((4, 4), dtype="float32"))
+    tx.commit("w")
+    entry = repo.readonly_session()._doc["manifests"]["x"]
+    assert isinstance(entry, list) and all(
+        h is None or isinstance(h, str) for h in entry
+    )
+
+
+def test_append_rewrites_only_the_tail_shard(tmp_path):
+    repo = _fresh_series_repo(tmp_path / "r")
+    n = 3 * MANIFEST_SHARD_CHUNKS  # three full shards of time chunks
+    for i in range(n):
+        _append_row(repo, "x", i, 16)
+    # crossing a shard boundary opens exactly one new shard; the full
+    # shards behind it are never rewritten
+    entry_full = repo.readonly_session()._doc["manifests"]["x"]
+    before = set(_manifest_keys_sizes(repo))
+    _append_row(repo, "x", n, 16)
+    after = _manifest_keys_sizes(repo)
+    new = set(after) - before
+    assert len(new) == 1, f"append wrote {len(new)} manifest objects"
+    entry_after = repo.readonly_session()._doc["manifests"]["x"]
+    assert entry_after[: len(entry_full)] == entry_full
+    # an append *within* the tail shard rewrites only that shard
+    before = set(after)
+    _append_row(repo, "x", n + 1, 16)
+    after = _manifest_keys_sizes(repo)
+    new = set(after) - before
+    assert len(new) == 1, f"append wrote {len(new)} manifest objects"
+    entry_last = repo.readonly_session()._doc["manifests"]["x"]
+    assert entry_last[:-1] == entry_after[:-1]
+    assert entry_last[-1] != entry_after[-1]
+    # and the new shard is small: it holds at most one shard's worth of keys
+    (new_key,) = new
+    assert after[new_key] <= MANIFEST_SHARD_CHUNKS * 60
+
+
+def test_manifest_bytes_per_append_bounded(tmp_path):
+    """The acceptance property: per-append manifest bytes stay roughly
+    constant in archive length at v2, but grow linearly at v1."""
+
+    def bytes_per_append(fmt):
+        repo = _fresh_series_repo(tmp_path / f"fmt{fmt}", manifest_format=fmt)
+        sizes = []
+        for i in range(4 * MANIFEST_SHARD_CHUNKS):
+            before = set(_manifest_keys_sizes(repo))
+            _append_row(repo, "x", i, 16)
+            after = _manifest_keys_sizes(repo)
+            sizes.append(sum(v for k, v in after.items() if k not in before))
+        return sizes
+
+    v1 = bytes_per_append(1)
+    v2 = bytes_per_append(2)
+    assert v1[-1] > 4 * v1[0], "v1 should grow linearly with archive length"
+    assert v2[-1] <= 2 * max(v2[:MANIFEST_SHARD_CHUNKS]), (
+        f"v2 should be O(1) in archive length: first-shard appends "
+        f"{v2[:MANIFEST_SHARD_CHUNKS]}, last append {v2[-1]}"
+    )
+    assert v2[-1] < v1[-1]
+
+
+# ---------------------------------------------------------------------------
+# v1 compatibility
+# ---------------------------------------------------------------------------
+
+def test_v1_repository_reads_back_bit_identically(tmp_path):
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((10, 8)).astype("float32")
+    old = _fresh_series_repo(tmp_path / "old", manifest_format=1, width=8)
+    for i in range(10):
+        tx = old.writable_session()
+        a = tx.resize_array("x", (i + 1, 8))
+        a[i] = data[i]
+        tx.commit(f"v1 append {i}")
+    entry = old.readonly_session()._doc["manifests"]["x"]
+    assert isinstance(entry, str), "precondition: v1 flat manifest"
+    # reopen with the current (v2-writing) code: reads are bit-identical
+    reopened = Repository.open(old.store)
+    got = reopened.readonly_session().array("x").read()
+    assert got.tobytes() == data.tobytes()
+
+
+def test_v1_array_migrates_to_shards_on_first_write(tmp_path):
+    old = _fresh_series_repo(tmp_path / "old", manifest_format=1, width=8)
+    for i in range(3):
+        _append_row(old, "x", i, 8)
+    sid_v1 = old.branch_head()
+    repo = Repository.open(old.store)  # v2 writer over v1 data
+    _append_row(repo, "x", 3, 8)
+    s = repo.readonly_session()
+    assert isinstance(s._doc["manifests"]["x"], list), "migrated to v2"
+    want = np.stack([np.full(8, i, dtype="float32") for i in range(4)])
+    np.testing.assert_array_equal(s.array("x").read(), want)
+    # time travel to the v1 snapshot still works
+    np.testing.assert_array_equal(
+        repo.readonly_session(snapshot_id=sid_v1).array("x").read(), want[:3]
+    )
+
+
+def test_same_data_same_snapshot_id_per_format(tmp_path):
+    """Content addressing stays deterministic: identical writes produce
+    identical snapshot ids (within one manifest format)."""
+
+    def build(root, fmt):
+        repo = _fresh_series_repo(root, manifest_format=fmt)
+        sids = [_append_row(repo, "x", i, 16) for i in range(6)]
+        return sids
+
+    assert build(tmp_path / "a", 2) == build(tmp_path / "b", 2)
+    assert build(tmp_path / "c", 1) == build(tmp_path / "d", 1)
+
+
+def test_gc_collects_and_keeps_shards_correctly(tmp_path):
+    repo = _fresh_series_repo(tmp_path / "r")
+    for i in range(2 * MANIFEST_SHARD_CHUNKS):
+        _append_row(repo, "x", i, 16)
+    removed = repo.gc(grace_seconds=0)
+    # superseded tail-shard versions are unreferenced by any snapshot in
+    # history?  no — every snapshot in history references its own shard
+    # list, so nothing live may vanish; reads must survive a zero-grace gc
+    data = repo.readonly_session().array("x").read()
+    assert data.shape == (2 * MANIFEST_SHARD_CHUNKS, 16)
+    for i in range(2 * MANIFEST_SHARD_CHUNKS):
+        assert (data[i] == i).all()
+    assert removed["snapshots"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cached + parallel reads
+# ---------------------------------------------------------------------------
+
+def test_parallel_read_matches_serial(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    rng = np.random.default_rng(3)
+    data = rng.standard_normal((32, 24, 17)).astype("float32")
+    tx = repo.writable_session()
+    tx.create_array("v", shape=data.shape, dtype="float32",
+                    chunks=(4, 8, 8)).write_full(data)
+    tx.commit("w")
+    serial = repo.readonly_session()
+    parallel = repo.readonly_session(read_workers=4)
+    try:
+        np.testing.assert_array_equal(parallel.array("v").read(), data)
+        np.testing.assert_array_equal(
+            parallel.array("v")[3:29, 5:20, 2:],
+            serial.array("v")[3:29, 5:20, 2:],
+        )
+        np.testing.assert_array_equal(parallel.array("v")[-1], data[-1])
+    finally:
+        parallel.close()
+
+
+def test_chunk_cache_hit_and_isolation(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    data = np.arange(64, dtype="float32").reshape(8, 8)
+    tx = repo.writable_session()
+    tx.create_array("v", shape=(8, 8), dtype="float32",
+                    chunks=(4, 4)).write_full(data)
+    tx.commit("w")
+    s = repo.readonly_session()
+    first = s.array("v").read()
+    assert s.cache_stats()["chunk_entries"] == 4
+    # a writer mutating the same chunks must not corrupt the reader's cache
+    tx = repo.writable_session()
+    tx.array("v")[0, 0] = -1.0     # RMW: reads through its own cache
+    tx.commit("mutate")
+    np.testing.assert_array_equal(s.array("v").read(), first)  # pinned+cached
+    assert repo.readonly_session().array("v")[0, 0] == -1.0
+    # results handed to callers are private: writing into them is safe
+    out = s.array("v").read()
+    out[:] = 0.0
+    np.testing.assert_array_equal(s.array("v").read(), first)
+
+
+def test_cache_budget_evicts(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    data = np.random.default_rng(1).standard_normal((16, 16)).astype("float32")
+    tx = repo.writable_session()
+    tx.create_array("v", shape=(16, 16), dtype="float32",
+                    chunks=(4, 4)).write_full(data)
+    tx.commit("w")
+    one_chunk = 4 * 4 * 4
+    s = repo.readonly_session(cache_bytes=2 * one_chunk)
+    np.testing.assert_array_equal(s.array("v").read(), data)
+    stats = s.cache_stats()
+    assert stats["chunk_bytes"] <= 2 * one_chunk
+    assert stats["chunk_entries"] <= 2
