@@ -14,7 +14,7 @@ import sys
 import time
 
 BENCHES = ["ingest", "qvp", "qpe", "timeseries", "transactional",
-           "kernels", "roofline"]
+           "catalog", "kernels", "roofline"]
 
 
 def main() -> None:

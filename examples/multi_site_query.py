@@ -1,0 +1,64 @@
+"""Multi-site catalog, pruned queries, and federated workflows.
+
+Builds three single-site archives under one catalog, then answers the
+questions the paper's FAIR framing starts from: which sites cover a
+window, which chunks can contain storm cores (> 45 dBZ), and a QVP
+across the whole federation in one call.
+
+    PYTHONPATH=src python examples/multi_site_query.py
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.catalog import Catalog, federated_qvp, query as q
+from repro.etl import generate_raw_archive, ingest
+from repro.store import ObjectStore, Repository
+
+base = Path(tempfile.mkdtemp(prefix="repro-multisite-"))
+catalog = Catalog.create(str(base / "catalog"))
+
+# -- ingest three sites, each its own repository, one shared catalog -------
+for i, site in enumerate(["KVNX", "KTLX", "KICT"]):
+    raw = ObjectStore(str(base / f"raw-{site}"))
+    generate_raw_archive(raw, site_id=site, n_scans=8, n_az=180,
+                         n_gates=600, n_sweeps=4, seed=21 + i)
+    repo = Repository.create(str(base / f"store-{site}"))
+    report = ingest(raw, repo, batch_size=4, workers=4,
+                    catalog=catalog, repo_id=site)
+    print(f"ingested {site}: {report.n_volumes} volumes, "
+          f"{report.n_commits} commits (auto-registered)")
+
+for rid, entry in catalog.entries().items():
+    t0, t1 = entry.time_range()
+    print(f"  {rid}: vcps={sorted(entry.vcps)}, "
+          f"window={t1 - t0:.0f}s, bbox lat "
+          f"[{entry.bbox['lat_min']:.2f}, {entry.bbox['lat_max']:.2f}]")
+
+# -- pruned predicate query: where can reflectivity exceed 45 dBZ? ---------
+t0, t1 = catalog.entry("KVNX").time_range()
+preds = (q.time_between(t0, (t0 + t1) / 2), q.moment("DBZH"),
+         q.elevation(0.5), q.value_gt(45.0))
+pruned = q.query(catalog, *preds, read_workers=4)
+blind = q.query(catalog, *preds, prune=False, read_workers=4)
+ps, bs = pruned.chunk_stats(), blind.chunk_stats()
+print(f"storm-core query: {pruned.n_matches} matching gates across "
+      f"{len(pruned.scans)} site arrays")
+print(f"  chunks decoded: {ps.n_read} pruned vs {bs.n_read} blind "
+      f"({pruned.pruning_ratio:.0%} of candidates pruned by sidecar stats)")
+assert pruned.n_matches == blind.n_matches  # bitwise-identical matches
+
+# spatial pruning: a far-away box opens no repository at all
+far = q.plan(catalog, q.moment("DBZH"), q.within_box(30, 31, -91, -90))
+print(f"  far-away box resolves to {len(far.targets)} targets")
+
+# -- federated QVP: three sites, one call ----------------------------------
+fed = federated_qvp(catalog, moment="DBZH", sweep=3, workers=3,
+                    read_workers=4)
+print(f"federated QVP over {fed.repo_ids}: profile {fed.profile.shape} "
+      f"(per-site profiles concatenated along time)")
+for rid, r in fed.results.items():
+    print(f"  {rid}: {r.profile.shape[0]} scans, "
+          f"max {np.nanmax(r.profile):.1f} dBZ at {r.elevation_deg:.1f} deg")

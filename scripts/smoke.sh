@@ -24,3 +24,6 @@ python benchmarks/bench_transactional.py --quick
 
 echo "== timeseries benchmark (quick: read-path regression gate) =="
 python benchmarks/bench_timeseries.py --quick
+
+echo "== catalog benchmark (quick: pushdown-pruning regression gate) =="
+python benchmarks/bench_catalog.py --quick

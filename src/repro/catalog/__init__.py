@@ -1,0 +1,47 @@
+"""Catalog & query subsystem: the dataset-level layer over repositories.
+
+Three parts (paper FAIR framing, "Findable" first):
+
+* :mod:`repro.catalog.index` — a canonical-JSON catalog document recording
+  which sites/VCPs/moments/time ranges live in which repository, updated
+  incrementally by the ETL pipeline;
+* :mod:`repro.catalog.query` — a predicate expression API and a planner
+  that resolves queries to (repository, array, chunk) read plans, using
+  chunk-statistics sidecars for predicate pushdown;
+* :mod:`repro.catalog.federation` — fan a plan out across repositories and
+  stream the results into the QVP/QPE/time-series workflows.
+"""
+
+from . import query
+from .federation import (
+    FederatedPointSeries,
+    FederatedQPE,
+    FederatedQVP,
+    federated_point_series,
+    federated_qpe,
+    federated_qvp,
+    federated_scan,
+)
+from .index import Catalog, CatalogEntry, coverage_bbox, scan_repository
+from .query import QueryPlan, QueryResult, Target, TargetScan, execute, plan
+
+__all__ = [
+    "Catalog",
+    "CatalogEntry",
+    "FederatedPointSeries",
+    "FederatedQPE",
+    "FederatedQVP",
+    "QueryPlan",
+    "QueryResult",
+    "Target",
+    "TargetScan",
+    "coverage_bbox",
+    "execute",
+    "federated_point_series",
+    "federated_qpe",
+    "federated_qvp",
+    "federated_scan",
+    "plan",
+    "query",
+    "scan_repository",
+]

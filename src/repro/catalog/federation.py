@@ -1,0 +1,306 @@
+"""Federation: run one query or science workflow across many repositories.
+
+The catalog names the repositories; the planner picks the targets; this
+module fans the per-repository work out over a thread pool (object-store
+reads and codec decode release the GIL) and streams the results into the
+existing science workflows — QVP, QPE and point time series run across a
+multi-site archive in one call.  Each repository is processed in its own
+read session, whose ``read_workers`` pool keeps intra-repository chunk
+fan-out; ordering is always sorted-``repo_id``, so federated results are
+deterministic and bitwise-reproducible.
+"""
+
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from ..radar import (
+    PointSeries,
+    QPEResult,
+    QVPResult,
+    point_series_from_session,
+    qpe_from_session,
+    qvp_from_session,
+)
+from .query import (
+    Elevation,
+    Moment,
+    QueryPlan,
+    QueryResult,
+    Sweep,
+    Target,
+    TimeBetween,
+    Vcp,
+    plan,
+    resolve_time_window,
+    run_repo_targets,
+)
+
+
+def _workflow_time_slice(session, target: Target,
+                         plan_: QueryPlan) -> Tuple[int, int]:
+    """A workflow consumes a contiguous time slice; gapped (backfilled)
+    windows raise inside resolve_time_window via allow_mask=False."""
+    i0, i1, _ = resolve_time_window(session, target.time_path,
+                                    plan_.time_window, allow_mask=False)
+    return i0, i1
+
+
+def _structural_predicates(moment, vcp, sweep, elevation, time_between):
+    preds = [Moment((moment,))]
+    if vcp is not None:
+        preds.append(Vcp(vcp))
+    if sweep is not None:
+        preds.append(Sweep(int(sweep)))
+    if elevation is not None:
+        preds.append(elevation if isinstance(elevation, Elevation)
+                     else Elevation(float(elevation)))
+    if time_between is not None:
+        preds.append(TimeBetween(*time_between))
+    return preds
+
+
+def _one_target_per_repo(plan_: QueryPlan) -> "OrderedDict[str, Target]":
+    """Workflow federation needs exactly one array per repository."""
+    out: "OrderedDict[str, Target]" = OrderedDict()
+    for t in plan_.targets:  # already sorted (repo, vcp, sweep, moment)
+        if t.repo_id in out:
+            prev = out[t.repo_id]
+            raise ValueError(
+                f"query is ambiguous for {t.repo_id!r}: both "
+                f"{prev.array_path!r} and {t.array_path!r} match — add a "
+                "vcp()/sweep()/elevation() predicate"
+            )
+        out[t.repo_id] = t
+    if not out:
+        raise ValueError("query matches no repository in the catalog")
+    return out
+
+
+def _fan_out(catalog, payloads: "OrderedDict[str, object]",
+             fn: Callable, *, workers: Optional[int], read_workers: int,
+             entries=None) -> "OrderedDict[str, object]":
+    """Run ``fn(session, payload)`` per repository over a thread pool,
+    preserving the mapping's (sorted-repo) order in the result."""
+    if entries is None:  # one catalog-document fetch, not per repo
+        entries = catalog.entries()
+
+    def run(item):
+        repo_id, payload = item
+        session = catalog.open_session(repo_id, entry=entries.get(repo_id),
+                                       read_workers=read_workers)
+        try:
+            return fn(session, payload)
+        finally:
+            session.close()
+
+    items = list(payloads.items())
+    # default is bounded: a 300-repository catalog must not spawn 300
+    # threads (each session can lazily grow its own reader pool on top)
+    n = (workers if workers is not None
+         else min(len(items), 2 * (os.cpu_count() or 2)))
+    if n <= 1 or len(items) <= 1:
+        results = [run(it) for it in items]
+    else:
+        with ThreadPoolExecutor(max_workers=min(n, len(items)),
+                                thread_name_prefix="repro-fed") as pool:
+            results = list(pool.map(run, items))
+    return OrderedDict(zip(payloads.keys(), results))
+
+
+# ---------------------------------------------------------------------------
+# Federated scan (generic predicate query)
+# ---------------------------------------------------------------------------
+
+
+def federated_scan(catalog, *predicates, repos=None, prune: bool = True,
+                   workers: Optional[int] = None,
+                   read_workers: int = 1) -> QueryResult:
+    """:func:`repro.catalog.query.query`, with repositories in parallel."""
+    plan_ = plan(catalog, *predicates, repos=repos)
+    by_repo: "OrderedDict[str, List[Target]]" = OrderedDict()
+    for t in plan_.targets:  # already sorted (repo, vcp, sweep, moment)
+        by_repo.setdefault(t.repo_id, []).append(t)
+
+    def run(session, targets: List[Target]):
+        return run_repo_targets(session, targets, plan_, prune=prune)
+
+    groups = _fan_out(catalog, by_repo, run, workers=workers,
+                      read_workers=read_workers, entries=plan_.entries)
+    result = QueryResult()
+    for group in groups.values():
+        result.scans.extend(group)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Federated science workflows
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FederatedQVP:
+    """Multi-site QVP: per-repository results plus their concatenation
+    (profiles stacked along time, sorted-repo order)."""
+
+    repo_ids: List[str]
+    results: "OrderedDict[str, QVPResult]"
+    profile: np.ndarray
+    times: np.ndarray
+    height_m: np.ndarray
+    moment: str
+
+
+@dataclass
+class FederatedQPE:
+    """Multi-site QPE: one accumulation map per repository (site grids are
+    distinct polar coordinate systems, so they are not summed)."""
+
+    repo_ids: List[str]
+    results: "OrderedDict[str, QPEResult]"
+
+    @property
+    def total_scans(self) -> int:
+        return int(sum(r.n_scans for r in self.results.values()))
+
+
+@dataclass
+class FederatedPointSeries:
+    """Multi-site point series: per-repository series + concatenation."""
+
+    repo_ids: List[str]
+    results: "OrderedDict[str, PointSeries]"
+    values: np.ndarray
+    times: np.ndarray
+    moment: str
+
+
+def federated_qvp(
+    catalog,
+    *,
+    moment: str = "DBZH",
+    vcp: Optional[str] = None,
+    sweep: Optional[int] = None,
+    elevation=None,
+    time_between: Optional[Tuple[float, float]] = None,
+    repos=None,
+    quality_moment: Optional[str] = "RHOHV",
+    quality_min: float = 0.85,
+    mode: str = "auto",
+    workers: Optional[int] = None,
+    read_workers: int = 1,
+) -> FederatedQVP:
+    """QVP across every catalogued repository the predicates match."""
+    plan_ = plan(catalog,
+                 *_structural_predicates(moment, vcp, sweep, elevation,
+                                         time_between),
+                 repos=repos)
+    targets = _one_target_per_repo(plan_)
+
+    def run(session, target: Target) -> QVPResult:
+        ts = _workflow_time_slice(session, target, plan_)
+        return qvp_from_session(
+            session, vcp=target.vcp, sweep=target.sweep,
+            moment=target.moment, quality_moment=quality_moment,
+            quality_min=quality_min, time_slice=ts, mode=mode,
+        )
+
+    results = _fan_out(catalog, targets, run, workers=workers,
+                       read_workers=read_workers, entries=plan_.entries)
+    heights = [r.height_m for r in results.values()]
+    if any(h.shape != heights[0].shape
+           or not np.allclose(h, heights[0], rtol=1e-6, atol=1.0)
+           for h in heights[1:]):
+        # same gate count is not enough: different gate spacing or fixed
+        # angles would silently misdescribe every site but the first
+        raise ValueError(
+            "federated QVP needs a common range/elevation geometry "
+            "(per-site beam heights differ); query sites separately"
+        )
+    return FederatedQVP(
+        repo_ids=list(results),
+        results=results,
+        profile=np.concatenate([r.profile for r in results.values()],
+                               axis=0),
+        times=np.concatenate([r.times for r in results.values()]),
+        height_m=heights[0],
+        moment=moment,
+    )
+
+
+def federated_qpe(
+    catalog,
+    *,
+    moment: str = "DBZH",
+    vcp: Optional[str] = None,
+    sweep: int = 0,
+    time_between: Optional[Tuple[float, float]] = None,
+    repos=None,
+    a: float = 200.0,
+    b: float = 1.6,
+    mode: str = "auto",
+    workers: Optional[int] = None,
+    read_workers: int = 1,
+) -> FederatedQPE:
+    """Z–R accumulation per site across the federation."""
+    plan_ = plan(catalog,
+                 *_structural_predicates(moment, vcp, sweep, None,
+                                         time_between),
+                 repos=repos)
+    targets = _one_target_per_repo(plan_)
+
+    def run(session, target: Target) -> QPEResult:
+        ts = _workflow_time_slice(session, target, plan_)
+        return qpe_from_session(session, vcp=target.vcp, sweep=target.sweep,
+                                moment=target.moment, time_slice=ts,
+                                a=a, b=b, mode=mode)
+
+    results = _fan_out(catalog, targets, run, workers=workers,
+                       read_workers=read_workers, entries=plan_.entries)
+    return FederatedQPE(repo_ids=list(results), results=results)
+
+
+def federated_point_series(
+    catalog,
+    *,
+    moment: str = "DBZH",
+    vcp: Optional[str] = None,
+    sweep: int = 0,
+    az_deg: float = 0.0,
+    range_m: float = 50_000.0,
+    halfwidth: int = 1,
+    time_between: Optional[Tuple[float, float]] = None,
+    repos=None,
+    workers: Optional[int] = None,
+    read_workers: int = 1,
+) -> FederatedPointSeries:
+    """Fixed-gate time series per site across the federation."""
+    plan_ = plan(catalog,
+                 *_structural_predicates(moment, vcp, sweep, None,
+                                         time_between),
+                 repos=repos)
+    targets = _one_target_per_repo(plan_)
+
+    def run(session, target: Target) -> PointSeries:
+        ts = _workflow_time_slice(session, target, plan_)
+        return point_series_from_session(
+            session, vcp=target.vcp, sweep=target.sweep,
+            moment=target.moment, az_deg=az_deg, range_m=range_m,
+            halfwidth=halfwidth, time_slice=ts,
+        )
+
+    results = _fan_out(catalog, targets, run, workers=workers,
+                       read_workers=read_workers, entries=plan_.entries)
+    return FederatedPointSeries(
+        repo_ids=list(results),
+        results=results,
+        values=np.concatenate([r.values for r in results.values()]),
+        times=np.concatenate([r.times for r in results.values()]),
+        moment=moment,
+    )

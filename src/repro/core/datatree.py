@@ -66,6 +66,41 @@ class Variable:
             return self.data
         return self.data.read()
 
+    def where(
+        self,
+        selection=None,
+        *,
+        value_gt: Optional[float] = None,
+        value_lt: Optional[float] = None,
+        prune: bool = True,
+    ):
+        """Stat-aware lazy selection: (coords, values) of matching elements.
+
+        A match is a valid (finite, for float dtypes) element inside
+        ``selection`` satisfying the value predicates.  Lazy variables push
+        the predicate down to the store's chunk-statistics sidecars — chunks
+        that provably cannot match are never fetched or decoded (see
+        :meth:`repro.store.Array.scan`); eager variables evaluate the same
+        predicate in memory.  Match *sets* are identical either way; the
+        ordering is deterministic per backend (chunk-major lazy, row-major
+        eager).
+        """
+        if self.lazy:
+            res = self.data.scan(selection, value_gt=value_gt,
+                                 value_lt=value_lt, prune=prune)
+            return res.coords, res.values
+        # eager path: one block at offset 0, the same normalization and
+        # match definition the chunk scan uses
+        from ..store.chunks import (normalize_selection, predicate_mask,
+                                    selection_bounds)
+
+        a = np.asarray(self.data)
+        sels = normalize_selection(selection, a.ndim)
+        bounds = selection_bounds(sels, a.shape)
+        mask = predicate_mask(a, [0] * a.ndim, bounds, value_gt, value_lt)
+        loc = np.nonzero(mask)
+        return tuple(l.astype(np.int64) for l in loc), a[loc]
+
     def __repr__(self) -> str:
         kind = "lazy" if self.lazy else "eager"
         return f"<Variable {self.dims} {self.shape} {self.dtype} [{kind}]>"

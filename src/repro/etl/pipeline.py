@@ -96,6 +96,80 @@ class IngestReport:
     # busy-seconds per stage (summed across threads) + end-to-end wall time;
     # extract+decode busy > wall is exactly the pipelining win
     stage_seconds: Dict[str, float] = field(default_factory=dict)
+    # catalog-shaped coverage collected while volumes pass through the
+    # pipeline: {"site": {...}, "vcps": {vcp: {time_min/max, n_times,
+    # sweeps: {i: {elevation, moments, n_azimuth, n_gates, range_max_m}}}}.
+    # Exactly what Catalog.update_from_report merges, so a catalogued
+    # ingest never re-opens the repository it just wrote.
+    coverage: Dict = field(default_factory=dict)
+
+
+def _observe_coverage(cov: Dict, vol: Dict) -> None:
+    """Fold one decoded volume's metadata into a report's coverage doc.
+
+    Never raises: coverage is advisory and an ingest must not abort
+    mid-transaction over metadata.  A malformed volume is counted in
+    ``cov["errors"]`` and skipped; a mixed-site feed is *recorded*
+    (``sites_seen``) and coverage tracks the first site —
+    :meth:`repro.catalog.Catalog.update_from_report` rejects multi-site
+    reports at registration time, after all commits have landed cleanly.
+    """
+    try:
+        _fold_coverage(cov, vol)
+    except Exception:  # noqa: BLE001 — see docstring contract
+        cov["errors"] = int(cov.get("errors", 0)) + 1
+
+
+def _fold_coverage(cov: Dict, vol: Dict) -> None:
+    site = vol["site"]
+    seen = cov.setdefault("sites_seen", [])
+    if site.site_id not in seen:
+        seen.append(site.site_id)
+    s = cov.setdefault("site", {
+        "site_id": site.site_id,
+        "latitude": float(site.latitude),
+        "longitude": float(site.longitude),
+        "altitude": float(site.altitude_m),
+    })
+    if s["site_id"] != site.site_id:
+        return  # foreign site: keep first-site coverage, flag via sites_seen
+    vcp = vol["vcp"]
+    t = float(vol["time"])
+    v = cov.setdefault("vcps", {}).setdefault(vcp.name, {
+        "vcp_id": vcp.vcp_id,
+        "time_min": t,
+        "time_max": t,
+        "n_times": 0,
+        "sweeps": {},
+    })
+    v["time_min"] = min(v["time_min"], t)
+    v["time_max"] = max(v["time_max"], t)
+    v["n_times"] += 1
+    for si, sweep in enumerate(vol["sweeps"]):
+        # prefer the VCP definition's fixed angle (a python float): it is
+        # what append_scan records as the sweep's ``fixed_angle`` attr, so
+        # report-driven and scan-driven catalog entries agree exactly
+        # (decoded per-sweep elevations round-trip through float32)
+        elev = (vcp.elevations[si] if si < len(vcp.elevations)
+                else sweep["elevation"])
+        d = v["sweeps"].setdefault(str(si), {
+            "elevation": float(elev),
+            "moments": [],
+            "n_azimuth": 0,
+            "n_gates": 0,
+            "range_max_m": 0.0,
+        })
+        # geometry can grow across volumes (longer-range scans resize the
+        # arrays); coverage must record the maximum or spatial pruning
+        # would under-estimate the footprint and stop being conservative
+        d["n_azimuth"] = max(d["n_azimuth"], int(len(sweep["azimuth"])))
+        d["n_gates"] = max(d["n_gates"], int(len(sweep["range"])))
+        if len(sweep["range"]):
+            d["range_max_m"] = max(d["range_max_m"],
+                                   float(sweep["range"][-1]))
+        new = set(sweep["moments"]) - set(d["moments"])
+        if new:
+            d["moments"] = sorted(set(d["moments"]) | new)
 
 
 def extract(raw_store: ObjectStore, keys: Iterable[str]):
@@ -138,6 +212,7 @@ def load(
         tx = archive.repo.writable_session(archive.branch)
         for vol in batch:
             archive.append_scan(vol, tx=tx, commit=False)
+            _observe_coverage(report.coverage, vol)
             report.n_volumes += 1
         sid = tx.commit(f"{message} [{start}:{start + len(batch)}]")
         report.snapshot_ids.append(sid)
@@ -159,12 +234,17 @@ def ingest(
     batch_size: int = 16,
     workers: int = 1,
     codec: Optional[str] = None,
+    catalog=None,
+    repo_id: Optional[str] = None,
 ) -> IngestReport:
     """Run all four stages end-to-end (Fig. 1 of the paper), pipelined.
 
     ``workers`` sizes the extract/decode pool.  Snapshot ids are identical
     for every ``workers`` value (see module docstring); ``codec`` selects
-    the per-array chunk codec for newly created arrays.
+    the per-array chunk codec for newly created arrays.  Passing a
+    :class:`repro.catalog.Catalog` auto-registers the ingested coverage
+    (under ``repo_id``, default the site id) from the metadata the
+    pipeline already observed — the repository is not re-opened.
     """
     if workers < 1:
         raise ValueError(f"workers must be >= 1, got {workers}")
@@ -216,6 +296,7 @@ def ingest(
         for vol in volumes:
             t0 = time.perf_counter()
             archive.append_scan(vol, tx=tx, commit=False)
+            _observe_coverage(report.coverage, vol)
             load_s += time.perf_counter() - t0
             report.n_volumes += 1
             n += 1
@@ -283,4 +364,8 @@ def ingest(
         "load_s": load_s,
         "wall_s": time.perf_counter() - t_wall,
     }
+    if catalog is not None and report.n_volumes:
+        catalog.update_from_report(report, repo_id=repo_id,
+                                   uri=repo.store.root, branch=branch,
+                                   repo=repo)
     return report

@@ -15,6 +15,7 @@ import numpy as np
 
 from ..kernels import ops
 from ..store import Session
+from ._selection import TimeSliceLike, as_time_slice
 
 
 @dataclass
@@ -44,11 +45,14 @@ def qpe_from_session(
     vcp: str,
     sweep: int = 0,
     moment: str = "DBZH",
-    time_slice: slice = slice(None),
+    time_slice: TimeSliceLike = None,
     a: float = 200.0,
     b: float = 1.6,
     mode: str = "auto",
 ) -> QPEResult:
+    """Accumulate Z–R precipitation off the store.  ``time_slice``
+    accepts a slice or a planner-produced ``(i0, i1)`` index pair."""
+    time_slice = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
     times = session.array(f"{vcp}/time")[time_slice]
     dbz = session.array(f"{base}/{moment}")[time_slice]

@@ -17,6 +17,7 @@ import numpy as np
 from ..kernels import ops
 from ..store import Session
 from . import geometry
+from ._selection import TimeSliceLike, as_time_slice
 
 
 @dataclass
@@ -40,10 +41,15 @@ def qvp_from_session(
     moment: str = "DBZH",
     quality_moment: Optional[str] = "RHOHV",
     quality_min: float = 0.85,
-    time_slice: slice = slice(None),
+    time_slice: TimeSliceLike = None,
     mode: str = "auto",
 ) -> QVPResult:
-    """Compute a QVP straight off the transactional store."""
+    """Compute a QVP straight off the transactional store.
+
+    ``time_slice`` accepts a slice or an ``(i0, i1)`` index pair as
+    produced by the catalog query planner.
+    """
+    time_slice = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
     field_arr = session.array(f"{base}/{moment}")
     times = session.array(f"{vcp}/time")[time_slice]

@@ -14,6 +14,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from ..store import Session
+from ._selection import TimeSliceLike, as_time_slice
 
 
 @dataclass
@@ -62,20 +63,27 @@ def point_series_from_session(
     az_deg: float = 0.0,
     range_m: float = 50_000.0,
     halfwidth: int = 1,
+    time_slice: TimeSliceLike = None,
 ) -> PointSeries:
-    """Median of a (2h+1)² gate neighbourhood per scan, all scans."""
+    """Median of a (2h+1)² gate neighbourhood per scan, all scans.
+
+    ``time_slice`` (a slice or a planner-produced ``(i0, i1)`` pair)
+    restricts the series to a time window — still chunk-granular.
+    """
+    tsl = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
     azimuth = session.array(f"{base}/azimuth").read()
     rng = session.array(f"{base}/range").read()
     ai, ri = _nearest_gate(az_deg, range_m, azimuth, rng)
     r0, r1 = max(0, ri - halfwidth), min(len(rng), ri + halfwidth + 1)
     arr = session.array(f"{base}/{moment}")
-    parts = [arr[:, a0:a1, r0:r1]
+    parts = [arr[tsl, a0:a1, r0:r1]
              for a0, a1 in _az_window_runs(ai, halfwidth, len(azimuth))]
     block = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=1)
     values = np.nanmedian(block.reshape(block.shape[0], -1), axis=1)
-    times = session.array(f"{vcp}/time").read()
-    return PointSeries(values.astype(np.float32), times, ai, ri, moment)
+    times = session.array(f"{vcp}/time")[tsl]
+    return PointSeries(values.astype(np.float32), np.asarray(times), ai, ri,
+                       moment)
 
 
 def point_series_from_volumes(

@@ -1,6 +1,7 @@
 """Transactional, cloud-native chunked storage (Zarr + Icechunk analogue)."""
 
-from .chunks import ChunkGrid, content_hash, decode_chunk, encode_chunk
+from .chunks import (ChunkGrid, chunk_stats_summary, content_hash,
+                     decode_chunk, encode_chunk)
 from .codecs import (
     Codec,
     UnknownCodecError,
@@ -24,12 +25,14 @@ from .icechunk import (
     Transaction,
 )
 from .object_store import ObjectStore
-from .zarrlite import Array, ArrayMeta
+from .zarrlite import Array, ArrayMeta, ScanResult, ScanStats
 
 __all__ = [
     "Array",
     "ArrayMeta",
     "ChunkGrid",
+    "ScanResult",
+    "ScanStats",
     "Codec",
     "ConflictError",
     "DEFAULT_CACHE_BYTES",
@@ -43,6 +46,7 @@ __all__ = [
     "Transaction",
     "UnknownCodecError",
     "available_codecs",
+    "chunk_stats_summary",
     "content_hash",
     "decode_chunk",
     "default_codec",

@@ -14,6 +14,15 @@ run against any :class:`~repro.store.object_store.ObjectStore`:
   reference ``{array → [shard hashes]}`` (format v2); the single-manifest
   v1 format (``{array → manifest hash}``) written by older repositories
   is read transparently and migrated per-array on first write.
+* **Chunk-statistics sidecars** — commits additionally write per-chunk
+  ``[min, max, valid_fraction]`` triples into content-addressed *stat
+  docs* referenced from the snapshot alongside the manifest shards
+  (format v3).  The catalog query planner (:mod:`repro.catalog.query`)
+  uses them for predicate pushdown: chunks that cannot contain a match
+  are never fetched or decoded.  v1/v2 snapshots read back unchanged
+  (no stats → planners fall back to reading everything) and an array
+  gains stats for all of its existing chunks on the first write that
+  touches it, mirroring the v1→v2 manifest migration.
 * **Cached, concurrent reads** — every session carries an LRU decoded-
   chunk cache plus a manifest-shard cache, and multi-chunk selections can
   fan out over a thread pool (object-store ``get`` and codec decode both
@@ -42,7 +51,8 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
-from .chunks import content_hash, decode_chunk, encode_chunk
+from .chunks import (chunk_stats_summary, content_hash, decode_chunk,
+                     encode_chunk)
 from .codecs import get_codec, json_dumps, json_loads
 from .object_store import ObjectStore
 from .zarrlite import Array, ArrayMeta, _chunk_key
@@ -76,7 +86,13 @@ _EMPTY_SNAPSHOT_ID = "root"
 #     (time) grid coordinate falls in [i*span, (i+1)*span).  Shard
 #     membership is a pure function of the chunk id, so an append rewrites
 #     exactly the shards its chunks land in.
-MANIFEST_FORMAT = 2
+# v3: v2 plus chunk-statistics sidecars: snapshot["stats"][path] is a list
+#     of stat-doc hashes aligned with the manifest shard list; stat doc =
+#     {chunk key -> [min, max, valid_fraction]} under stats/<hash>.json.
+#     The "stats" key is *optional* — v1/v2 snapshots (and v3 snapshots of
+#     repos holding no chunk data) simply omit it, so older snapshots read
+#     back byte-identical and stat lookups degrade to "unknown".
+MANIFEST_FORMAT = 3
 # time-chunks per manifest shard; a *v2 format constant* — changing it
 # changes which shard a chunk key belongs to, i.e. a new format version.
 MANIFEST_SHARD_CHUNKS = 8
@@ -122,11 +138,16 @@ class Repository:
 
     def __init__(self, store: ObjectStore, *,
                  manifest_format: int = MANIFEST_FORMAT):
-        if manifest_format not in (1, 2):
+        if manifest_format not in (1, 2, 3):
             raise ValueError(f"unknown manifest format {manifest_format!r}")
         self.store = store
-        # the format this repository *writes*; both formats are always read
+        # the format this repository *writes*; all formats are always read
         self.manifest_format = manifest_format
+
+    @property
+    def writes_stats(self) -> bool:
+        """Whether commits emit chunk-statistics sidecars (format >= 3)."""
+        return self.manifest_format >= 3
 
     # -- creation ------------------------------------------------------
     @classmethod
@@ -299,15 +320,18 @@ class Repository:
             if parent:
                 stack.append(parent)
         live_manifests: set = set()
+        live_stats: set = set()
         live_chunks: set = set()
         for sid in live_snaps:
             doc = self._read_snapshot(sid)
             for entry in doc["manifests"].values():
                 live_manifests.update(_entry_shard_hashes(entry))
+            for entry in doc.get("stats", {}).values():
+                live_stats.update(_entry_shard_hashes(entry))
         for mh in live_manifests:
             manifest = _loads(self.store.get(f"manifests/{mh}.json"))
             live_chunks.update(manifest.values())
-        removed = {"snapshots": 0, "manifests": 0, "chunks": 0}
+        removed = {"snapshots": 0, "manifests": 0, "stats": 0, "chunks": 0}
         for key in list(self.store.list("snapshots/")):
             if (key.rsplit("/", 1)[-1][:-len(".json")] not in live_snaps
                     and expendable(key)):
@@ -318,6 +342,11 @@ class Repository:
                     and expendable(key)):
                 self.store.delete(key)
                 removed["manifests"] += 1
+        for key in list(self.store.list("stats/")):
+            if (key.rsplit("/", 1)[-1][:-len(".json")] not in live_stats
+                    and expendable(key)):
+                self.store.delete(key)
+                removed["stats"] += 1
         for key in list(self.store.list("chunks/")):
             if (key.rsplit("/", 1)[-1] not in live_chunks
                     and expendable(key)):
@@ -408,6 +437,44 @@ class Session:
         obj = _loads(self.repo.store.get(f"manifests/{mh}.json"))
         self._obj_cache_put(mh, obj)
         return obj
+
+    def _stats_obj(self, sh: str) -> Dict[str, list]:
+        """One stat doc ({chunk key -> [min, max, valid]}), LRU-cached.
+
+        Shares the manifest-object cache under a prefixed key — both are
+        small content-addressed JSON maps with identical lifecycle.
+        """
+        ck = f"stats:{sh}"
+        with self._cache_lock:
+            obj = self._obj_cache.get(ck)
+            if obj is not None:
+                self._obj_cache.move_to_end(ck)
+                return obj
+        obj = _loads(self.repo.store.get(f"stats/{sh}.json"))
+        self._obj_cache_put(ck, obj)
+        return obj
+
+    # -- chunk statistics (predicate-pushdown sidecars) -----------------
+    def has_stats(self, array_path: str) -> bool:
+        """Whether this snapshot carries any stat sidecar for the array."""
+        return self._doc.get("stats", {}).get(array_path) is not None
+
+    def chunk_stats(self, array_path: str, cid) -> Optional[list]:
+        """``[min, max, valid_fraction]`` for one chunk, or None when
+        unknown (pre-v3 snapshot, raw-blob staged chunk, never written).
+
+        None always means "cannot prune"; callers must read the chunk.
+        """
+        entry = self._doc.get("stats", {}).get(array_path)
+        if entry is None:
+            return None
+        # stats entries are always shard-aligned lists (the format was
+        # born sharded in v3; there is no flat variant)
+        key = _chunk_key(tuple(cid))
+        si = _shard_index(key)
+        if si >= len(entry) or not entry[si]:
+            return None
+        return self._stats_obj(entry[si]).get(key)
 
     # -- structure -------------------------------------------------------
     def list_groups(self) -> List[str]:
@@ -522,6 +589,15 @@ class Transaction(Session):
         # once, and the encodes can fan out over `encode_workers` threads
         # (zlib/lzma/zstd all release the GIL).
         self._staged_arrays: Dict[str, Dict[str, Any]] = {}
+        # stat triples for staged chunks: path -> key -> [min, max, valid]
+        # (or None for raw-blob stages, whose contents we never decode —
+        # the key's old stats must be *dropped*, not carried stale)
+        self._staged_stats: Dict[str, Dict[str, Optional[list]]] = {}
+        # one-shot memo for the v1/v2→v3 stats backfill: the commit CAS
+        # loop rebuilds the snapshot doc per attempt, and the touched
+        # array's committed chunk set cannot change across retries (a
+        # concurrent write to it would raise ConflictError instead)
+        self._backfill_memo: Dict[str, Dict[str, list]] = {}
         self._touched: set = set()
         self._closed = False
         self.encode_workers = 1
@@ -594,8 +670,11 @@ class Transaction(Session):
     def delete_array(self, path: str) -> None:
         self._doc["arrays"].pop(path, None)
         self._doc["manifests"].pop(path, None)
+        self._doc.get("stats", {}).pop(path, None)
         self._staged_chunks.pop(path, None)
         self._staged_arrays.pop(path, None)
+        self._staged_stats.pop(path, None)
+        self._backfill_memo.pop(path, None)
         self._manifest_cache.pop(path, None)
         self._touched.add(path)
 
@@ -608,9 +687,15 @@ class Transaction(Session):
         """
         ref = content_hash(blob)
         self.repo.store.put(f"chunks/{ref}", blob, if_not_exists=True)
-        self._staged_chunks.setdefault(array_path, {})[
-            _chunk_key(tuple(cid))
-        ] = ref
+        key = _chunk_key(tuple(cid))
+        self._staged_chunks.setdefault(array_path, {})[key] = ref
+        # a decoded stage of the same chunk earlier in this transaction is
+        # now superseded — drop it, or the deferred commit-time encode
+        # would silently overwrite this blob with the old payload
+        self._staged_arrays.get(array_path, {}).pop(key, None)
+        # the payload is opaque here: mark the key's stats unknown so the
+        # commit drops any now-stale sidecar entry instead of keeping it
+        self._staged_stats.setdefault(array_path, {})[key] = None
         self._touched.add(array_path)
 
     def stage_chunk_array(self, array_path: str, cid, chunk) -> None:
@@ -635,6 +720,17 @@ class Transaction(Session):
         if key in staged:
             return staged[key]
         return super().chunk_ref(array_path, cid)
+
+    def chunk_stats(self, array_path: str, cid) -> Optional[list]:
+        # chunks staged in this transaction shadow the snapshot's sidecar
+        # stats, which describe the *old* payload; their own stats are only
+        # computed at commit — report unknown so pruning never uses stale
+        # bounds against uncommitted data
+        key = _chunk_key(tuple(cid))
+        if (key in self._staged_arrays.get(array_path, {})
+                or key in self._staged_chunks.get(array_path, {})):
+            return None
+        return super().chunk_stats(array_path, cid)
 
     # -- commit ----------------------------------------------------------
     def commit(self, message: str, *, max_retries: int = 5) -> str:
@@ -676,6 +772,8 @@ class Transaction(Session):
         self._closed = True
         self._staged_chunks.clear()
         self._staged_arrays.clear()
+        self._staged_stats.clear()
+        self._backfill_memo.clear()
 
     # -- internals -------------------------------------------------------
     def _flush_staged_arrays(self) -> None:
@@ -687,6 +785,10 @@ class Transaction(Session):
 
         def encode(job):
             path, key, arr, codec = job
+            # the decoded chunk is in hand exactly once, here: computing
+            # its sidecar stats now costs one pass over data the codec is
+            # about to stream anyway
+            stats = chunk_stats_summary(arr) if self.repo.writes_stats else None
             blob = encode_chunk(arr, codec)
             ref = content_hash(blob)
             # persist from the worker: refs are unique content addresses,
@@ -694,7 +796,7 @@ class Transaction(Session):
             # (even of identical chunks) are safe; the file write also
             # releases the GIL, overlapping I/O with sibling encodes
             self.repo.store.put(f"chunks/{ref}", blob, if_not_exists=True)
-            return path, key, ref
+            return path, key, ref, stats
 
         def drain(pending):
             # work-stealing worker: list.pop() is atomic under the GIL, so
@@ -732,8 +834,10 @@ class Transaction(Session):
                     transient.shutdown()
         else:
             encoded = [encode(j) for j in jobs]
-        for path, key, ref in encoded:
+        for path, key, ref, stats in encoded:
             self._staged_chunks.setdefault(path, {})[key] = ref
+            if stats is not None:
+                self._staged_stats.setdefault(path, {})[key] = stats
         self._staged_arrays.clear()
     def _put_manifest_obj(self, obj: Dict[str, str]) -> str:
         """Persist one content-addressed manifest object; seed the cache."""
@@ -773,8 +877,72 @@ class Transaction(Session):
             shards[si] = self._put_manifest_obj(base)
         return shards
 
+    def _put_stats_obj(self, obj: Dict[str, list]) -> str:
+        """Persist one content-addressed stat doc; seed the shared cache."""
+        blob = _dumps(obj)
+        sh = content_hash(blob)
+        self.repo.store.put(f"stats/{sh}.json", blob, if_not_exists=True)
+        self._obj_cache_put(f"stats:{sh}", obj)
+        return sh
+
+    def _backfill_stats(self, array_path: str,
+                        skip_keys) -> Dict[str, list]:
+        """Stats for every pre-existing chunk of an array with no sidecar.
+
+        This is the lazy v1/v2→v3 migration, mirroring the v1→v2 manifest
+        split: the first write touching an array written before the stats
+        format pays one decode pass over that array's existing chunks
+        (``skip_keys`` — the keys this commit overwrites — excluded), and
+        every later commit is incremental again.
+        """
+        memo = self._backfill_memo.get(array_path)
+        if memo is not None:
+            return memo
+        meta = ArrayMeta.from_doc(self._doc["arrays"][array_path])
+        out: Dict[str, list] = {}
+        for key, ref in self._manifest(array_path).items():
+            if key in skip_keys:
+                continue
+            chunk = decode_chunk(self.get_blob(ref), tuple(meta.chunks),
+                                 meta.dtype, meta.codec, writable=False)
+            out[key] = chunk_stats_summary(chunk)
+        self._backfill_memo[array_path] = out
+        return out
+
+    def _stats_entry(self, array_path: str,
+                     staged: Dict[str, Optional[list]]) -> List[Optional[str]]:
+        """Merge staged chunk stats into the array's sharded stats entry,
+        rewriting only the shards whose keys changed (exactly the shards
+        the manifest merge rewrites)."""
+        entry = self._doc.get("stats", {}).get(array_path)
+        by_shard: Dict[int, Dict[str, list]] = {}
+        if isinstance(entry, list):
+            shards: List[Optional[str]] = list(entry)
+        else:
+            shards = []
+            if self._doc["manifests"].get(array_path) is not None:
+                # no sidecar yet but the array has committed chunks:
+                # migrate (backfill) the whole array on this first write
+                for key, st in self._backfill_stats(array_path,
+                                                    set(staged)).items():
+                    by_shard.setdefault(_shard_index(key), {})[key] = st
+        for key, st in staged.items():
+            by_shard.setdefault(_shard_index(key), {})[key] = st
+        for si, add in sorted(by_shard.items()):
+            while len(shards) <= si:
+                shards.append(None)
+            base = dict(self._stats_obj(shards[si])) if shards[si] else {}
+            for key, st in add.items():
+                if st is None:  # unknown (raw-blob stage): drop, never lie
+                    base.pop(key, None)
+                else:
+                    base[key] = st
+            shards[si] = self._put_stats_obj(base) if base else None
+        return shards
+
     def _build_snapshot_doc(self, message: str) -> Dict[str, Any]:
         manifests = dict(self._doc["manifests"])
+        stats = dict(self._doc.get("stats", {}))
         for array_path, staged in self._staged_chunks.items():
             if self.repo.manifest_format == 1:
                 merged = dict(self._manifest(array_path))
@@ -783,7 +951,19 @@ class Transaction(Session):
             else:
                 manifests[array_path] = self._sharded_entry(array_path,
                                                             staged)
-        return {
+            if self.repo.writes_stats:
+                # every staged key gets an entry: a stat triple from the
+                # commit-time encode pass, or None (raw-blob stage) which
+                # deletes the key's stale sidecar
+                sstats = self._staged_stats.get(array_path, {})
+                stats[array_path] = self._stats_entry(
+                    array_path, {key: sstats.get(key) for key in staged}
+                )
+            else:
+                # an older-format writer cannot refresh sidecars; stale
+                # bounds would corrupt pruning, so drop the array's entry
+                stats.pop(array_path, None)
+        doc = {
             "parent": self.snapshot_id,
             "message": message,
             "written_at": time.time(),
@@ -792,12 +972,17 @@ class Transaction(Session):
             "arrays": self._doc["arrays"],
             "manifests": manifests,
         }
+        if stats:
+            # omitted when empty so pre-v3 archives keep byte-identical
+            # snapshot documents (and therefore snapshot ids)
+            doc["stats"] = stats
+        return doc
 
     def _rebase_onto(self, new_head: str, head_doc: Dict[str, Any]) -> None:
-        # adopt their groups/arrays/manifests for paths we did not touch
-        for coll in ("groups", "arrays", "manifests"):
-            theirs = head_doc[coll]
-            ours = self._doc[coll]
+        # adopt their groups/arrays/manifests/stats for untouched paths
+        for coll in ("groups", "arrays", "manifests", "stats"):
+            theirs = head_doc.get(coll, {})
+            ours = self._doc.setdefault(coll, {})
             for path, val in theirs.items():
                 if path not in self._touched:
                     ours[path] = val

@@ -1,0 +1,492 @@
+"""Catalog & query subsystem: index, planner pushdown, federation.
+
+The load-bearing property is **pushdown correctness**: a pruned query
+returns bitwise-identical matches to the blind scan for *any* predicate
+(pinned property-style below), including against repositories that have
+no stat sidecars at all (pre-v3), where the planner must silently fall
+back to reading everything.
+"""
+
+import numpy as np
+import pytest
+
+from repro.catalog import (
+    Catalog,
+    federated_point_series,
+    federated_qpe,
+    federated_qvp,
+    scan_repository,
+)
+from repro.catalog import query as q
+from repro.core import RadarArchive
+from repro.core.datatree import tree_from_session
+from repro.etl import generate_raw_archive, ingest
+from repro.radar import (
+    point_series_from_session,
+    qpe_from_session,
+    qvp_from_session,
+)
+from repro.store import ObjectStore, Repository
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+SITES = ["KVNX", "KTLX", "KICT"]
+N_SCANS = 3
+N_AZ = 24
+N_GATES = 520  # 3 range chunks of 256
+N_SWEEPS = 2
+
+
+def _build_site(base, site, *, catalog=None, seed_off=0,
+                manifest_format=None):
+    raw = ObjectStore(str(base / f"raw-{site}"))
+    generate_raw_archive(raw, site_id=site, n_scans=N_SCANS, n_az=N_AZ,
+                         n_gates=N_GATES, n_sweeps=N_SWEEPS,
+                         seed=11 + seed_off)
+    kw = {} if manifest_format is None else {
+        "manifest_format": manifest_format
+    }
+    repo = Repository.create(str(base / f"store-{site}"), **kw)
+    report = ingest(raw, repo, batch_size=4, catalog=catalog, repo_id=site)
+    return repo, report
+
+
+@pytest.fixture(scope="module")
+def federation(tmp_path_factory):
+    base = tmp_path_factory.mktemp("federation")
+    catalog = Catalog.create(str(base / "catalog"))
+    repos = {}
+    for i, site in enumerate(SITES):
+        repos[site], _ = _build_site(base, site, catalog=catalog,
+                                     seed_off=i)
+    return catalog, repos
+
+
+def _assert_same_matches(a, b):
+    assert len(a.scans) == len(b.scans)
+    for sa, sb in zip(a.scans, b.scans):
+        assert sa.target == sb.target
+        for x, y in zip(sa.coords, sb.coords):
+            np.testing.assert_array_equal(x, y)
+        np.testing.assert_array_equal(sa.values, sb.values)
+
+
+# ---------------------------------------------------------------------------
+# index / registration
+# ---------------------------------------------------------------------------
+
+def test_ingest_auto_registers_matching_full_scan(federation):
+    catalog, repos = federation
+    assert catalog.repository_ids() == sorted(SITES)
+    for site in SITES:
+        entry = catalog.entry(site)
+        cov = scan_repository(repos[site])
+        assert entry.site == cov["site"]
+        assert entry.snapshot_id == repos[site].branch_head()
+        for vcp, vinfo in cov["vcps"].items():
+            got = entry.vcps[vcp]
+            for key in ("vcp_id", "time_min", "time_max", "n_times"):
+                assert got[key] == vinfo[key], (site, vcp, key)
+            assert got["sweeps"] == vinfo["sweeps"]
+        assert entry.bbox["lat_min"] < entry.site["latitude"] < entry.bbox["lat_max"]
+
+
+def test_report_coverage_shape(federation, tmp_path):
+    _repo, report = _build_site(tmp_path, "KVNX")
+    cov = report.coverage
+    assert cov["site"]["site_id"] == "KVNX"
+    v = cov["vcps"]["VCP-212"]
+    assert v["n_times"] == N_SCANS
+    assert v["time_max"] - v["time_min"] == pytest.approx(270.0 * (N_SCANS - 1))
+    sw = v["sweeps"]["0"]
+    assert sw["n_gates"] == N_GATES and "DBZH" in sw["moments"]
+    assert sw["elevation"] == pytest.approx(0.5)
+
+
+def test_incremental_ingest_extends_coverage(tmp_path):
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    raw = ObjectStore(str(tmp_path / "raw"))
+    repo = Repository.create(str(tmp_path / "store"))
+    t0 = 1305849600.0
+    keys1 = generate_raw_archive(raw, n_scans=2, n_az=N_AZ, n_gates=N_GATES,
+                                 n_sweeps=N_SWEEPS, t0=t0)
+    ingest(raw, repo, keys=keys1, catalog=catalog)
+    first = catalog.entry("KVNX")
+    keys2 = generate_raw_archive(raw, n_scans=2, n_az=N_AZ, n_gates=N_GATES,
+                                 n_sweeps=N_SWEEPS, t0=t0 + 2 * 270.0)
+    ingest(raw, repo, keys=keys2, catalog=catalog)
+    second = catalog.entry("KVNX")
+    v = second.vcps["VCP-212"]
+    assert v["n_times"] == 4
+    assert v["time_min"] == first.vcps["VCP-212"]["time_min"]
+    assert v["time_max"] == t0 + 3 * 270.0
+    assert second.snapshot_id == repo.branch_head()
+    # catalog coverage agrees with a cold full scan of the repository
+    cov = scan_repository(repo)
+    assert v["n_times"] == cov["vcps"]["VCP-212"]["n_times"]
+
+
+def test_coverage_tracks_growing_geometry(tmp_path):
+    # later volumes with longer range must widen the recorded footprint,
+    # or within_box pruning would stop being conservative
+    from repro.core import fm301
+    from repro.etl.generator import StormSimulator
+    from repro.etl.pipeline import IngestReport, _observe_coverage
+
+    site = fm301.SITES["KVNX"]
+    vcp_short = fm301.VCPDef(212, (0.5,), 8, 64, 250.0, 270.0)
+    vcp_long = fm301.VCPDef(212, (0.5,), 8, 256, 250.0, 270.0)
+    sim = StormSimulator(seed=0)
+    report = IngestReport()
+    _observe_coverage(report.coverage, sim.volume(site, vcp_short, 0.0))
+    _observe_coverage(report.coverage, sim.volume(site, vcp_long, 270.0))
+    sw = report.coverage["vcps"]["VCP-212"]["sweeps"]["0"]
+    assert sw["n_gates"] == 256
+    assert sw["range_max_m"] == pytest.approx(255.5 * 250.0)
+
+
+def test_within_box_rejects_inverted_boxes():
+    with pytest.raises(ValueError, match="antimeridian"):
+        q.within_box(48.0, 55.0, 170.0, -170.0)
+    with pytest.raises(ValueError, match="latitude"):
+        q.within_box(55.0, 48.0, -99.0, -96.0)
+
+
+def test_coverage_bbox_antimeridian_widens_to_all_longitudes():
+    from repro.catalog import coverage_bbox
+
+    vcps = {"VCP-212": {"sweeps": {"0": {"elevation": 0.5,
+                                         "range_max_m": 460_000.0}}}}
+    bbox = coverage_bbox({"latitude": 51.9, "longitude": -176.6}, vcps)
+    assert bbox["lon_min"] == -180.0 and bbox["lon_max"] == 180.0
+    assert q._box_overlaps(bbox, q.within_box(48.0, 55.0, 175.0, 180.0))
+
+
+def test_federated_qvp_rejects_mismatched_geometry(tmp_path):
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    for site, gates in (("KVNX", 64), ("KTLX", 96)):
+        raw = ObjectStore(str(tmp_path / f"raw-{site}"))
+        generate_raw_archive(raw, site_id=site, n_scans=1, n_az=8,
+                             n_gates=gates, n_sweeps=1)
+        repo = Repository.create(str(tmp_path / f"store-{site}"))
+        ingest(raw, repo, catalog=catalog, repo_id=site)
+    with pytest.raises(ValueError, match="geometry"):
+        federated_qvp(catalog, moment="DBZH", sweep=0)
+
+
+def test_first_registration_covers_preexisting_history(tmp_path):
+    # data ingested before any catalog existed must become findable when
+    # a later ingest first registers the repository — otherwise the
+    # planner would silently prune the old coverage
+    raw = ObjectStore(str(tmp_path / "raw"))
+    repo = Repository.create(str(tmp_path / "store"))
+    t0 = 1305849600.0
+    old = generate_raw_archive(raw, n_scans=2, n_az=8, n_gates=64,
+                               n_sweeps=1, t0=t0)
+    ingest(raw, repo, keys=old)                    # uncatalogued
+    new = generate_raw_archive(raw, n_scans=1, n_az=8, n_gates=64,
+                               n_sweeps=1, t0=t0 + 2 * 270.0)
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    ingest(raw, repo, keys=new, catalog=catalog)   # first registration
+    v = catalog.entry("KVNX").vcps["VCP-212"]
+    assert v["n_times"] == 3 and v["time_min"] == t0
+    # a pure time query into the pre-catalog window finds targets
+    assert q.plan(catalog, q.moment("DBZH"),
+                  q.time_between(t0, t0 + 1.0)).targets != []
+
+
+def test_backfilled_archive_stays_time_queryable(tmp_path):
+    # two ingests in reverse chronological order -> non-monotone time
+    # axis; time-window queries must still answer exactly (covering
+    # slice + row mask), bitwise-identical pruned vs blind
+    raw = ObjectStore(str(tmp_path / "raw"))
+    repo = Repository.create(str(tmp_path / "store"))
+    t0 = 1305849600.0
+    day2 = generate_raw_archive(raw, n_scans=2, n_az=8, n_gates=64,
+                                n_sweeps=1, t0=t0 + 10 * 270.0)
+    ingest(raw, repo, keys=day2)
+    day1 = generate_raw_archive(raw, n_scans=2, n_az=8, n_gates=64,
+                                n_sweeps=1, t0=t0)
+    ingest(raw, repo, keys=day1)  # backfill: appended after, earlier times
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    catalog.register_repository(repo)
+    times = catalog.open_session("KVNX").array("VCP-212/time").read()
+    assert np.any(np.diff(times) < 0)  # genuinely non-monotone
+    # window spanning day1 + the first day-2 scan has an interior gap
+    window = (t0, t0 + 10 * 270.0)
+    preds = (q.time_between(*window), q.moment("DBZH"), q.value_gt(-100.0))
+    pruned = q.query(catalog, *preds)
+    blind = q.query(catalog, *preds, prune=False)
+    _assert_same_matches(pruned, blind)
+    t_hit = times[np.unique(pruned.scans[0].coords[0])]
+    assert ((t_hit >= window[0]) & (t_hit <= window[1])).all()
+    assert pruned.n_matches > 0
+    # a gapped window cannot feed a contiguous-slice workflow: clear error
+    with pytest.raises(ValueError, match="contiguous"):
+        federated_qvp(catalog, moment="DBZH", sweep=0, time_between=window)
+    # but an ungapped window works fine on the same archive
+    fed = federated_qvp(catalog, moment="DBZH", sweep=0,
+                        time_between=(t0, t0 + 270.0))
+    assert fed.profile.shape[0] == 2
+
+
+def test_first_registration_by_uri_covers_history(tmp_path):
+    # update_from_report with only a uri (no attached repo) still scans
+    # the full head on first registration
+    repo, report = _build_site(tmp_path, "KVNX")
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    catalog.update_from_report(report, uri=repo.store.root)
+    assert catalog.entry("KVNX").vcps["VCP-212"]["n_times"] == N_SCANS
+    assert catalog.entry("KVNX").snapshot_id == repo.branch_head()
+
+
+def test_catalog_open_requires_existing_document(tmp_path):
+    with pytest.raises(KeyError, match="no catalog document"):
+        Catalog.open(str(tmp_path / "nope"))
+    Catalog.create(str(tmp_path / "cat"))
+    assert Catalog.open(str(tmp_path / "cat")).repository_ids() == []
+
+
+def test_mixed_site_feed_ingests_cleanly_but_rejects_registration(tmp_path):
+    raw = ObjectStore(str(tmp_path / "raw"))
+    for site in ("KVNX", "KTLX"):
+        generate_raw_archive(raw, site_id=site, n_scans=1, n_az=8,
+                             n_gates=64, n_sweeps=1)
+    repo = Repository.create(str(tmp_path / "store"))
+    # the ingest itself must complete (no mid-transaction metadata abort)
+    report = ingest(raw, repo)
+    assert report.n_volumes == 2
+    assert sorted(report.coverage["sites_seen"]) == ["KTLX", "KVNX"]
+    # registration is where the one-repo-one-site rule is enforced
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    with pytest.raises(ValueError, match="one site"):
+        catalog.update_from_report(report, uri=repo.store.root)
+
+
+def test_register_repository_without_catalog_aware_ingest(tmp_path):
+    repo, _ = _build_site(tmp_path, "KTLX")
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    entry = catalog.register_repository(repo, branch="main")
+    assert entry.repo_id == "KTLX"
+    assert catalog.entry("KTLX").vcps["VCP-212"]["n_times"] == N_SCANS
+    # a fresh Catalog object (new process) reopens by recorded uri
+    cold = Catalog.open(catalog.store)
+    session = cold.open_session("KTLX")
+    assert session.has_array("VCP-212/sweep_0/DBZH")
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_plan_structural_filters(federation):
+    catalog, _repos = federation
+    p = q.plan(catalog, q.moment("DBZH"), q.elevation(0.5))
+    assert {t.sweep for t in p.targets} == {0}
+    assert {t.moment for t in p.targets} == {"DBZH"}
+    assert sorted({t.repo_id for t in p.targets}) == sorted(SITES)
+    assert q.plan(catalog, q.vcp("VCP-31")).targets == []
+    assert q.plan(catalog, q.moment("DBZH"), q.site("KTLX")).repo_ids == ["KTLX"]
+    # a far-away box excludes every site's footprint
+    far = q.plan(catalog, q.moment("DBZH"), q.within_box(30.0, 31.0, -91.0, -90.0))
+    assert far.targets == []
+    # a time window past the archive excludes all coverage
+    t_lo, t_hi = catalog.entry("KVNX").time_range()
+    late = q.plan(catalog, q.moment("DBZH"), q.time_between(t_hi + 1e6, t_hi + 2e6))
+    assert late.targets == []
+
+
+def test_plan_repeated_predicates_intersect(federation):
+    catalog, _repos = federation
+    # a conjunction of contradictory structural predicates matches nothing
+    assert q.plan(catalog, q.vcp("VCP-999"), q.vcp("VCP-212")).targets == []
+    assert q.plan(catalog, q.site("KVNX"), q.site("KTLX")).targets == []
+    assert q.plan(catalog, q.sweep(0), q.sweep(1)).targets == []
+    assert q.plan(catalog, q.elevation(0.5, 0.1),
+                  q.elevation(0.9, 0.1)).targets == []
+    # and agreeing duplicates are a no-op
+    p = q.plan(catalog, q.vcp("VCP-212"), q.vcp("VCP-212"), q.moment("DBZH"))
+    assert p.targets == q.plan(catalog, q.vcp("VCP-212"),
+                               q.moment("DBZH")).targets
+
+
+def test_merge_across_ingests_widens_geometry(tmp_path):
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    for run, gates in (("a", 64), ("b", 256)):
+        raw = ObjectStore(str(tmp_path / f"raw-{run}"))
+        generate_raw_archive(raw, n_scans=1, n_az=8, n_gates=gates,
+                             n_sweeps=1, t0=1305849600.0 + (run == "b") * 270)
+        repo = Repository.create(str(tmp_path / f"store-{run}"))
+        # two separate ingests merge into one entry (same site id)
+        ingest(raw, repo, catalog=catalog, repo_id="KVNX")
+    sw = catalog.entry("KVNX").vcps["VCP-212"]["sweeps"]["0"]
+    assert sw["n_gates"] == 256
+    assert sw["range_max_m"] == pytest.approx(255.5 * 250.0)
+
+
+def test_variable_where_strided_raises_on_both_backends(federation):
+    from repro.core.datatree import Variable
+
+    catalog, _repos = federation
+    session = catalog.open_session("KVNX")
+    var = tree_from_session(session)["VCP-212/sweep_0/DBZH"]
+    with pytest.raises(NotImplementedError):
+        var.where((slice(0, 3, 2),), value_gt=0.0)
+    eager = Variable(var.dims, var.values(), dict(var.attrs))
+    with pytest.raises(NotImplementedError):
+        eager.where((slice(0, 3, 2),), value_gt=0.0)
+
+
+def test_plan_targets_sorted_and_deterministic(federation):
+    catalog, _repos = federation
+    p1 = q.plan(catalog, q.moment("DBZH", "ZDR"), q.sweep(0))
+    p2 = q.plan(catalog, q.moment("DBZH", "ZDR"), q.sweep(0))
+    assert p1.targets == p2.targets
+    assert p1.targets == sorted(
+        p1.targets, key=lambda t: (t.repo_id, t.vcp, t.sweep, t.moment)
+    )
+
+
+def test_query_prunes_and_matches_blind(federation):
+    catalog, _repos = federation
+    t_lo, t_hi = catalog.entry("KVNX").time_range()
+    preds = (q.time_between(t_lo, (t_lo + t_hi) / 2), q.moment("DBZH"),
+             q.value_gt(45.0))
+    pruned = q.query(catalog, *preds)
+    blind = q.query(catalog, *preds, prune=False)
+    _assert_same_matches(pruned, blind)
+    ps, bs = pruned.chunk_stats(), blind.chunk_stats()
+    assert ps.n_read < bs.n_read
+    assert ps.n_pruned > 0 and pruned.pruning_ratio > 0.0
+    assert pruned.n_matches == blind.n_matches > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.floats(min_value=-25.0, max_value=65.0),
+    st.integers(min_value=0, max_value=N_SCANS - 1),
+    st.integers(min_value=0, max_value=N_SCANS - 1),
+    st.booleans(),
+)
+def test_pushdown_correctness_property(federation, thr, ia, ib, use_lt):
+    """Any (threshold, window) predicate: pruned == blind, bitwise."""
+    catalog, _repos = federation
+    t_lo, _ = catalog.entry("KVNX").time_range()
+    ta, tb = sorted((t_lo + 270.0 * ia, t_lo + 270.0 * ib))
+    val = q.value_lt(thr) if use_lt else q.value_gt(thr)
+    preds = (q.time_between(ta, tb), q.moment("DBZH"), val)
+    pruned = q.query(catalog, *preds)
+    blind = q.query(catalog, *preds, prune=False)
+    _assert_same_matches(pruned, blind)
+    assert pruned.chunk_stats().n_read <= blind.chunk_stats().n_read
+
+
+def test_query_against_stat_less_repo_falls_back(tmp_path):
+    # a pre-v3 repository: no sidecars anywhere
+    repo, _ = _build_site(tmp_path, "KVNX", manifest_format=2)
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    catalog.register_repository(repo)
+    preds = (q.moment("DBZH"), q.value_gt(45.0))
+    pruned = q.query(catalog, *preds)
+    blind = q.query(catalog, *preds, prune=False)
+    _assert_same_matches(pruned, blind)
+    ps = pruned.chunk_stats()
+    assert ps.n_pruned == 0 and ps.n_read == blind.chunk_stats().n_read
+
+
+def test_query_parallel_readers_identical(federation):
+    catalog, _repos = federation
+    preds = (q.moment("DBZH"), q.value_gt(40.0))
+    serial = q.query(catalog, *preds)
+    parallel = q.query(catalog, *preds, read_workers=4)
+    _assert_same_matches(serial, parallel)
+
+
+# ---------------------------------------------------------------------------
+# federation
+# ---------------------------------------------------------------------------
+
+def test_federated_qvp_matches_per_repo_concat(federation):
+    catalog, _repos = federation
+    fed = federated_qvp(catalog, moment="DBZH", sweep=1, workers=3)
+    assert fed.repo_ids == sorted(SITES)
+    profiles, times = [], []
+    for site in sorted(SITES):
+        session = catalog.open_session(site)
+        r = qvp_from_session(session, vcp="VCP-212", sweep=1, moment="DBZH")
+        profiles.append(r.profile)
+        times.append(r.times)
+        np.testing.assert_array_equal(fed.results[site].profile, r.profile)
+    np.testing.assert_array_equal(fed.profile, np.concatenate(profiles))
+    np.testing.assert_array_equal(fed.times, np.concatenate(times))
+
+
+def test_federated_qvp_time_window(federation):
+    catalog, _repos = federation
+    t_lo, t_hi = catalog.entry("KVNX").time_range()
+    fed = federated_qvp(catalog, moment="DBZH", sweep=0,
+                        time_between=(t_lo, t_lo + 270.0))
+    assert fed.profile.shape[0] == 2 * len(SITES)  # two scans per site
+
+
+def test_federated_qvp_ambiguous_raises(federation):
+    catalog, _repos = federation
+    with pytest.raises(ValueError, match="ambiguous"):
+        federated_qvp(catalog, moment="DBZH")  # both sweeps match
+
+
+def test_federated_qpe_matches_sessions(federation):
+    catalog, _repos = federation
+    fed = federated_qpe(catalog, sweep=0)
+    assert fed.total_scans == N_SCANS * len(SITES)
+    for site in SITES:
+        session = catalog.open_session(site)
+        want = qpe_from_session(session, vcp="VCP-212", sweep=0)
+        np.testing.assert_array_equal(fed.results[site].accum_mm,
+                                      want.accum_mm)
+
+
+def test_federated_point_series_matches_sessions(federation):
+    catalog, _repos = federation
+    fed = federated_point_series(catalog, sweep=0, az_deg=45.0,
+                                 range_m=40_000.0)
+    vals = []
+    for site in sorted(SITES):
+        session = catalog.open_session(site)
+        want = point_series_from_session(session, vcp="VCP-212", sweep=0,
+                                         az_deg=45.0, range_m=40_000.0)
+        np.testing.assert_array_equal(fed.results[site].values, want.values)
+        vals.append(want.values)
+    np.testing.assert_array_equal(fed.values, np.concatenate(vals))
+
+
+# ---------------------------------------------------------------------------
+# workflow plumbing + datatree selection
+# ---------------------------------------------------------------------------
+
+def test_workflows_accept_planner_index_pairs(federation):
+    catalog, _repos = federation
+    session = catalog.open_session("KVNX")
+    a = qvp_from_session(session, vcp="VCP-212", sweep=0, time_slice=(1, 3))
+    b = qvp_from_session(session, vcp="VCP-212", sweep=0,
+                         time_slice=slice(1, 3))
+    np.testing.assert_array_equal(a.profile, b.profile)
+    pa = point_series_from_session(session, vcp="VCP-212", time_slice=(0, 2))
+    assert pa.values.shape == (2,) and pa.times.shape == (2,)
+    qa = qpe_from_session(session, vcp="VCP-212", time_slice=(0, 2))
+    assert qa.n_scans == 2
+
+
+def test_variable_where_lazy_matches_eager(federation):
+    catalog, _repos = federation
+    session = catalog.open_session("KVNX")
+    tree = tree_from_session(session)
+    var = tree["VCP-212/sweep_0/DBZH"]
+    coords, values = var.where(value_gt=45.0)
+    # eager path: same variable materialized in memory
+    from repro.core.datatree import Variable
+
+    eager = Variable(var.dims, var.values(), dict(var.attrs))
+    ecoords, evalues = eager.where(value_gt=45.0)
+    assert set(zip(*coords)) == set(zip(*ecoords))
+    assert sorted(values.tolist()) == sorted(evalues.tolist())

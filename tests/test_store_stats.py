@@ -1,0 +1,313 @@
+"""Chunk-statistics sidecars (v3 snapshot extension) + stat-pruned scans.
+
+Pins the properties the catalog query planner depends on: sidecar stats
+are written at commit and always agree with the chunk data; v1/v2
+repositories read back unchanged and *never* prune (fallback = read
+everything); an array migrates — gains stats for all existing chunks —
+on the first write that touches it, mirroring the v1→v2 manifest
+migration; and stale stats are dropped, never served.
+"""
+
+import numpy as np
+import pytest
+
+from repro.store import ObjectStore, Repository
+from repro.store.chunks import chunk_stats_summary
+
+
+@pytest.fixture
+def repo(tmp_path):
+    return Repository.create(str(tmp_path / "repo"))
+
+
+def _write_array(repo, path="x", data=None, chunks=(2, 3)):
+    tx = repo.writable_session()
+    if data is None:
+        data = np.arange(24, dtype="float32").reshape(4, 6)
+    a = tx.create_array(path, shape=data.shape, dtype=str(data.dtype),
+                        chunks=chunks)
+    a.write_full(data)
+    tx.commit(f"write {path}")
+    return data
+
+
+def _assert_same_matches(a, b):
+    assert len(a.coords) == len(b.coords)
+    for x, y in zip(a.coords, b.coords):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(a.values, b.values)
+
+
+# ---------------------------------------------------------------------------
+# stat content
+# ---------------------------------------------------------------------------
+
+def test_chunk_stats_summary_float_nan_and_empty():
+    arr = np.array([[np.nan, 2.0], [5.0, -1.0]], dtype="float32")
+    mn, mx, vf = chunk_stats_summary(arr)
+    assert (mn, mx) == (-1.0, 5.0) and vf == pytest.approx(0.75)
+    assert chunk_stats_summary(np.full((2, 2), np.nan)) == [None, None, 0.0]
+    assert chunk_stats_summary(np.empty((0,))) == [None, None, 0.0]
+    assert chunk_stats_summary(np.array([3, 7], dtype="int32")) == [3.0, 7.0, 1.0]
+
+
+def test_commit_writes_stats_matching_data(repo):
+    data = _write_array(repo)
+    s = repo.readonly_session()
+    assert s.has_stats("x")
+    for cid in ((0, 0), (0, 1), (1, 0), (1, 1)):
+        block = data[2 * cid[0]:2 * cid[0] + 2, 3 * cid[1]:3 * cid[1] + 3]
+        mn, mx, vf = s.chunk_stats("x", cid)
+        assert mn == float(block.min()) and mx == float(block.max())
+        assert vf == 1.0
+
+
+def test_rmw_refreshes_stats(repo):
+    _write_array(repo)
+    tx = repo.writable_session()
+    tx.array("x")[0, 0] = 999.0
+    tx.commit("poke")
+    s = repo.readonly_session()
+    assert s.chunk_stats("x", (0, 0))[1] == 999.0
+    # untouched chunk keeps its (content-addressed) stats
+    assert s.chunk_stats("x", (1, 1)) == [15.0, 23.0, 1.0]
+
+
+def test_all_nan_chunk_prunes_without_value_predicate(repo):
+    data = np.arange(24, dtype="float32").reshape(4, 6)
+    data[:2, :3] = np.nan
+    _write_array(repo, data=data)
+    s = repo.readonly_session()
+    assert s.chunk_stats("x", (0, 0)) == [None, None, 0.0]
+    res = s.array("x").scan()
+    blind = s.array("x").scan(prune=False, pushdown=False)
+    _assert_same_matches(res, blind)
+    assert res.stats.n_pruned == 1 and blind.stats.n_pruned == 0
+
+
+def test_scan_value_predicates_prune_and_match_blind(repo):
+    data = _write_array(repo)
+    s = repo.readonly_session()
+    for kw in ({"value_gt": 20.0}, {"value_lt": 3.0},
+               {"value_gt": 5.0, "value_lt": 9.0}):
+        res = s.array("x").scan(**kw)
+        blind = s.array("x").scan(prune=False, pushdown=False, **kw)
+        _assert_same_matches(res, blind)
+        assert res.stats.n_read < blind.stats.n_read
+        # cross-check against numpy
+        mask = np.ones(data.shape, bool)
+        if "value_gt" in kw:
+            mask &= data > kw["value_gt"]
+        if "value_lt" in kw:
+            mask &= data < kw["value_lt"]
+        assert set(zip(*res.coords)) == set(zip(*np.nonzero(mask)))
+
+
+def test_scan_selection_pushdown(repo):
+    _write_array(repo)
+    s = repo.readonly_session()
+    res = s.array("x").scan((slice(0, 2),), value_gt=4.0)
+    blind = s.array("x").scan((slice(0, 2),), value_gt=4.0,
+                              prune=False, pushdown=False)
+    _assert_same_matches(res, blind)
+    assert blind.stats.n_chunks == 4      # every chunk examined
+    assert res.stats.n_chunks == 2        # only the selected time row
+    assert all(t < 2 for t in res.coords[0])
+
+
+def test_scan_rejects_strided_selection(repo):
+    _write_array(repo)
+    with pytest.raises(NotImplementedError):
+        repo.readonly_session().array("x").scan((slice(0, 4, 2),))
+
+
+def test_scan_accepts_integer_selection(repo):
+    _write_array(repo)
+    s = repo.readonly_session()
+    a = s.array("x").scan((-1,), value_gt=18.0)       # last time row
+    b = s.array("x").scan((slice(3, 4),), value_gt=18.0)
+    _assert_same_matches(a, b)
+    with pytest.raises(IndexError):
+        s.array("x").scan((7,))
+
+
+def test_scan_finite_fill_unwritten_chunks_match(repo):
+    # a finite fill value means unwritten chunks hold real, matchable
+    # values — they must be tested, not skipped as invalid-by-definition
+    tx = repo.writable_session()
+    tx.create_array("f", shape=(4, 6), dtype="float32", chunks=(2, 3),
+                    fill_value=0.0)
+    tx.array("f")[0:2, 0:3] = np.full((2, 3), 9.0, dtype="float32")
+    tx.commit("one chunk, finite fill")
+    s = repo.readonly_session()
+    res = s.array("f").scan(value_lt=1.0)
+    assert res.values.size == 18  # three unwritten chunks of 0.0
+    blind = s.array("f").scan(value_lt=1.0, prune=False, pushdown=False)
+    _assert_same_matches(res, blind)
+    np.testing.assert_array_equal(
+        sorted(res.values), sorted(s.array("f").read()[
+            s.array("f").read() < 1.0])
+    )
+
+
+def test_unwritten_chunks_never_fetched(repo):
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(4, 6), dtype="float32", chunks=(2, 3))
+    a = tx.array("x")
+    a[0:2, 0:3] = np.ones((2, 3), dtype="float32")
+    tx.commit("one chunk")
+    s = repo.readonly_session()
+    res = s.array("x").scan(value_gt=0.0)
+    assert res.stats.n_unwritten == 3 and res.stats.n_read == 1
+    assert res.values.size == 6
+
+
+# ---------------------------------------------------------------------------
+# backward compatibility + migration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", [1, 2])
+def test_pre_v3_snapshots_have_no_stats_and_never_prune(tmp_path, fmt):
+    repo = Repository.create(str(tmp_path / "r"), manifest_format=fmt)
+    data = _write_array(repo)
+    s = repo.readonly_session()
+    assert "stats" not in s._doc
+    assert not s.has_stats("x")
+    assert s.chunk_stats("x", (0, 0)) is None
+    res = s.array("x").scan(value_gt=20.0)
+    blind = s.array("x").scan(value_gt=20.0, prune=False, pushdown=False)
+    _assert_same_matches(res, blind)
+    assert res.stats.n_pruned == 0
+    assert res.stats.n_read == blind.stats.n_read  # fallback reads all
+    np.testing.assert_array_equal(s.array("x").read(), data)
+
+
+@pytest.mark.parametrize("fmt", [1, 2])
+def test_migration_backfills_stats_on_first_write(tmp_path, fmt):
+    old = Repository.create(str(tmp_path / "r"), manifest_format=fmt)
+    _write_array(old, "x")
+    _write_array(old, "y")
+    # reopen at the current (v3) format — same store
+    repo = Repository.open(old.store)
+    tx = repo.writable_session()
+    tx.array("x")[3, 5] = -50.0
+    tx.commit("first v3 write")
+    s = repo.readonly_session()
+    # the touched array has stats for ALL its chunks, not just the RMW one
+    assert s.has_stats("x")
+    assert s.chunk_stats("x", (0, 0)) == [0.0, 8.0, 1.0]
+    assert s.chunk_stats("x", (1, 1))[0] == -50.0
+    # the untouched array stays stat-less until something writes it
+    assert not s.has_stats("y")
+    # and its planner behaviour is still the read-everything fallback
+    res = s.array("y").scan(value_gt=100.0)
+    assert res.stats.n_pruned == 0 and res.values.size == 0
+
+
+def test_older_format_writer_drops_stale_stats(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))  # v3
+    _write_array(repo, data=np.zeros((4, 6), dtype="float32"))
+    # a v2-format writer (models an old deployment) bumps the data; it
+    # cannot refresh sidecars, so the array's stats must disappear —
+    # stale bounds would make the planner skip chunks that now match
+    old_writer = Repository.open(repo.store, manifest_format=2)
+    tx = old_writer.writable_session()
+    tx.array("x")[0, 0] = 77.0
+    tx.commit("legacy write")
+    s = repo.readonly_session()
+    assert not s.has_stats("x")
+    res = s.array("x").scan(value_gt=50.0)
+    assert res.values.size == 1 and res.stats.n_pruned == 0
+
+
+def test_stage_chunk_raw_blob_drops_stats(repo):
+    from repro.store import encode_chunk
+
+    data = _write_array(repo)
+    tx = repo.writable_session()
+    # raw-blob staging bypasses the decoded path: the transaction never
+    # sees the contents, so the chunk's stats must be dropped, not stale
+    new = np.full((2, 3), 1234.0, dtype="float32")
+    tx.stage_chunk("x", (0, 0), encode_chunk(new, "zlib"))
+    tx.commit("blob stage")
+    s = repo.readonly_session()
+    assert s.chunk_stats("x", (0, 0)) is None
+    assert s.chunk_stats("x", (1, 1)) is not None
+    res = s.array("x").scan(value_gt=1000.0)
+    assert res.values.size == 6  # the unknown-stats chunk was read
+
+
+def test_stage_chunk_supersedes_earlier_decoded_stage(repo):
+    from repro.store import encode_chunk
+
+    # decoded stage then raw-blob stage of the SAME chunk in one
+    # transaction: the blob must win — the deferred commit-time encode
+    # of the decoded stage must not silently revert it
+    tx = repo.writable_session()
+    a = tx.create_array("x", shape=(2, 3), dtype="float32", chunks=(2, 3))
+    a.write_full(np.ones((2, 3), dtype="float32"))
+    tx.stage_chunk("x", (0, 0),
+                   encode_chunk(np.full((2, 3), 7.0, dtype="float32"),
+                                "zlib"))
+    tx.commit("blob wins")
+    got = repo.readonly_session().array("x").read()
+    np.testing.assert_array_equal(got, np.full((2, 3), 7.0, "float32"))
+
+
+def test_transaction_scan_ignores_stale_stats_for_staged_chunks(repo):
+    _write_array(repo, data=np.zeros((4, 6), dtype="float32"))
+    tx = repo.writable_session()
+    tx.array("x")[0, 0] = 500.0  # staged, not committed
+    assert tx.chunk_stats("x", (0, 0)) is None  # shadowed, unknown
+    res = tx.array("x").scan(value_gt=100.0)
+    assert res.values.size == 1  # found despite committed stats saying max=0
+
+
+def test_delete_array_removes_stats(repo):
+    _write_array(repo)
+    tx = repo.writable_session()
+    tx.delete_array("x")
+    tx.commit("drop")
+    s = repo.readonly_session()
+    assert not s.has_stats("x")
+    assert "x" not in s._doc.get("stats", {})
+
+
+def test_gc_sweeps_dead_stat_docs_keeps_live(repo):
+    _write_array(repo)
+    keep = repo.branch_head()
+    tx = repo.writable_session()
+    tx.array("x")[:] = np.full((4, 6), 5.0, dtype="float32")
+    tx.commit("overwrite")
+    # roll back: the overwrite snapshot (and its sidecar generation)
+    # becomes unreachable and must be swept; the original stays live
+    repo.rollback("main", keep)
+    removed = repo.gc(grace_seconds=0)
+    assert removed["stats"] >= 1
+    s = repo.readonly_session()
+    assert s.chunk_stats("x", (0, 0)) == [0.0, 8.0, 1.0]
+
+
+def test_stats_deterministic_snapshot_ids(tmp_path):
+    sids = []
+    for sub in ("a", "b"):
+        repo = Repository.create(str(tmp_path / sub))
+        _write_array(repo)
+        sids.append(repo.branch_head())
+    assert sids[0] == sids[1]
+
+
+def test_rebase_preserves_other_writers_stats(repo):
+    _write_array(repo, "x")
+    tx1 = repo.writable_session()
+    tx2 = repo.writable_session()
+    tx1.create_array("a", shape=(2,), dtype="float32", chunks=(2,))
+    tx1.array("a").write_full(np.array([1.0, 2.0], dtype="float32"))
+    tx2.create_array("b", shape=(2,), dtype="float32", chunks=(2,))
+    tx2.array("b").write_full(np.array([3.0, 4.0], dtype="float32"))
+    tx1.commit("a")
+    tx2.commit("b")  # rebases over tx1
+    s = repo.readonly_session()
+    assert s.chunk_stats("a", (0,)) == [1.0, 2.0, 1.0]
+    assert s.chunk_stats("b", (0,)) == [3.0, 4.0, 1.0]
+    assert s.chunk_stats("x", (0, 0)) is not None
