@@ -1,38 +1,65 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only qvp,qpe,...]
+    PYTHONPATH=src python -m benchmarks.run [--only qvp,qpe,...] \
+        [--quick] [--json BENCH_PR4.json]
 
 Prints ``bench,name,value,unit`` CSV plus per-record context.  The paper
 claims being checked: §5.1 QVP ~100x, §5.2 time series >10x, §5.3 QPE
-70-150x, §5.4 transactional bitwise reproducibility.
+70-150x, §5.4 transactional bitwise reproducibility.  ``--json`` writes
+the same records as one machine-readable document (the per-PR perf
+trajectory CI uploads as an artifact); ``--quick`` forwards each bench's
+small-archive CI configuration where one exists.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import platform
 import sys
 import time
 
 BENCHES = ["ingest", "qvp", "qpe", "timeseries", "transactional",
-           "catalog", "kernels", "roofline"]
+           "catalog", "compaction", "kernels", "roofline"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--quick", action="store_true",
+                    help="small-archive CI configuration where supported")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write records as a JSON document "
+                         "(e.g. BENCH_PR4.json)")
     args = ap.parse_args()
     todo = args.only.split(",") if args.only else BENCHES
 
     print("bench,name,value,unit")
     failures = 0
+    doc = {
+        "schema": 1,
+        "quick": bool(args.quick),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "started_at": time.time(),
+        "records": [],
+        "errors": [],
+    }
     for name in todo:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        kwargs = {}
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kwargs["quick"] = True
         t0 = time.time()
         try:
-            records = mod.run()
+            records = mod.run(**kwargs)
         except Exception as e:  # noqa: BLE001 - report and continue
             print(f"{name},ERROR,{type(e).__name__}: {e},-", flush=True)
+            doc["errors"].append(
+                {"bench": name, "error": f"{type(e).__name__}: {e}"}
+            )
             failures += 1
             continue
         for r in records:
@@ -40,7 +67,18 @@ def main() -> None:
             if r.extra:
                 line += "," + ";".join(f"{k}={v}" for k, v in r.extra.items())
             print(line, flush=True)
+            doc["records"].append({
+                "bench": r.bench, "name": r.name, "value": r.value,
+                "unit": r.unit, "extra": {k: str(v) for k, v in r.extra.items()},
+            })
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    doc["wall_s"] = time.time() - doc["started_at"]
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(doc['records'])} records, "
+              f"{failures} failures)", flush=True)
     sys.exit(1 if failures else 0)
 
 

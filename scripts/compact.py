@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Background-compact a radar archive into analysis-ready chunking.
+
+The operational companion to ``repro.etl.pipeline.ingest(auto_compact_
+every=N)``: point it at an archive that has accumulated scan-by-scan
+appends and it rewrites fragmented time chunks into the chosen profile's
+layout, migrating pre-v3 metadata (manifest shards, stat sidecars) along
+the way.  Reads are bitwise-identical before and after; a concurrent
+appender is retried on top of, never clobbered.
+
+    PYTHONPATH=src python scripts/compact.py /path/to/store \
+        [--profile timeseries|volume] [--branch main] [--paths a,b] \
+        [--read-workers N] [--dry-run] [--gc] [--gc-grace SECONDS]
+
+``--gc`` expires history after a successful compaction and sweeps the
+superseded chunks (``Repository.gc(keep_history=False)``); without it
+old layouts stay time-travel readable and reclaimable later.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.store import GC_GRACE_SECONDS, Repository  # noqa: E402
+from repro.store.compaction import (COMPACTION_PROFILE_NAMES,  # noqa: E402
+                                    compact, plan_compaction)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("store", help="object-store root of the repository")
+    ap.add_argument("--profile", default="timeseries",
+                    choices=COMPACTION_PROFILE_NAMES,
+                    help="target chunk layout (default: timeseries)")
+    ap.add_argument("--branch", default="main")
+    ap.add_argument("--paths", default=None,
+                    help="comma-separated array paths (default: all)")
+    ap.add_argument("--read-workers", type=int, default=4,
+                    help="thread fan-out for reads and re-encodes")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the plan and exit without writing")
+    ap.add_argument("--gc", action="store_true",
+                    help="expire history and sweep superseded chunks after")
+    ap.add_argument("--gc-grace", type=float, default=GC_GRACE_SECONDS,
+                    help="gc grace window in seconds (default: %(default)s)")
+    args = ap.parse_args()
+
+    repo = Repository.open(args.store)
+    paths = args.paths.split(",") if args.paths else None
+
+    if args.dry_run:
+        session = repo.readonly_session(branch=args.branch)
+        prof, jobs = plan_compaction(session, args.profile, paths)
+        print(f"profile={prof.name} head={session.snapshot_id} "
+              f"arrays_to_rewrite={len(jobs)}")
+        for job in jobs:
+            print(f"  {job.path}: {job.reason} "
+                  f"{tuple(job.meta.chunks)} -> {job.chunks}")
+        return 0
+
+    report = compact(repo, args.profile, branch=args.branch, paths=paths,
+                     read_workers=args.read_workers)
+    state = "committed" if report.committed else "no-op"
+    print(f"compact profile={report.profile} {state} "
+          f"snapshot={report.snapshot_id} retries={report.retries} "
+          f"wall={report.wall_s:.2f}s")
+    for a in report.arrays:
+        print(f"  {a.path}: {a.reason} {a.chunks_before} -> {a.chunks_after} "
+              f"({a.n_chunks_before} -> {a.n_chunks_after} chunks)")
+    if args.gc:
+        removed = repo.gc(grace_seconds=args.gc_grace, keep_history=False)
+        print(f"gc (history expired): {removed}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Smoke check: full test suite + quick ingest benchmark.
+# Smoke check: full test suite + quick regression-gating benchmarks.
 #
-#   ./scripts/smoke.sh
+#   ./scripts/smoke.sh                    # tests + quick benches
+#   SMOKE_SKIP_BENCH=1 ./scripts/smoke.sh # fast tests-only lane (CI matrix)
 #
 # Requires only numpy/jax/pandas/psutil (stdlib codecs + hypothesis shim
 # cover the rest); `pip install -e .[speed,test]` enables the fast paths.
@@ -10,20 +11,28 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Benchmarks build scratch archives via tempfile; give them a private
+# TMPDIR and remove it on exit so persistent CI runners don't accumulate
+# repro-bench-* directories run after run.
+SMOKE_TMPDIR="$(mktemp -d "${TMPDIR:-/tmp}/repro-smoke.XXXXXX")"
+trap 'rm -rf "$SMOKE_TMPDIR"' EXIT
+export TMPDIR="$SMOKE_TMPDIR"
+
 echo "== byte-compile src/ =="
 python -m compileall -q src
 
 echo "== pytest =="
 python -m pytest -x -q
 
-echo "== ingest benchmark (quick) =="
-python benchmarks/bench_ingest.py --quick
+if [[ "${SMOKE_SKIP_BENCH:-0}" == "1" ]]; then
+  echo "== quick benchmarks skipped (SMOKE_SKIP_BENCH=1) =="
+else
+  # each bench is a regression gate: a failed assertion or a nonzero exit
+  # fails the smoke run (set -e applies inside the loop body)
+  for bench in ingest transactional timeseries catalog compaction; do
+    echo "== ${bench} benchmark (quick) =="
+    python "benchmarks/bench_${bench}.py" --quick
+  done
+fi
 
-echo "== transactional benchmark (quick: manifest-format regression gate) =="
-python benchmarks/bench_transactional.py --quick
-
-echo "== timeseries benchmark (quick: read-path regression gate) =="
-python benchmarks/bench_timeseries.py --quick
-
-echo "== catalog benchmark (quick: pushdown-pruning regression gate) =="
-python benchmarks/bench_catalog.py --quick
+echo "== smoke OK =="

@@ -392,6 +392,27 @@ class Catalog:
         doc = self._update(mutate)
         return CatalogEntry.from_doc(rid, doc["repositories"][rid])
 
+    def note_snapshot(self, repo_id: str, snapshot_id: str) -> None:
+        """Refresh one entry's recorded head snapshot without rescanning.
+
+        For maintenance commits that change layout but not content —
+        compaction's re-chunking (:mod:`repro.store.compaction`) being
+        the canonical case: coverage (sites, VCPs, moments, time windows,
+        bbox) is already exact, so a full :meth:`register_repository`
+        scan would be wasted I/O.  Unknown repo_ids raise — noting a
+        snapshot for a repository the catalog never saw would fabricate
+        an entry with no coverage.
+        """
+        def mutate(doc: Dict[str, Any]) -> None:
+            try:
+                doc["repositories"][repo_id]["snapshot_id"] = snapshot_id
+            except KeyError:
+                raise KeyError(
+                    f"repository {repo_id!r} not in catalog"
+                ) from None
+
+        self._update(mutate)
+
     # -- lookup ----------------------------------------------------------
     def repository_ids(self) -> List[str]:
         return sorted(self._load()[0]["repositories"])

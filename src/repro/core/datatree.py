@@ -196,13 +196,23 @@ class RadarArchive:
     def __init__(self, repo: Repository, branch: str = "main",
                  codec: Optional[str] = None, *,
                  read_workers: int = 1,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 time_chunk: Optional[int] = None):
         self.repo = repo
         self.branch = branch
         # per-array codec for every array this archive creates; None defers
         # to the store default (zlib in every environment — deterministic
         # snapshot ids; pass codec="zstd" explicitly for the fast path)
         self.codec = codec
+        # scans per time chunk for newly created arrays.  A live feed
+        # appending scan-by-scan may set this low (cheap RMW appends) and
+        # rely on the compaction maintenance pass
+        # (repro.store.compaction) to merge the fragments into
+        # analysis-ready chunks later.
+        if time_chunk is not None and int(time_chunk) < 1:
+            raise ValueError(f"time_chunk must be >= 1, got {time_chunk}")
+        self.time_chunk = (int(time_chunk) if time_chunk is not None
+                           else self.TIME_CHUNK)
         # read-path knobs forwarded to every session this archive opens:
         # a reader thread pool for multi-chunk selections and the decoded-
         # chunk LRU budget (None -> store default)
@@ -259,7 +269,7 @@ class RadarArchive:
                                    "interval_s": vcp.interval_s})
             tx.create_array(
                 t_path, shape=(0,), dtype="float64",
-                chunks=(self.TIME_CHUNK,),
+                chunks=(self.time_chunk,),
                 attrs={DIMS_ATTR: ["time"], "units": "seconds since 1970-01-01",
                        "standard_name": "time"},
                 codec=self.codec,
@@ -297,7 +307,7 @@ class RadarArchive:
                         apath,
                         shape=(0, n_az, n_rg),
                         dtype="float32",
-                        chunks=(self.TIME_CHUNK, n_az,
+                        chunks=(self.time_chunk, n_az,
                                 min(self.RANGE_CHUNK, n_rg)),
                         attrs={DIMS_ATTR: ["time", "azimuth", "range"],
                                **fm301.MOMENTS.get(mname, {})},

@@ -34,6 +34,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 from ..core import fm301
 from ..core.datatree import RadarArchive
 from ..store import ObjectStore, Repository
+from ..store.compaction import compact as compact_repository
 from . import level2
 from .generator import StormSimulator
 
@@ -102,6 +103,9 @@ class IngestReport:
     # Exactly what Catalog.update_from_report merges, so a catalogued
     # ingest never re-opens the repository it just wrote.
     coverage: Dict = field(default_factory=dict)
+    # snapshot ids of background compactions run via auto_compact_every
+    # (kept apart from snapshot_ids, which remain the ingest commits)
+    compaction_ids: List[str] = field(default_factory=list)
 
 
 def _observe_coverage(cov: Dict, vol: Dict) -> None:
@@ -236,6 +240,9 @@ def ingest(
     codec: Optional[str] = None,
     catalog=None,
     repo_id: Optional[str] = None,
+    time_chunk: Optional[int] = None,
+    auto_compact_every: Optional[int] = None,
+    compact_profile: str = "timeseries",
 ) -> IngestReport:
     """Run all four stages end-to-end (Fig. 1 of the paper), pipelined.
 
@@ -245,9 +252,20 @@ def ingest(
     :class:`repro.catalog.Catalog` auto-registers the ingested coverage
     (under ``repo_id``, default the site id) from the metadata the
     pipeline already observed — the repository is not re-opened.
+
+    ``time_chunk`` sets the scans-per-time-chunk of newly created arrays
+    (a live scan-by-scan feed may want 1), and ``auto_compact_every=N``
+    turns ingest into a self-maintaining background task: after every Nth
+    commit the archive is compacted into ``compact_profile``'s
+    analysis-ready layout (:mod:`repro.store.compaction`).  Compaction is
+    deterministic, so snapshot ids remain worker-count-independent.
     """
     if workers < 1:
         raise ValueError(f"workers must be >= 1, got {workers}")
+    if auto_compact_every is not None and auto_compact_every < 1:
+        raise ValueError(
+            f"auto_compact_every must be >= 1, got {auto_compact_every}"
+        )
     # the knob is a parallelism *budget* (like make -j); heavy
     # oversubscription only adds GIL convoy, so cap the thread count near
     # the core count (one extra thread covers blocking I/O gaps and, on
@@ -255,7 +273,7 @@ def ingest(
     n_threads = min(workers, (os.cpu_count() or workers) + 1)
     if keys is None:
         keys = sorted(raw_store.list(prefix))
-    archive = RadarArchive(repo, branch, codec=codec)
+    archive = RadarArchive(repo, branch, codec=codec, time_chunk=time_chunk)
     report = IngestReport(workers=workers)
     # per-call durations; list.append is atomic, so pool threads can report
     # without a lock
@@ -305,6 +323,14 @@ def ingest(
         load_s += time.perf_counter() - t0
         report.snapshot_ids.append(sid)
         report.n_commits += 1
+        if auto_compact_every and report.n_commits % auto_compact_every == 0:
+            # maintenance between commits: no writer of ours is in
+            # flight, so compaction can only race *external* appenders —
+            # which it retries on top of (see repro.store.compaction)
+            crep = compact_repository(repo, compact_profile, branch=branch,
+                                      read_workers=n_threads)
+            if crep.committed:
+                report.compaction_ids.append(crep.snapshot_id)
 
     if workers == 1:
         # serial reference path: stage by stage, no threads, no overlap
@@ -365,7 +391,12 @@ def ingest(
         "wall_s": time.perf_counter() - t_wall,
     }
     if catalog is not None and report.n_volumes:
-        catalog.update_from_report(report, repo_id=repo_id,
-                                   uri=repo.store.root, branch=branch,
-                                   repo=repo)
+        entry = catalog.update_from_report(report, repo_id=repo_id,
+                                           uri=repo.store.root, branch=branch,
+                                           repo=repo)
+        if report.compaction_ids:
+            # compaction moved the head past the last ingest commit;
+            # coverage is unchanged (re-chunking moves no data), so only
+            # the recorded snapshot id needs a refresh
+            catalog.note_snapshot(entry.repo_id, repo.branch_head(branch))
     return report

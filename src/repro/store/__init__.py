@@ -13,6 +13,13 @@ from .codecs import (
     register_codec,
     set_default_codec,
 )
+from .compaction import (
+    PROFILES as COMPACTION_PROFILES,
+    CompactionProfile,
+    CompactionReport,
+    compact,
+    plan_compaction,
+)
 from .icechunk import (
     DEFAULT_CACHE_BYTES,
     GC_GRACE_SECONDS,
@@ -34,6 +41,9 @@ __all__ = [
     "ScanResult",
     "ScanStats",
     "Codec",
+    "COMPACTION_PROFILES",
+    "CompactionProfile",
+    "CompactionReport",
     "ConflictError",
     "DEFAULT_CACHE_BYTES",
     "GC_GRACE_SECONDS",
@@ -47,7 +57,9 @@ __all__ = [
     "UnknownCodecError",
     "available_codecs",
     "chunk_stats_summary",
+    "compact",
     "content_hash",
+    "plan_compaction",
     "decode_chunk",
     "default_codec",
     "encode_chunk",

@@ -41,6 +41,11 @@ run against any :class:`~repro.store.object_store.ObjectStore`:
   its CAS, reloads the new head, and either rebases (disjoint array paths)
   or raises :class:`ConflictError`.
 * **Branches, tags, history, rollback, time-travel reads.**
+* **Background compaction** — :meth:`Repository.compact` (see
+  :mod:`repro.store.compaction`) rewrites append-fragmented chunks into
+  analysis-optimized layouts through the same commit/CAS path, with
+  bitwise-identical reads; ``gc(keep_history=False)`` expires history so
+  the superseded chunks become sweepable.
 """
 
 from __future__ import annotations
@@ -254,9 +259,16 @@ class Repository:
             raise NotFound(f"snapshot {sid}") from None
 
     def history(self, branch: str = "main") -> Iterator[CommitInfo]:
+        """Walk the branch's commit chain, newest first.
+
+        A parent expired by ``gc(keep_history=False)`` ends the walk —
+        the surviving prefix is still valid history."""
         sid: Optional[str] = self.branch_head(branch)
         while sid is not None:
-            doc = self._read_snapshot(sid)
+            try:
+                doc = self._read_snapshot(sid)
+            except NotFound:
+                return
             yield CommitInfo(
                 snapshot_id=sid,
                 parent_id=doc.get("parent"),
@@ -283,8 +295,18 @@ class Repository:
         head = self.branch_head(branch)
         return Transaction(self, branch, head, **session_kw)
 
+    # -- maintenance: compaction ---------------------------------------
+    def compact(self, profile="timeseries", **kw):
+        """Rewrite fragmented per-append chunks into analysis-optimized
+        ones — see :func:`repro.store.compaction.compact` for profiles,
+        retry semantics and the report it returns."""
+        from .compaction import compact as _compact
+
+        return _compact(self, profile, **kw)
+
     # -- garbage collection --------------------------------------------
-    def gc(self, *, grace_seconds: float = GC_GRACE_SECONDS) -> Dict[str, int]:
+    def gc(self, *, grace_seconds: float = GC_GRACE_SECONDS,
+           keep_history: bool = True) -> Dict[str, int]:
         """Mark-and-sweep unreferenced chunks/manifests/snapshots.
 
         Unreferenced objects younger than ``grace_seconds`` are kept: a
@@ -293,6 +315,13 @@ class Repository:
         object can legitimately be unreferenced for the duration of an
         in-flight commit.  ``grace_seconds=0`` restores the aggressive
         sweep (only safe when no writer can be mid-commit).
+
+        ``keep_history=False`` expires history: only the snapshots that
+        branch/tag refs point at directly stay live, so chunks a
+        compaction superseded (referenced *only* by ancestor snapshots)
+        become sweepable.  Time-travel reads of expired snapshots stop
+        working; :meth:`history` ends at the expiry horizon.  Tag a
+        snapshot first to keep it (and everything it references) alive.
         """
         now = time.time()
 
@@ -316,14 +345,22 @@ class Repository:
             if sid in live_snaps:
                 continue
             live_snaps.add(sid)
-            parent = self._read_snapshot(sid).get("parent")
+            if not keep_history:
+                continue  # roots only: ancestors are expired, not live
+            try:
+                parent = self._read_snapshot(sid).get("parent")
+            except NotFound:  # already expired by an earlier sweep
+                continue
             if parent:
                 stack.append(parent)
         live_manifests: set = set()
         live_stats: set = set()
         live_chunks: set = set()
         for sid in live_snaps:
-            doc = self._read_snapshot(sid)
+            try:
+                doc = self._read_snapshot(sid)
+            except NotFound:  # expired ancestor encountered mid-walk
+                continue
             for entry in doc["manifests"].values():
                 live_manifests.update(_entry_shard_hashes(entry))
             for entry in doc.get("stats", {}).values():
@@ -387,6 +424,9 @@ class Session:
         # decoded-chunk cache: (ref, chunks, dtype, codec) -> read-only array
         self._chunk_cache: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._chunk_cache_nbytes = 0
+        # chunk payloads actually fetched+decoded (cache misses) — the
+        # "chunks read" accounting fragmentation benchmarks compare
+        self._fetch_count = 0
 
     # -- caches / concurrency ------------------------------------------
     def reader_pool(self):
@@ -418,6 +458,7 @@ class Session:
                 "chunk_entries": len(self._chunk_cache),
                 "chunk_bytes": self._chunk_cache_nbytes,
                 "manifest_entries": len(self._obj_cache),
+                "chunk_fetches": self._fetch_count,
             }
 
     def _obj_cache_put(self, mh: str, obj: Dict[str, str]) -> None:
@@ -554,6 +595,7 @@ class Session:
         chunk = decode_chunk(blob, tuple(meta.chunks), meta.dtype,
                              meta.codec, writable=False)
         with self._cache_lock:
+            self._fetch_count += 1
             winner = self._chunk_cache.get(key)
             if winner is not None:  # lost a decode race: share the winner
                 return winner
@@ -667,6 +709,43 @@ class Transaction(Session):
         self._touched.add(path)
         return self.array(path)
 
+    def rechunk_array(self, path: str, chunks: Sequence[int]) -> Array:
+        """Change an array's chunk grid, dropping every committed chunk
+        reference (and stat sidecar) in this transaction's view.
+
+        The caller re-stages the array's data under the new grid — this
+        is the primitive behind :func:`repro.store.compaction.compact`.
+        Shape, dtype, attrs, codec and fill value are untouched, so a
+        full re-stage of the same values reads back bitwise-identically.
+        Pending staged writes are refused rather than silently re-keyed
+        onto the new grid.
+        """
+        doc = self._doc["arrays"].get(path)
+        if doc is None:
+            raise NotFound(f"array {path!r}")
+        if self._staged_arrays.get(path) or self._staged_chunks.get(path):
+            raise RuntimeError(
+                f"array {path!r} has staged writes; rechunk before writing"
+            )
+        chunks = tuple(int(c) for c in chunks)
+        if len(chunks) != len(doc["shape"]):
+            raise ValueError(
+                f"chunks rank {len(chunks)} != shape rank {len(doc['shape'])}"
+            )
+        if any(c <= 0 for c in chunks):
+            raise ValueError(f"chunk sizes must be positive: {chunks}")
+        doc["chunks"] = list(chunks)
+        # the old grid's manifest/stat entries describe chunk keys that no
+        # longer exist under the new grid: drop them wholesale — the commit
+        # rebuilds both from what the caller re-stages
+        self._doc["manifests"].pop(path, None)
+        self._doc.get("stats", {}).pop(path, None)
+        self._staged_stats.pop(path, None)
+        self._backfill_memo.pop(path, None)
+        self._manifest_cache.pop(path, None)
+        self._touched.add(path)
+        return self.array(path)
+
     def delete_array(self, path: str) -> None:
         self._doc["arrays"].pop(path, None)
         self._doc["manifests"].pop(path, None)
@@ -757,7 +836,20 @@ class Transaction(Session):
             # walk back to our parent collecting all touched paths
             sid_walk = head_doc.get("parent")
             while sid_walk is not None and sid_walk != self.snapshot_id:
-                d = self.repo._read_snapshot(sid_walk)
+                try:
+                    d = self.repo._read_snapshot(sid_walk)
+                except NotFound:
+                    # gc(keep_history=False) expired the ancestry between
+                    # the new head and our base while this transaction was
+                    # open: the touched-set walk cannot complete, so a
+                    # safe rebase is impossible — surface it as the
+                    # conflict it is (retry loops replan on a fresh head)
+                    raise ConflictError(
+                        "cannot rebase: history between the new head and "
+                        f"this transaction's base was expired by gc "
+                        f"(missing snapshot {sid_walk}); retry on a fresh "
+                        "session"
+                    ) from None
                 their_touched |= set(d.get("touched", []))
                 sid_walk = d.get("parent")
             if sid_walk != self.snapshot_id or (their_touched & self._touched):

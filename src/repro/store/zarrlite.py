@@ -125,6 +125,12 @@ class Array:
         return np.dtype(self.meta.dtype)
 
     @property
+    def chunks(self) -> Tuple[int, ...]:
+        """Chunk grid — fixed at creation, rewritten only by the
+        compaction maintenance pass (:mod:`repro.store.compaction`)."""
+        return self.meta.chunks
+
+    @property
     def attrs(self) -> Dict[str, Any]:
         return self.meta.attrs
 

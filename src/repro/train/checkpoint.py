@@ -160,8 +160,10 @@ class CheckpointManager:
                 else:
                     data = _arr[idx]
                 if _logical == "bfloat16":
-                    import ml_dtypes
-                    data = np.asarray(data).view(ml_dtypes.bfloat16)
+                    # jax re-exports the ml_dtypes scalar type; importing
+                    # it this way keeps the required-import surface at
+                    # the declared base deps (see tests/test_dependency_policy)
+                    data = np.asarray(data).view(jax.numpy.bfloat16)
                 return data
 
             if shd is None:

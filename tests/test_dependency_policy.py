@@ -1,0 +1,104 @@
+"""Mechanical enforcement of the dependency policy (ROADMAP, PR 1).
+
+The package's *required* import surface is stdlib + {numpy, jax, pandas,
+psutil}: `pip install -e .` must be enough to import everything under
+``src/repro`` and pass the tier-1 suite.  Optional fast paths (zstandard,
+orjson, ...) may only be imported behind a ``try``/``except`` that
+catches ``ImportError`` — the store degrades, it never hard-requires.
+
+This test walks every module's AST and fails on any import statement —
+module level *or* lazily inside a function — of a module outside the
+policy, unless an enclosing ``try`` catches ``ImportError``.  Lazy
+imports count because they still crash at runtime on the stdlib-only CI
+leg; an optional dependency must be guarded wherever it is imported.
+"""
+
+import ast
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+REQUIRED_THIRD_PARTY = {"numpy", "jax", "pandas", "psutil"}
+# the package itself (absolute self-imports) — relative imports carry
+# module=None/level>0 and are skipped structurally
+SELF = {"repro"}
+STDLIB = set(sys.stdlib_module_names)
+
+_IMPORT_GUARDS = {"ImportError", "ModuleNotFoundError", "Exception",
+                  "BaseException"}
+
+
+def _catches_import_error(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:  # bare except
+        return True
+    return any(
+        isinstance(node, ast.Name) and node.id in _IMPORT_GUARDS
+        for node in ast.walk(handler.type)
+    )
+
+
+def _violations(tree: ast.AST, relpath: str):
+    """Yield ``path:line: module`` for out-of-policy required imports."""
+
+    def walk(node: ast.AST, guarded: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Try):
+                body_guarded = guarded or any(
+                    _catches_import_error(h) for h in child.handlers
+                )
+                for stmt in child.body:
+                    yield from walk(stmt, body_guarded)
+                for part in (child.handlers, child.orelse, child.finalbody):
+                    for stmt in part:
+                        yield from walk(stmt, guarded)
+                continue
+            if isinstance(child, ast.Import):
+                if not guarded:
+                    for alias in child.names:
+                        yield child.lineno, alias.name
+            elif isinstance(child, ast.ImportFrom):
+                # relative imports (level > 0) are intra-package
+                if not guarded and child.level == 0 and child.module:
+                    yield child.lineno, child.module
+            yield from walk(child, guarded)
+
+    for lineno, module in walk(tree, False):
+        top = module.split(".")[0]
+        if top in STDLIB or top in REQUIRED_THIRD_PARTY or top in SELF:
+            continue
+        yield f"{relpath}:{lineno}: {module}"
+
+
+def test_required_imports_stay_inside_the_policy():
+    assert SRC.is_dir(), SRC
+    violations = []
+    for py in sorted(SRC.rglob("*.py")):
+        tree = ast.parse(py.read_text(), filename=str(py))
+        violations.extend(_violations(tree, str(py.relative_to(SRC))))
+    assert not violations, (
+        "imports outside stdlib + {numpy, jax, pandas, psutil} on a "
+        "required path (guard optional deps with try/except ImportError "
+        "or move them to a [speed]-style extra):\n  "
+        + "\n  ".join(violations)
+    )
+
+
+def test_guard_detection_is_sound():
+    # the walker itself: guarded imports pass, unguarded ones are caught
+    ok = ast.parse(
+        "try:\n"
+        "    import zstandard\n"
+        "except ImportError:\n"
+        "    zstandard = None\n"
+    )
+    assert not list(_violations(ok, "m.py"))
+    bad = ast.parse("def f():\n    import zstandard\n")
+    assert list(_violations(bad, "m.py")) == ["m.py:2: zstandard"]
+    nested = ast.parse(
+        "try:\n"
+        "    from orjson import dumps\n"
+        "except (ValueError, ImportError):\n"
+        "    import zstandard\n"  # handler body is NOT import-guarded
+    )
+    assert list(_violations(nested, "m.py")) == ["m.py:4: zstandard"]

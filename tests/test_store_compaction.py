@@ -1,0 +1,386 @@
+"""Background compaction: analysis-ready re-chunking as a maintenance
+transaction.
+
+Pins the subsystem's contract: bitwise-identical reads across any
+re-chunking, idempotence (a second pass is a no-op with the *same*
+snapshot id), CAS-loop survival against concurrent appends (both sides
+kept), on-the-fly migration of v1/v2/pre-v3 archives (shard split + stat
+backfill), hole preservation, and history-expiring gc sweeping exactly
+the superseded chunk objects.
+"""
+
+import numpy as np
+import pytest
+
+from repro.store import (
+    ConflictError,
+    NotFound,
+    ObjectStore,
+    Repository,
+    compact,
+    plan_compaction,
+)
+from repro.store.chunks import plan_time_chunks
+from repro.store.compaction import PROFILES, CompactionProfile, resolve_profile
+
+
+def _series_repo(root, *, n=20, width=8, chunks=(1, 8), manifest_format=3):
+    """A fragmented append-per-commit archive: n rows, one per commit."""
+    repo = Repository.create(str(root), manifest_format=manifest_format)
+    tx = repo.writable_session()
+    tx.create_array("x", shape=(0, width), dtype="float32", chunks=chunks)
+    tx.commit("init")
+    for i in range(n):
+        tx = repo.writable_session()
+        a = tx.resize_array("x", (i + 1, width))
+        a[i] = np.full(width, i, dtype="float32")
+        tx.commit(f"append {i}")
+    return repo
+
+
+def _chunk_objects(repo):
+    return set(repo.store.list("chunks/"))
+
+
+# ---------------------------------------------------------------------------
+# planning
+# ---------------------------------------------------------------------------
+
+def test_plan_time_chunks_merges_under_budget():
+    # 4-byte items, 8 per row -> 32 B rows; 128 B budget -> 4 rows per chunk
+    assert plan_time_chunks((20, 8), (1, 8), 4, 128) == (4, 8)
+    # budget beyond the array: one tall chunk capped at the extent
+    assert plan_time_chunks((20, 8), (1, 8), 4, 1 << 20) == (20, 8)
+    # planned chunk is a multiple of the current one (old boundaries nest)
+    assert plan_time_chunks((100, 8), (3, 8), 4, 32 * 10) == (9, 8)
+    # never shrinks, single-chunk arrays come back unchanged
+    assert plan_time_chunks((20, 8), (1, 8), 4, 1) == (1, 8)
+    assert plan_time_chunks((6, 8), (16, 8), 4, 1 << 20) == (16, 8)
+    assert plan_time_chunks((0, 8), (2, 8), 4, 1 << 20) == (2, 8)
+
+
+def test_volume_profile_is_scan_aligned(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    tx = repo.writable_session()
+    a = tx.create_array("m", shape=(6, 8, 16), dtype="float32",
+                        chunks=(4, 8, 4))
+    a.write_full(np.arange(6 * 8 * 16, dtype="float32").reshape(6, 8, 16))
+    tx.commit("w")
+    before = repo.readonly_session().array("m").read()
+    compact(repo, "volume")
+    s = repo.readonly_session()
+    assert s.array("m").chunks == (1, 8, 16)
+    np.testing.assert_array_equal(s.array("m").read(), before)
+
+
+def test_unknown_profile_and_paths_fail_loudly(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=2)
+    with pytest.raises(ValueError, match="unknown compaction profile"):
+        compact(repo, "nope")
+    with pytest.raises(NotFound, match="no such arrays"):
+        compact(repo, "timeseries", paths=["y"])
+    assert resolve_profile(PROFILES["volume"]) is PROFILES["volume"]
+
+
+# ---------------------------------------------------------------------------
+# the core rewrite
+# ---------------------------------------------------------------------------
+
+def test_compact_merges_chunks_reads_bitwise(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=20)
+    s0 = repo.readonly_session()
+    before = s0.array("x").read()
+    shards_before = len(s0._doc["manifests"]["x"])
+
+    report = compact(repo, "timeseries")
+    assert report.committed
+    (ac,) = report.arrays
+    assert ac.reason == "rechunk"
+    assert ac.n_chunks_after < ac.n_chunks_before
+
+    s = repo.readonly_session()
+    np.testing.assert_array_equal(s.array("x").read(), before)  # bitwise
+    assert s.array("x").chunks == (20, 8)
+    # manifest shards merged along with the chunks
+    assert len(s._doc["manifests"]["x"]) < shards_before
+    # sidecars recomputed in the same pass: pruning still exact
+    assert s.has_stats("x")
+    pruned = s.array("x").scan(value_gt=10.0, prune=True)
+    blind = s.array("x").scan(value_gt=10.0, prune=False, pushdown=False)
+    np.testing.assert_array_equal(pruned.values, blind.values)
+    for a, b in zip(pruned.coords, blind.coords):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_compact_is_noop_second_time_same_snapshot_id(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=12)
+    first = compact(repo, "timeseries")
+    assert first.committed
+    second = compact(repo, "timeseries")
+    assert not second.committed and not second.arrays
+    assert second.snapshot_id == first.snapshot_id
+    assert repo.branch_head() == first.snapshot_id  # no extra commit
+
+
+def test_compact_preserves_unwritten_holes(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    tx = repo.writable_session()
+    a = tx.create_array("x", shape=(8, 4), dtype="float32", chunks=(1, 4))
+    a[0] = np.ones(4, dtype="float32")  # rows 1..7 never written
+    tx.commit("sparse")
+    # profile tuned so rows [0,4) and [4,8) become two new chunks
+    prof = CompactionProfile("test", target_chunk_bytes=4 * 4 * 4)
+    compact(repo, prof)
+    s = repo.readonly_session()
+    assert s.array("x").chunks == (4, 4)
+    assert s.chunk_ref("x", (0, 0)) is not None
+    assert s.chunk_ref("x", (1, 0)) is None  # pure hole stayed unwritten
+    got = s.array("x").read()
+    assert (got[0] == 1.0).all() and np.isnan(got[1:]).all()
+
+
+def test_rechunk_array_guards(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=4)
+    tx = repo.writable_session()
+    with pytest.raises(NotFound):
+        tx.rechunk_array("missing", (4, 8))
+    with pytest.raises(ValueError, match="rank"):
+        tx.rechunk_array("x", (4,))
+    with pytest.raises(ValueError, match="positive"):
+        tx.rechunk_array("x", (0, 8))
+    tx.array("x")[0] = np.zeros(8, dtype="float32")
+    with pytest.raises(RuntimeError, match="staged writes"):
+        tx.rechunk_array("x", (4, 8))
+
+
+# ---------------------------------------------------------------------------
+# racing a concurrent append
+# ---------------------------------------------------------------------------
+
+def test_compact_racing_append_keeps_both(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=6)
+    other = Repository.open(str(tmp_path / "r"))
+    orig_cas = repo.store.compare_and_swap
+    raced = []
+
+    def racing_cas(key, expected, new):
+        # an append lands between compaction's plan and its ref flip
+        if key.startswith("refs/branch.") and not raced:
+            raced.append(True)
+            tx = other.writable_session()
+            a = tx.resize_array("x", (7, 8))
+            a[6] = np.full(8, 99.0, dtype="float32")
+            tx.commit("racing append")
+        return orig_cas(key, expected, new)
+
+    repo.store.compare_and_swap = racing_cas
+    try:
+        report = compact(repo, "timeseries")
+    finally:
+        repo.store.compare_and_swap = orig_cas
+    assert report.committed and report.retries == 1
+    got = repo.readonly_session().array("x").read()
+    assert got.shape == (7, 8)
+    np.testing.assert_array_equal(got[6], np.full(8, 99.0, dtype="float32"))
+    np.testing.assert_array_equal(
+        got[:6],
+        np.repeat(np.arange(6, dtype="float32")[:, None], 8, axis=1),
+    )
+    # the race was replanned on top of: the appended row is compacted too
+    assert repo.readonly_session().array("x").chunks == (7, 8)
+
+
+def test_compact_gives_up_after_max_retries(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=4)
+    other = Repository.open(str(tmp_path / "r"))
+    orig_cas = repo.store.compare_and_swap
+    count = [0]
+
+    def always_raced(key, expected, new):
+        if key.startswith("refs/branch."):
+            count[0] += 1
+            tx = other.writable_session()
+            i = repo.readonly_session().array("x").shape[0]
+            a = tx.resize_array("x", (i + 1, 8))
+            a[i] = np.zeros(8, dtype="float32")
+            tx.commit("hot writer")
+        return orig_cas(key, expected, new)
+
+    repo.store.compare_and_swap = always_raced
+    try:
+        with pytest.raises(ConflictError, match="write-hot"):
+            compact(repo, "timeseries", max_retries=2)
+    finally:
+        repo.store.compare_and_swap = orig_cas
+    assert count[0] == 3  # initial attempt + max_retries
+
+
+# ---------------------------------------------------------------------------
+# migration: v1 / v2 / pre-v3 archives
+# ---------------------------------------------------------------------------
+
+def test_compact_migrates_v1_flat_manifest(tmp_path):
+    repo_v1 = _series_repo(tmp_path / "r", n=10, manifest_format=1)
+    old_head = repo_v1.branch_head()
+    old_raw = repo_v1.store.get(f"snapshots/{old_head}.json")
+    before = repo_v1.readonly_session().array("x").read()
+
+    repo = Repository.open(str(tmp_path / "r"))  # current-format writer
+    report = compact(repo, "timeseries")
+    assert report.committed and report.arrays[0].reason == "rechunk"
+    s = repo.readonly_session()
+    np.testing.assert_array_equal(s.array("x").read(), before)
+    assert isinstance(s._doc["manifests"]["x"], list)  # sharded now
+    assert s.has_stats("x")                            # backfilled now
+    # pre-migration history is untouched, byte for byte
+    assert repo.store.get(f"snapshots/{old_head}.json") == old_raw
+    old = repo.readonly_session(snapshot_id=old_head).array("x").read()
+    np.testing.assert_array_equal(old, before)
+
+
+def test_compact_backfills_stats_when_grid_already_optimal(tmp_path):
+    # v2 archive whose chunks already match the profile plan: the only
+    # work is the stat backfill, and the manifest must not change at all
+    repo_v2 = Repository.create(str(tmp_path / "r"), manifest_format=2)
+    tx = repo_v2.writable_session()
+    a = tx.create_array("z", shape=(4, 4), dtype="float32", chunks=(4, 4))
+    a.write_full(np.arange(16, dtype="float32").reshape(4, 4))
+    tx.commit("v2 write")
+    entry_before = repo_v2.readonly_session()._doc["manifests"]["z"]
+    chunks_before = _chunk_objects(repo_v2)
+
+    repo = Repository.open(str(tmp_path / "r"))
+    report = compact(repo, "timeseries")
+    assert report.committed and report.arrays[0].reason == "stats"
+    s = repo.readonly_session()
+    assert s.has_stats("z")
+    # identical grid + identical payloads dedup: same shard hashes, no
+    # new chunk objects
+    assert s._doc["manifests"]["z"] == entry_before
+    assert _chunk_objects(repo) == chunks_before
+    pruned = s.array("z").scan(value_gt=14.0, prune=True)
+    blind = s.array("z").scan(value_gt=14.0, prune=False, pushdown=False)
+    np.testing.assert_array_equal(pruned.values, blind.values)
+
+
+# ---------------------------------------------------------------------------
+# gc interaction
+# ---------------------------------------------------------------------------
+
+def test_gc_after_compaction_sweeps_only_superseded(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=16)
+    before = repo.readonly_session().array("x").read()
+    compact(repo, "timeseries")
+
+    # full-history gc keeps everything: old chunks are still referenced
+    # by ancestor snapshots (time travel works)
+    assert repo.gc(grace_seconds=0) == {
+        "snapshots": 0, "manifests": 0, "stats": 0, "chunks": 0,
+    }
+
+    head = repo.branch_head()
+    live = set()
+    s = repo.readonly_session()
+    for key in s._manifest("x").values():
+        live.add(f"chunks/{key}")
+    removed = repo.gc(grace_seconds=0, keep_history=False)
+    assert removed["chunks"] > 0 and removed["snapshots"] > 0
+    # exactly the head's referenced chunks survive
+    assert _chunk_objects(repo) == live
+    assert repo.branch_head() == head
+    np.testing.assert_array_equal(
+        repo.readonly_session().array("x").read(), before
+    )
+    # history ends cleanly at the expiry horizon
+    infos = list(repo.history())
+    assert len(infos) == 1 and infos[0].snapshot_id == head
+
+
+def test_commit_rebase_over_expired_ancestry_raises_conflict(tmp_path):
+    # a transaction older than the gc horizon must fail its rebase with
+    # ConflictError (callers' retry type), not a raw NotFound, when
+    # gc(keep_history=False) expired the snapshots between its base and
+    # the new head
+    repo = _series_repo(tmp_path / "r", n=2)
+    other = Repository.open(str(tmp_path / "r"))
+    tx = repo.writable_session()
+    tx.create_array("y", shape=(1,), dtype="float32", chunks=(1,))
+    for i in (2, 3):  # two commits on top, so the walk must read one doc
+        t2 = other.writable_session()
+        a = t2.resize_array("x", (i + 1, 8))
+        a[i] = np.zeros(8, dtype="float32")
+        t2.commit(f"append {i}")
+    other.gc(grace_seconds=0, keep_history=False)
+    with pytest.raises(ConflictError, match="expired by gc"):
+        tx.commit("stale transaction")
+
+
+def test_gc_keep_history_respects_tags(tmp_path):
+    repo = _series_repo(tmp_path / "r", n=8)
+    tagged = repo.branch_head()
+    repo.tag("pre-compact", tagged)
+    compact(repo, "timeseries")
+    repo.gc(grace_seconds=0, keep_history=False)
+    # the tagged snapshot (and its chunks) survived history expiry
+    got = repo.readonly_session(tag="pre-compact").array("x").read()
+    np.testing.assert_array_equal(
+        got, repo.readonly_session().array("x").read()
+    )
+
+
+# ---------------------------------------------------------------------------
+# operational wiring: ingest + catalog
+# ---------------------------------------------------------------------------
+
+def test_ingest_auto_compact_and_catalog_coverage(tmp_path):
+    from repro.catalog import Catalog, query as q
+    from repro.etl import generate_raw_archive, ingest
+
+    raw = ObjectStore(str(tmp_path / "raw"))
+    generate_raw_archive(raw, n_scans=6, n_az=24, n_gates=48, n_sweeps=2)
+    catalog = Catalog.create(str(tmp_path / "cat"))
+    repo = Repository.create(str(tmp_path / "r"))
+    report = ingest(raw, repo, batch_size=2, time_chunk=1,
+                    auto_compact_every=2, catalog=catalog, repo_id="KVNX")
+    assert report.compaction_ids
+    assert catalog.entry("KVNX").snapshot_id == repo.branch_head()
+
+    # reference: same feed, no compaction — data must match bitwise and
+    # the catalog must resolve the same queries on both
+    repo2 = Repository.create(str(tmp_path / "r2"))
+    catalog2 = Catalog.create(str(tmp_path / "cat2"))
+    ingest(raw, repo2, batch_size=2, time_chunk=1,
+           catalog=catalog2, repo_id="KVNX")
+    s1, s2 = repo.readonly_session(), repo2.readonly_session()
+    assert s1.list_arrays() == s2.list_arrays()
+    for p in s1.list_arrays():
+        np.testing.assert_array_equal(s1.array(p).read(), s2.array(p).read())
+
+    e1, e2 = catalog.entry("KVNX"), catalog2.entry("KVNX")
+    assert e1.vcps == e2.vcps and e1.bbox == e2.bbox  # coverage survived
+    r1 = q.query(catalog, q.moment("DBZH"), q.value_gt(30.0))
+    r2 = q.query(catalog2, q.moment("DBZH"), q.value_gt(30.0))
+    assert len(r1.scans) == len(r2.scans)
+    for a, b in zip(r1.scans, r2.scans):
+        np.testing.assert_array_equal(a.values, b.values)
+        for x, y in zip(a.coords, b.coords):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_time_chunk_must_be_positive(tmp_path):
+    from repro.core import RadarArchive
+    from repro.etl import ingest
+
+    repo = Repository.create(str(tmp_path / "r"))
+    with pytest.raises(ValueError, match="time_chunk"):
+        RadarArchive(repo, time_chunk=0)
+    with pytest.raises(ValueError, match="time_chunk"):
+        ingest(ObjectStore(str(tmp_path / "raw")), repo, time_chunk=-1)
+
+
+def test_catalog_note_snapshot_unknown_repo(tmp_path):
+    from repro.catalog import Catalog
+
+    catalog = Catalog.create(str(tmp_path / "cat"))
+    with pytest.raises(KeyError, match="not in catalog"):
+        catalog.note_snapshot("nope", "abc")
