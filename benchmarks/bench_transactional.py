@@ -27,11 +27,12 @@ from typing import List
 import numpy as np
 
 if __package__:
-    from .common import N_AZ, N_GATES, N_SWEEPS, Record, reference_archive
+    from .common import (N_AZ, N_GATES, N_SCANS, N_SWEEPS, Record,
+                         reference_archive)
 else:  # executed as a script: put the repo root on sys.path
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
     from benchmarks.common import (
-        N_AZ, N_GATES, N_SWEEPS, Record, reference_archive,
+        N_AZ, N_GATES, N_SCANS, N_SWEEPS, Record, reference_archive,
     )
 
 from repro.etl import generate_raw_archive, ingest
@@ -78,11 +79,14 @@ def _v1_compat_bitwise(base: Path) -> bool:
 
 
 def run(*, quick: bool = False) -> List[Record]:
-    tag, n_scans = ("quick", 8) if quick else ("default", None)
-    if n_scans is None:
-        raw, repo, _keys = reference_archive()
-    else:
-        raw, repo, _keys = reference_archive(tag, n_scans=n_scans)
+    # private archive: this bench appends scans and leaves the head moved,
+    # which must not leak into the other benches' shared cached archive
+    # (reusing the "quick"/"default" tags broke bench_timeseries whenever
+    # the two ran in one benchmarks.run invocation)
+    n_scans = 8 if quick else N_SCANS
+    raw, repo, _keys = reference_archive(
+        f"transactional-{'quick' if quick else 'default'}", n_scans=n_scans
+    )
     out: List[Record] = []
 
     sid0 = repo.branch_head()
@@ -90,8 +94,7 @@ def run(*, quick: bool = False) -> List[Record]:
                           vcp="VCP-212", sweep=4)
 
     # (a) live appends, one ACID commit each
-    base_scans = n_scans if n_scans is not None else 24
-    t0 = 1305849600.0 + base_scans * 270.0
+    t0 = 1305849600.0 + n_scans * 270.0
     n_appends = 2 if quick else 4
     t_start = time.perf_counter()
     for i in range(n_appends):

@@ -1,0 +1,170 @@
+"""CI benchmark-regression gate: fresh quick-bench JSON vs the committed
+baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH.json \
+        [--baseline benchmarks/BENCH_BASELINE.json] [--threshold 0.25]
+
+Diffs the two documents via :func:`benchmarks.make_perf_deltas.make_perf_deltas`
+and **fails (exit 1) on a > ``--threshold`` regression in any gated
+metric**.  Gated metrics are machine-independent by construction — chunk
+counts, pruning ratios, manifest bytes, bitwise-equality flags — so the
+gate holds on any runner.  Wall-clock records are printed for context
+but never gated (CI timing is noise); watch them in the uploaded
+artifact instead.
+
+A gated metric missing from the fresh run also fails — deleting a bench
+must not silently disable its gate.  To refresh the committed baseline
+after an *intentional* change (new bench geometry, a legitimate layout
+change), regenerate and commit it::
+
+    PYTHONPATH=src python -m benchmarks.run --quick \
+        --json benchmarks/BENCH_BASELINE.json \
+        --only ingest,transactional,timeseries,catalog,compaction,grid
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Tuple
+
+if __package__:
+    from .make_perf_deltas import make_perf_deltas
+else:  # executed as a script
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.make_perf_deltas import make_perf_deltas
+
+DEFAULT_BASELINE = "benchmarks/BENCH_BASELINE.json"
+DEFAULT_THRESHOLD = 0.25
+
+# (bench, metric, good direction): "lower" fails when the value *rises*
+# past the threshold, "higher" when it *falls*.  Every entry is a
+# deterministic count/ratio/flag — timing records are deliberately absent.
+GATED: List[Tuple[str, str, str]] = [
+    ("catalog", "chunks_read_pruned", "lower"),
+    ("catalog", "chunks_read_blind", "lower"),
+    ("catalog", "pruning_ratio", "higher"),
+    ("catalog", "query_matches", "higher"),
+    ("compaction", "chunks_after", "lower"),
+    ("compaction", "chunk_merge_ratio", "higher"),
+    ("compaction", "qvp_chunks_compacted", "lower"),
+    ("compaction", "point_series_chunks_compacted", "lower"),
+    ("compaction", "scan_pruned_chunks", "higher"),
+    ("transactional", "bitwise_after_appends", "higher"),
+    ("transactional", "bitwise_after_rollback", "higher"),
+    ("transactional", "v1_readback_bitwise", "higher"),
+    ("transactional", "manifest_bytes_last_append_v2", "lower"),
+    ("transactional", "manifest_write_amplification", "higher"),
+    ("grid", "kernel_ref_bitwise", "higher"),
+    ("grid", "mosaic_matches_sequential", "higher"),
+    ("grid", "product_roundtrip_bitwise", "higher"),
+    ("grid", "chunks_fetched_pruned", "lower"),
+    ("grid", "chunks_fetched_blind", "lower"),
+    ("grid", "window_pruning_ratio", "higher"),
+]
+
+
+def gate(baseline_doc: dict, fresh_doc: dict,
+         threshold: float = DEFAULT_THRESHOLD) -> Tuple[List[dict], List[str]]:
+    """-> (delta rows for the gated metrics, failure messages)."""
+    rows = make_perf_deltas(baseline_doc, fresh_doc,
+                            metrics=[(b, n) for b, n, _ in GATED])
+    direction = {(b, n): d for b, n, d in GATED}
+    failures: List[str] = []
+    for row in rows:
+        key = (row["bench"], row["name"])
+        if row["value"] is None:
+            failures.append(
+                f"{key[0]}.{key[1]}: gated metric missing from the fresh "
+                "run (bench removed or failed?)"
+            )
+            continue
+        if row["baseline"] is None:
+            # metric new in this PR: nothing to regress against.  Still
+            # worth a loud note — a truncated baseline refresh would land
+            # here for *existing* metrics and quietly disable their gates
+            # (tests/test_bench_compare.py pins the committed baseline
+            # covering every gated metric, so in CI this is always the
+            # new-metric case)
+            print(f"note: {key[0]}.{key[1]} absent from the baseline — "
+                  "gate skipped; refresh the baseline to arm it",
+                  file=sys.stderr)
+            continue
+        if row["delta"] is None:
+            # baseline is exactly 0: a relative delta is undefined, but the
+            # gate must not silently disable — any rise of a lower-is-better
+            # count from 0 is a regression (0 -> N is unbounded in relative
+            # terms); a higher-is-better metric cannot fall below 0-ish
+            bad = direction[key] == "lower" and row["value"] > 0.0
+            if bad:
+                failures.append(
+                    f"{key[0]}.{key[1]}: rose from a zero baseline to "
+                    f"{row['value']:g} (good direction: lower)"
+                )
+            continue
+        bad = (row["delta"] > threshold
+               if direction[key] == "lower"
+               else row["delta"] < -threshold)
+        if bad:
+            arrow = "rose" if row["delta"] > 0 else "fell"
+            failures.append(
+                f"{key[0]}.{key[1]}: {arrow} {abs(row['delta']):.0%} "
+                f"({row['baseline']:g} -> {row['value']:g}, "
+                f"good direction: {direction[key]})"
+            )
+    return rows, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="quick-bench JSON from this run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"committed baseline (default {DEFAULT_BASELINE})")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression allowed per gated metric "
+                         f"(default {DEFAULT_THRESHOLD:.0%})")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline_doc = json.load(f)
+    with open(args.fresh) as f:
+        fresh_doc = json.load(f)
+
+    rows, failures = gate(baseline_doc, fresh_doc, args.threshold)
+    print(f"baseline: {args.baseline} "
+          f"(python {baseline_doc.get('python', '?')})")
+    print(f"fresh:    {args.fresh} (python {fresh_doc.get('python', '?')})")
+    print(f"{'metric':44} {'baseline':>12} {'fresh':>12} {'delta':>8}")
+    for row in rows:
+        d = "" if row["delta"] is None else f"{row['delta']:+.1%}"
+        b = "-" if row["baseline"] is None else f"{row['baseline']:g}"
+        v = "-" if row["value"] is None else f"{row['value']:g}"
+        print(f"{row['bench'] + '.' + row['name']:44} {b:>12} {v:>12} "
+              f"{d:>8}")
+
+    # context only, never gated: wall-clock records that moved the most
+    timing = [r for r in make_perf_deltas(baseline_doc, fresh_doc)
+              if r["delta"] is not None
+              and (r["bench"], r["name"]) not in {(b, n) for b, n, _ in GATED}]
+    timing.sort(key=lambda r: -abs(r["delta"]))
+    if timing:
+        print("\nungated records with the largest drift (context only):")
+        for row in timing[:5]:
+            print(f"  {row['bench']}.{row['name']}: {row['delta']:+.1%}")
+
+    if failures:
+        print(f"\nREGRESSION GATE FAILED ({len(failures)} metric(s), "
+              f"threshold {args.threshold:.0%}):", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        print("If the change is intentional, refresh the baseline (see "
+              "module docstring).", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nregression gate OK ({len(rows)} gated metrics within "
+          f"{args.threshold:.0%})")
+
+
+if __name__ == "__main__":
+    main()

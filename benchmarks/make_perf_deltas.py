@@ -1,12 +1,52 @@
-"""Emit the §Perf before/after table for the three hillclimbed cells.
+"""Perf deltas: bench-document diffing + the §Perf before/after table.
 
-    PYTHONPATH=src python -m benchmarks.make_perf_deltas
+Two users:
+
+* :func:`make_perf_deltas` — pair two ``benchmarks.run --json`` documents
+  by ``(bench, name)`` and compute relative deltas.  This is the engine
+  behind :mod:`benchmarks.compare`, the CI benchmark-regression gate.
+* ``python -m benchmarks.make_perf_deltas`` — the historical roofline
+  before/after table for the hillclimbed training cells.
 """
 
 from __future__ import annotations
 
 import json
 from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def make_perf_deltas(
+    baseline_doc: Dict,
+    fresh_doc: Dict,
+    *,
+    metrics: Optional[Sequence[Tuple[str, str]]] = None,
+) -> List[Dict]:
+    """Pair two bench documents' records and compute relative deltas.
+
+    Returns one row per ``(bench, name)`` — the union of both documents,
+    or exactly ``metrics`` when given — with ``baseline``/``value``
+    (None when absent on that side) and ``delta``: ``(value - baseline)
+    / |baseline|``, or None when either side is missing or the baseline
+    is zero (sign conventions are the caller's business; this function
+    only measures).
+    """
+    def index(doc: Dict) -> Dict[Tuple[str, str], float]:
+        return {(r["bench"], r["name"]): float(r["value"])
+                for r in doc.get("records", [])}
+
+    base, fresh = index(baseline_doc), index(fresh_doc)
+    keys = (list(metrics) if metrics is not None
+            else sorted(set(base) | set(fresh)))
+    out: List[Dict] = []
+    for bench, name in keys:
+        b = base.get((bench, name))
+        v = fresh.get((bench, name))
+        delta = ((v - b) / abs(b)
+                 if b not in (None, 0.0) and v is not None else None)
+        out.append({"bench": bench, "name": name,
+                    "baseline": b, "value": v, "delta": delta})
+    return out
 
 CELLS = [
     # (arch, shape, baseline dir, optimized dir, what changed)

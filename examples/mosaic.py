@@ -1,0 +1,64 @@
+"""Polar->Cartesian gridding and a multi-site mosaic, end to end.
+
+Builds three single-site archives under one catalog, composites them
+onto a shared lat/lon grid through the query planner (only the time
+chunks inside the window are fetched), and writes each site's gridded
+product back into its own repository as a versioned DataTree node.
+
+    PYTHONPATH=src python examples/mosaic.py
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.catalog import Catalog, federated_mosaic
+from repro.etl import generate_raw_archive, ingest
+from repro.radar import (cappi_from_session, read_grid_product,
+                         write_grid_product)
+from repro.store import ObjectStore, Repository
+
+base = Path(tempfile.mkdtemp(prefix="repro-mosaic-"))
+catalog = Catalog.create(str(base / "catalog"))
+
+# -- three sites, one catalog ----------------------------------------------
+for i, site in enumerate(["KVNX", "KTLX", "KICT"]):
+    raw = ObjectStore(str(base / f"raw-{site}"))
+    generate_raw_archive(raw, site_id=site, n_scans=8, n_az=180,
+                         n_gates=600, n_sweeps=4, seed=21 + i)
+    repo = Repository.create(str(base / f"store-{site}"))
+    report = ingest(raw, repo, batch_size=4, workers=4,
+                    catalog=catalog, repo_id=site)
+    print(f"ingested {site}: {report.n_volumes} volumes")
+
+# -- single-site CAPPI off the store ---------------------------------------
+session = catalog.open_session("KVNX", read_workers=4)
+cappi = cappi_from_session(session, vcp="VCP-212", moment="DBZH",
+                           altitude_m=2000.0, ny=120, nx=120)
+print(f"KVNX CAPPI 2 km: {cappi.shape}, "
+      f"{np.isfinite(cappi.values).mean():.0%} of cells in reach, "
+      f"{cappi.chunk_fetches} chunks fetched")
+
+# -- multi-site composite through the planner ------------------------------
+t0, t1 = catalog.entry("KVNX").time_range()
+mosaic = federated_mosaic(
+    catalog, moment="DBZH", product="column_max",
+    time_between=(t0, (t0 + t1) / 2),     # planner prunes to these chunks
+    ny=160, nx=160, workers=3, read_workers=4,
+)
+print(f"mosaic over {mosaic.repo_ids}: composite {mosaic.composite.shape} "
+      f"on lat [{mosaic.grid.lat_min:.2f}, {mosaic.grid.lat_max:.2f}] x "
+      f"lon [{mosaic.grid.lon_min:.2f}, {mosaic.grid.lon_max:.2f}]")
+print(f"  {mosaic.chunk_fetches} chunks fetched across the federation, "
+      f"peak {np.nanmax(mosaic.composite):.1f} dBZ")
+
+# -- write-back: gridded products as versioned archive nodes ---------------
+for rid, product in mosaic.results.items():
+    repo = catalog.open_repository(rid)
+    sid = write_grid_product(repo, product, name="colmax_demo")
+    catalog.note_snapshot(rid, sid)     # coverage unchanged, head moved
+    back = read_grid_product(repo.readonly_session(), "colmax_demo")
+    assert np.array_equal(back.values, product.values, equal_nan=True)
+    print(f"  {rid}: product committed as {sid[:12]} "
+          f"(head refreshed in catalog)")

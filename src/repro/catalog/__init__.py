@@ -14,9 +14,11 @@ Three parts (paper FAIR framing, "Findable" first):
 
 from . import query
 from .federation import (
+    FederatedMosaic,
     FederatedPointSeries,
     FederatedQPE,
     FederatedQVP,
+    federated_mosaic,
     federated_point_series,
     federated_qpe,
     federated_qvp,
@@ -28,6 +30,7 @@ from .query import QueryPlan, QueryResult, Target, TargetScan, execute, plan
 __all__ = [
     "Catalog",
     "CatalogEntry",
+    "FederatedMosaic",
     "FederatedPointSeries",
     "FederatedQPE",
     "FederatedQVP",
@@ -37,6 +40,7 @@ __all__ = [
     "TargetScan",
     "coverage_bbox",
     "execute",
+    "federated_mosaic",
     "federated_point_series",
     "federated_qpe",
     "federated_qvp",

@@ -21,14 +21,19 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from ..radar import (
+    CartesianGrid,
+    GridProduct,
     PointSeries,
     QPEResult,
     QVPResult,
+    cappi_from_session,
+    column_max_from_session,
     point_series_from_session,
     qpe_from_session,
     qvp_from_session,
 )
 from .query import (
+    Box,
     Elevation,
     Moment,
     QueryPlan,
@@ -264,6 +269,113 @@ def federated_qpe(
     results = _fan_out(catalog, targets, run, workers=workers,
                        read_workers=read_workers, entries=plan_.entries)
     return FederatedQPE(repo_ids=list(results), results=results)
+
+
+@dataclass
+class FederatedMosaic:
+    """Multi-site Cartesian composite on one shared lat/lon grid.
+
+    ``results`` keeps each repository's full (time, ny, nx) product;
+    ``composite`` collapses time *and* sites with a NaN-aware max (the
+    national-composite convention for reflectivity) — a cell is NaN only
+    where no site ever reached it inside the window.
+    """
+
+    repo_ids: List[str]
+    results: "OrderedDict[str, GridProduct]"
+    composite: np.ndarray        # (ny, nx)
+    grid: CartesianGrid
+    moment: str
+    product: str
+
+    @property
+    def chunk_fetches(self) -> int:
+        """Store chunks fetched across every repository (the pruning
+        accounting benchmarks compare against a blind full-archive scan)."""
+        return int(sum(r.chunk_fetches for r in self.results.values()))
+
+
+def federated_mosaic(
+    catalog,
+    *,
+    moment: str = "DBZH",
+    product: str = "column_max",
+    altitude_m: float = 2000.0,
+    grid: Optional[CartesianGrid] = None,
+    ny: int = 240,
+    nx: int = 240,
+    vcp: Optional[str] = None,
+    sweep: Optional[int] = None,
+    elevation=None,
+    time_between: Optional[Tuple[float, float]] = None,
+    within=None,
+    repos=None,
+    method: str = "nearest",
+    mode: str = "auto",
+    workers: Optional[int] = None,
+    read_workers: int = 1,
+) -> FederatedMosaic:
+    """Grid + composite every matching repository onto one shared grid.
+
+    The planner does the pruning: repositories outside ``within`` (a
+    :func:`repro.catalog.query.within_box` predicate or a ``(lat_min,
+    lat_max, lon_min, lon_max)`` tuple) or with no coverage in
+    ``time_between`` are never opened, and each opened repository reads
+    only the time chunks its planner window resolves to.  ``product`` is
+    ``"column_max"`` (all matched sweeps) or ``"cappi"`` (constant
+    ``altitude_m``); ``grid`` defaults to the smallest grid covering the
+    matched repositories' catalog footprints, so mosaics are
+    reproducible from the catalog document alone.
+    """
+    if product not in ("column_max", "cappi"):
+        raise ValueError(
+            f"unknown mosaic product {product!r} (column_max|cappi)"
+        )
+    preds = _structural_predicates(moment, vcp, sweep, elevation,
+                                   time_between)
+    if within is not None:
+        preds.append(within if isinstance(within, Box)
+                     else Box(*map(float, within)))
+    plan_ = plan(catalog, *preds, repos=repos)
+    by_repo: "OrderedDict[str, List[Target]]" = OrderedDict()
+    for t in plan_.targets:  # already sorted (repo, vcp, sweep, moment)
+        by_repo.setdefault(t.repo_id, []).append(t)
+    if not by_repo:
+        raise ValueError("query matches no repository in the catalog")
+    for rid, targets in by_repo.items():
+        vcps = sorted({t.vcp for t in targets})
+        if len(vcps) > 1:
+            raise ValueError(
+                f"query is ambiguous for {rid!r}: VCPs {vcps} all match — "
+                "add a vcp() predicate"
+            )
+    if grid is None:
+        grid = CartesianGrid.covering(
+            [plan_.entries[rid].bbox for rid in by_repo], ny, nx
+        )
+
+    def run(session, targets: List[Target]) -> GridProduct:
+        ts = _workflow_time_slice(session, targets[0], plan_)
+        kw = dict(vcp=targets[0].vcp, moment=moment, grid=grid,
+                  sweeps=sorted({t.sweep for t in targets}),
+                  time_slice=ts, method=method, mode=mode)
+        if product == "cappi":
+            return cappi_from_session(session, altitude_m=altitude_m, **kw)
+        return column_max_from_session(session, **kw)
+
+    results = _fan_out(catalog, by_repo, run, workers=workers,
+                       read_workers=read_workers, entries=plan_.entries)
+    composite = np.fmax.reduce(
+        np.stack([r.composite() for r in results.values()], axis=0), axis=0
+    )
+    return FederatedMosaic(
+        repo_ids=list(results),
+        results=results,
+        composite=composite,
+        grid=grid,
+        moment=moment,
+        product=product,
+    )
 
 
 def federated_point_series(

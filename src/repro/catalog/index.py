@@ -58,9 +58,7 @@ def coverage_bbox(site: Dict[str, Any], vcps: Dict[str, Any]) -> Dict[str, float
             elev = float(sinfo.get("elevation", 0.0))
             if rng > 0.0:
                 reach = max(reach, float(geometry.ground_range_m(rng, elev)))
-    dlat = float(np.rad2deg(reach / geometry.EARTH_RADIUS_M))
-    coslat = max(np.cos(np.deg2rad(lat)), 1e-6)
-    dlon = float(np.rad2deg(reach / (geometry.EARTH_RADIUS_M * coslat)))
+    dlat, dlon = geometry.reach_box_deg(lat, reach)
     lon_min, lon_max = lon - dlon, lon + dlon
     if lon_min < -180.0 or lon_max > 180.0:
         # footprint crosses the antimeridian: an interval box cannot

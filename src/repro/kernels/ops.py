@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
+from .grid_map import grid_map_pallas
 from .mamba2_scan import mamba2_scan_pallas
 from .qvp_reduce import qvp_reduce_pallas
 from .zr_accum import zr_accum_pallas
@@ -54,6 +55,22 @@ def qvp_reduce(
     return qvp_reduce_pallas(field, quality, quality_min=float(quality_min),
                              min_valid_fraction=min_valid_fraction,
                              interpret=interpret)
+
+
+def grid_map(
+    field: jax.Array,          # (time, gates) flattened polar block
+    gate_idx: jax.Array,       # (cells, k) int32
+    weights: jax.Array,        # (cells, k) float32
+    *,
+    bt: int = 4,
+    bc: int = 1024,
+    mode: str = "auto",
+) -> jax.Array:
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.grid_map(field, gate_idx, weights)
+    return grid_map_pallas(field, gate_idx, weights, bt=bt, bc=bc,
+                           interpret=interpret)
 
 
 def zr_accum(

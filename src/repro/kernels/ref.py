@@ -43,6 +43,36 @@ def qvp_reduce(
 
 
 # ---------------------------------------------------------------------------
+# grid_map: polar -> Cartesian gather-regrid (repro.radar.grid)
+# ---------------------------------------------------------------------------
+
+def grid_map(
+    field: jax.Array,           # (time, gates) — flattened (az, range) axis
+    gate_idx: jax.Array,        # (cells, k) int32 flat gate indices
+    weights: jax.Array,         # (cells, k) float32, <= 0 means "no gate"
+) -> jax.Array:
+    """Masked weighted gather: polar gates -> Cartesian cells, (time, cells).
+
+    Each output cell is the weight-normalized mean of its (at most) k
+    contributing gates, skipping non-finite gate values and non-positive
+    weights; a cell with no valid contribution is NaN (outside the radar's
+    reach, or every neighbour missing).  ``weights`` of exactly 1 with
+    ``k == 1`` is nearest-neighbour; inverse-distance weights give IDW.
+    The (cells, k) map is precomputed once per (site geometry, grid) by
+    :class:`repro.radar.grid.GridMapping` and reused across scans.
+    """
+    f = field.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    vals = jnp.take(f, gate_idx.reshape(-1).astype(jnp.int32),
+                    axis=1).reshape(f.shape[0], *gate_idx.shape)
+    valid = jnp.isfinite(vals) & (w > 0.0)[None, :, :]
+    wv = jnp.where(valid, w[None, :, :], 0.0)
+    num = jnp.sum(jnp.where(valid, vals, 0.0) * wv, axis=-1)
+    den = jnp.sum(wv, axis=-1)
+    return jnp.where(den > 0.0, num / jnp.maximum(den, 1e-12), jnp.nan)
+
+
+# ---------------------------------------------------------------------------
 # zr_accum: Marshall–Palmer Z–R + time integration (paper §5.3)
 # ---------------------------------------------------------------------------
 

@@ -1,6 +1,10 @@
 """Radar science workflows over the DataTree (paper §5 case studies)."""
 
 from . import geometry
+from .grid import (CartesianGrid, GridMapping, GridProduct, build_mapping,
+                   cappi_from_session, column_max_from_session,
+                   grid_sweep_from_session, read_grid_product,
+                   write_grid_product)
 from .qpe import QPEResult, qpe_from_session, qpe_from_volumes
 from .qvp import QVPResult, qvp_from_session, qvp_from_volumes
 from .timeseries import (PointSeries, point_series_from_session,
@@ -8,6 +12,9 @@ from .timeseries import (PointSeries, point_series_from_session,
 
 __all__ = [
     "geometry",
+    "CartesianGrid", "GridMapping", "GridProduct", "build_mapping",
+    "cappi_from_session", "column_max_from_session",
+    "grid_sweep_from_session", "read_grid_product", "write_grid_product",
     "QPEResult", "qpe_from_session", "qpe_from_volumes",
     "QVPResult", "qvp_from_session", "qvp_from_volumes",
     "PointSeries", "point_series_from_session", "point_series_from_volumes",

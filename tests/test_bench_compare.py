@@ -1,0 +1,110 @@
+"""The CI benchmark-regression gate (benchmarks/compare.py) itself."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.compare import DEFAULT_BASELINE, GATED, gate  # noqa: E402
+from benchmarks.make_perf_deltas import make_perf_deltas  # noqa: E402
+
+
+def doc(values):
+    return {"records": [
+        {"bench": b, "name": n, "value": v} for (b, n), v in values.items()
+    ]}
+
+
+def test_make_perf_deltas_pairs_by_bench_and_name():
+    base = doc({("a", "x"): 10.0, ("a", "y"): 4.0, ("b", "x"): 1.0})
+    fresh = doc({("a", "x"): 15.0, ("a", "y"): 4.0, ("c", "z"): 2.0})
+    rows = {(r["bench"], r["name"]): r
+            for r in make_perf_deltas(base, fresh)}
+    assert rows[("a", "x")]["delta"] == pytest.approx(0.5)
+    assert rows[("a", "y")]["delta"] == 0.0
+    assert rows[("b", "x")]["value"] is None          # gone in fresh
+    assert rows[("b", "x")]["delta"] is None
+    assert rows[("c", "z")]["baseline"] is None       # new in fresh
+    assert rows[("c", "z")]["delta"] is None
+
+
+def test_make_perf_deltas_zero_baseline_never_divides():
+    rows = make_perf_deltas(doc({("a", "x"): 0.0}),
+                            doc({("a", "x"): 5.0}))
+    assert rows[0]["delta"] is None
+
+
+def test_gate_passes_identical_docs():
+    d = doc({(b, n): 10.0 for b, n, _ in GATED})
+    rows, failures = gate(d, d)
+    assert failures == []
+    assert len(rows) == len(GATED)
+
+
+def test_gate_direction_semantics():
+    base = doc({(b, n): 100.0 for b, n, _ in GATED})
+    # a "lower is better" metric rising 26% fails; 24% passes
+    for bump, expect_fail in ((126.0, True), (124.0, False)):
+        fresh_vals = {(b, n): 100.0 for b, n, _ in GATED}
+        fresh_vals[("grid", "chunks_fetched_pruned")] = bump
+        _, failures = gate(base, doc(fresh_vals))
+        assert bool(failures) is expect_fail, (bump, failures)
+    # a "higher is better" metric falling past the threshold fails
+    fresh_vals = {(b, n): 100.0 for b, n, _ in GATED}
+    fresh_vals[("grid", "window_pruning_ratio")] = 70.0
+    _, failures = gate(base, doc(fresh_vals))
+    assert len(failures) == 1 and "window_pruning_ratio" in failures[0]
+    # improvements in the good direction never fail, however large
+    fresh_vals = {(b, n): 100.0 for b, n, _ in GATED}
+    fresh_vals[("grid", "chunks_fetched_pruned")] = 1.0
+    fresh_vals[("catalog", "pruning_ratio")] = 1000.0
+    _, failures = gate(base, doc(fresh_vals))
+    assert failures == []
+
+
+def test_gate_zero_baseline_is_not_silently_skipped():
+    """A lower-is-better count regressing from a 0 baseline must still
+    fail even though a relative delta is undefined."""
+    base_vals = {(b, n): 100.0 for b, n, _ in GATED}
+    base_vals[("grid", "chunks_fetched_pruned")] = 0.0
+    base_vals[("catalog", "pruning_ratio")] = 0.0
+    fresh_vals = dict(base_vals)
+    fresh_vals[("grid", "chunks_fetched_pruned")] = 40.0   # 0 -> 40: fail
+    fresh_vals[("catalog", "pruning_ratio")] = 0.5         # higher: fine
+    _, failures = gate(doc(base_vals), doc(fresh_vals))
+    assert len(failures) == 1 and "zero baseline" in failures[0]
+    # staying at zero is not a regression
+    _, failures = gate(doc(base_vals), doc(base_vals))
+    assert failures == []
+
+
+def test_gate_missing_gated_metric_fails():
+    """Deleting a bench must not silently disable its gate."""
+    base = doc({(b, n): 10.0 for b, n, _ in GATED})
+    fresh_vals = {(b, n): 10.0 for b, n, _ in GATED}
+    del fresh_vals[("grid", "kernel_ref_bitwise")]
+    _, failures = gate(base, doc(fresh_vals))
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_gate_new_metric_without_baseline_passes():
+    """A metric added in this PR has nothing to regress against."""
+    base_vals = {(b, n): 10.0 for b, n, _ in GATED}
+    del base_vals[("grid", "kernel_ref_bitwise")]
+    fresh = doc({(b, n): 10.0 for b, n, _ in GATED})
+    _, failures = gate(doc(base_vals), fresh)
+    assert failures == []
+
+
+def test_committed_baseline_covers_every_gated_metric():
+    """The repo's committed baseline must carry all gated metrics, so the
+    CI gate can never silently skip one."""
+    path = Path(__file__).resolve().parent.parent / DEFAULT_BASELINE
+    baseline = json.loads(path.read_text())
+    have = {(r["bench"], r["name"]) for r in baseline["records"]}
+    missing = [(b, n) for b, n, _ in GATED if (b, n) not in have]
+    assert not missing, f"baseline lacks gated metrics: {missing}"
+    assert baseline.get("quick") is True  # CI compares quick runs

@@ -1,0 +1,85 @@
+"""Beam-geometry edge cases: antimeridian wrap, high-latitude accuracy.
+
+The gridding subsystem (repro.radar.grid) round-trips gate positions
+through gate_latlon / latlon_to_polar, so both must stay exact where the
+equirectangular shortcut historically was not: sites near the
+antimeridian (longitudes must wrap into [-180, 180)) and high-latitude
+sites (the single cos(lat) metres-per-degree correction degrades as the
+parallels converge).
+"""
+
+import numpy as np
+import pytest
+
+from repro.radar import geometry
+
+
+AZ_RING = np.arange(0.0, 360.0, 7.5)
+RANGES = np.array([1_000.0, 60_000.0, 150_000.0, 300_000.0])
+
+
+def test_wrap_lon_canonical_interval():
+    lons = np.array([-540.0, -180.0, -179.5, 0.0, 179.5, 180.0, 360.0, 725.0])
+    w = geometry.wrap_lon(lons)
+    assert np.all(w >= -180.0) and np.all(w < 180.0)
+    np.testing.assert_allclose(
+        w, [-180.0, -180.0, -179.5, 0.0, 179.5, -180.0, 0.0, 5.0]
+    )
+
+
+@pytest.mark.parametrize("method", ["spherical", "equirect"])
+@pytest.mark.parametrize("site_lon", [179.9, -179.9])
+def test_gate_latlon_wraps_at_antimeridian(method, site_lon):
+    """A ring of 300 km gates around a dateline site stays in [-180, 180)."""
+    az, rng = np.meshgrid(AZ_RING, RANGES, indexing="ij")
+    lat, lon = geometry.gate_latlon(52.0, site_lon, az, rng, 0.5,
+                                    method=method)
+    assert np.all(np.isfinite(lat)) and np.all(np.isfinite(lon))
+    assert np.all(lon >= -180.0) and np.all(lon < 180.0)
+    # gates straddle the dateline: some end up on each side of it
+    assert (lon > 170.0).any() and (lon < -170.0).any()
+
+
+@pytest.mark.parametrize("site_lat,site_lon", [
+    (36.74, -98.13),      # KVNX (mid-latitude reference)
+    (70.5, -156.6),       # Utqiagvik-like high-latitude site
+    (52.0, 179.9),        # dateline site
+])
+def test_latlon_polar_roundtrip_spherical(site_lat, site_lon):
+    """gate_latlon -> latlon_to_polar recovers (azimuth, ground range)."""
+    az, rng = np.meshgrid(AZ_RING, RANGES, indexing="ij")
+    elev = 0.5
+    lat, lon = geometry.gate_latlon(site_lat, site_lon, az, rng, elev)
+    az_back, s_back = geometry.latlon_to_polar(site_lat, site_lon, lat, lon)
+    s_want = geometry.ground_range_m(rng, elev)
+    np.testing.assert_allclose(s_back, s_want, rtol=1e-9, atol=1e-3)
+    daz = (az_back - az + 180.0) % 360.0 - 180.0
+    np.testing.assert_allclose(daz, 0.0, atol=1e-7)
+
+
+def test_equirect_degrades_at_high_latitude():
+    """The cos(lat) shortcut is fine at mid-latitudes but drifts km-scale
+    at 70°N — which is why the gridding mapping uses the spherical path."""
+    az = np.array([45.0])
+    rng = np.array([250_000.0])
+
+    def worst_error_m(site_lat):
+        lat_s, lon_s = geometry.gate_latlon(site_lat, 0.0, az, rng, 0.5)
+        lat_e, lon_e = geometry.gate_latlon(site_lat, 0.0, az, rng, 0.5,
+                                            method="equirect")
+        _, d = geometry.latlon_to_polar(float(lat_s[0]), float(lon_s[0]),
+                                        lat_e, lon_e)
+        return float(d[0])
+
+    mid, high = worst_error_m(35.0), worst_error_m(70.0)
+    assert mid < 5_000.0               # a few cells at mosaic resolution
+    assert high > 3.0 * mid            # visibly degraded at 70°N
+    assert high > 10_000.0             # tens-of-km absolute error
+
+
+def test_ground_range_below_slant_range():
+    rng = np.linspace(1_000.0, 300_000.0, 64)
+    for elev in (0.5, 4.0, 19.5):
+        s = geometry.ground_range_m(rng, elev)
+        assert np.all(s <= rng + 1e-6)
+        assert np.all(np.diff(s) > 0.0)  # monotone: invertible per sweep

@@ -1,0 +1,459 @@
+"""Polar->Cartesian gridding: mappings, products, write-back, mosaics."""
+
+import numpy as np
+import pytest
+
+from repro.catalog import Catalog, federated_mosaic
+from repro.core.datatree import RadarArchive
+from repro.etl import generate_raw_archive, ingest
+from repro.radar import (
+    CartesianGrid,
+    build_mapping,
+    cappi_from_session,
+    column_max_from_session,
+    grid_sweep_from_session,
+    read_grid_product,
+    write_grid_product,
+)
+from repro.radar import geometry
+from repro.radar.grid import clear_mapping_cache, mapping_cache_stats
+from repro.store import ObjectStore, Repository
+
+VCP = "VCP-212"
+SITE_LAT, SITE_LON = 36.7406, -98.1279  # KVNX
+
+
+@pytest.fixture(scope="module")
+def gridded_archive(tmp_path_factory):
+    raw = ObjectStore(str(tmp_path_factory.mktemp("raw")))
+    generate_raw_archive(raw, n_scans=6, n_az=72, n_gates=200, n_sweeps=3,
+                         seed=7)
+    repo = Repository.create(str(tmp_path_factory.mktemp("repo")))
+    # small time chunks: the partial-read assertions need several per array
+    ingest(raw, repo, batch_size=3, time_chunk=2)
+    return repo
+
+
+@pytest.fixture()
+def session(gridded_archive):
+    s = RadarArchive(gridded_archive).session()
+    yield s
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# CartesianGrid
+# ---------------------------------------------------------------------------
+
+
+def test_grid_validation():
+    with pytest.raises(ValueError, match="inverted latitude"):
+        CartesianGrid(40.0, 35.0, -99.0, -96.0, 8, 8)
+    with pytest.raises(ValueError, match="antimeridian"):
+        CartesianGrid(35.0, 40.0, 179.0, -179.0, 8, 8)
+    with pytest.raises(ValueError, match="1x1"):
+        CartesianGrid(35.0, 40.0, -99.0, -96.0, 0, 8)
+
+
+def test_grid_cell_centers_inside_extent():
+    g = CartesianGrid(35.0, 37.0, -99.0, -96.0, 10, 20)
+    lats, lons = g.lats(), g.lons()
+    assert lats.shape == (10,) and lons.shape == (20,)
+    assert lats[0] > 35.0 and lats[-1] < 37.0
+    assert lons[0] > -99.0 and lons[-1] < -96.0
+    assert np.all(np.diff(lats) > 0) and np.all(np.diff(lons) > 0)
+
+
+def test_grid_rejects_out_of_range_extents():
+    with pytest.raises(ValueError, match=r"\[-90, 90\]"):
+        CartesianGrid(85.0, 92.0, -99.0, -96.0, 8, 8)
+    with pytest.raises(ValueError, match=r"\[-180, 180\]"):
+        CartesianGrid(35.0, 40.0, 175.0, 185.0, 8, 8)
+
+
+def test_grid_around_clamps_at_pole_and_dateline():
+    polar = CartesianGrid.around(88.0, 0.0, 460_000.0, 16, 16)
+    assert polar.lat_max == 90.0 and polar.lat_min < 88.0
+    dateline = CartesianGrid.around(52.0, 179.5, 200_000.0, 16, 16)
+    assert dateline.lon_max == 180.0 and dateline.lon_min < 179.5
+
+
+def test_grid_around_site_is_centred():
+    g = CartesianGrid.around(SITE_LAT, SITE_LON, 100_000.0, 16, 16)
+    np.testing.assert_allclose((g.lat_min + g.lat_max) / 2, SITE_LAT)
+    np.testing.assert_allclose((g.lon_min + g.lon_max) / 2, SITE_LON)
+    # 100 km reach ~ 0.9 deg latitude half-extent
+    assert 0.8 < (g.lat_max - g.lat_min) / 2 < 1.0
+
+
+def test_grid_covering_union():
+    g = CartesianGrid.covering([
+        {"lat_min": 35.0, "lat_max": 37.0, "lon_min": -99.0, "lon_max": -97.0},
+        {"lat_min": 34.0, "lat_max": 36.0, "lon_min": -98.0, "lon_max": -96.0},
+    ], 8, 8)
+    assert (g.lat_min, g.lat_max, g.lon_min, g.lon_max) == \
+        (34.0, 37.0, -99.0, -96.0)
+    with pytest.raises(ValueError):
+        CartesianGrid.covering([])
+
+
+def test_grid_covering_clamps_polar_bboxes():
+    """coverage_bbox is a deliberate superset and may cross a pole for
+    high-latitude sites; the covering grid clamps rather than raises."""
+    g = CartesianGrid.covering([
+        {"lat_min": 84.0, "lat_max": 92.1, "lon_min": -180.0,
+         "lon_max": 180.0},
+    ], 8, 8)
+    assert g.lat_max == 90.0 and g.lat_min == 84.0
+    assert (g.lon_min, g.lon_max) == (-180.0, 180.0)
+
+
+# ---------------------------------------------------------------------------
+# GridMapping
+# ---------------------------------------------------------------------------
+
+
+def _toy_geometry():
+    azimuth = np.arange(0.0, 360.0, 5.0)           # 72 radials
+    range_m = np.arange(500.0, 100_500.0, 500.0)   # 200 gates
+    return azimuth, range_m
+
+
+def test_nearest_mapping_recovers_gate_values():
+    """A grid whose cells sit exactly on gate positions gathers exactly
+    those gates' values (identity field encodes (az, rng) indices)."""
+    azimuth, range_m = _toy_geometry()
+    elev = 0.5
+    # put cells on a handful of exact gate positions via a 1-cell grid each
+    rng_idx = [10, 80, 199]
+    az_idx = [0, 17, 54]
+    field = (np.arange(len(azimuth) * len(range_m), dtype=np.float32)
+             .reshape(1, len(azimuth), len(range_m)))
+    for ai in az_idx:
+        for ri in rng_idx:
+            lat, lon = geometry.gate_latlon(SITE_LAT, SITE_LON,
+                                            azimuth[ai], range_m[ri], elev)
+            eps = 1e-4
+            g = CartesianGrid(float(lat) - eps, float(lat) + eps,
+                              float(lon) - eps, float(lon) + eps, 1, 1)
+            m = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, elev, g)
+            assert m.weights.shape == (1, 1) and m.weights[0, 0] == 1.0
+            assert m.gate_idx[0, 0] == ai * len(range_m) + ri
+
+
+def test_mapping_out_of_reach_cells_have_zero_weight():
+    azimuth, range_m = _toy_geometry()
+    g = CartesianGrid.around(SITE_LAT, SITE_LON, 150_000.0, 32, 32)
+    m = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, 0.5, g)
+    reach = m.in_reach().reshape(32, 32)
+    assert not reach[0, 0] and not reach[-1, -1]    # corners beyond 100 km
+    assert reach[16, 16]                             # centre over the site
+    # reach is a disc: fraction ~ pi * (100/150)^2 / 4 within the square
+    frac = reach.mean()
+    assert 0.25 < frac < 0.45
+
+
+def test_mapping_cache_roundtrip():
+    clear_mapping_cache()
+    azimuth, range_m = _toy_geometry()
+    g = CartesianGrid.around(SITE_LAT, SITE_LON, 80_000.0, 16, 16)
+    m1 = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, 0.5, g)
+    m2 = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, 0.5, g)
+    assert m1 is m2
+    stats = mapping_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    # a different elevation is a different mapping
+    m3 = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, 4.0, g)
+    assert m3 is not m1
+    assert mapping_cache_stats()["misses"] == 2
+
+
+def test_idw_constant_field_stays_constant():
+    azimuth, range_m = _toy_geometry()
+    g = CartesianGrid.around(SITE_LAT, SITE_LON, 60_000.0, 24, 24)
+    m = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, 0.5, g,
+                      method="idw")
+    from repro.kernels import ref
+    field = np.full((2, len(azimuth) * len(range_m)), 7.5, np.float32)
+    out = np.asarray(ref.grid_map(field, m.gate_idx, m.weights))
+    reach = m.in_reach()
+    np.testing.assert_allclose(out[:, reach], 7.5, rtol=1e-6)
+    assert np.isnan(out[:, ~reach]).all()
+
+
+def test_idw_no_duplicate_gate_double_count():
+    """Bracket-degenerate cells (beyond the last gate, inside the
+    half-spacing tolerance) must not count one gate twice."""
+    azimuth, range_m = _toy_geometry()
+    g = CartesianGrid.around(SITE_LAT, SITE_LON, 95_000.0, 64, 64)
+    m = build_mapping(SITE_LAT, SITE_LON, azimuth, range_m, 0.5, g,
+                      method="idw")
+    flat = np.where(m.weights > 0, m.gate_idx, -np.arange(4)[None, :] - 1)
+    for c in np.nonzero(m.in_reach())[0][:512]:
+        live = flat[c][flat[c] >= 0]
+        assert len(live) == len(set(live.tolist()))
+
+
+def test_unknown_mapping_method_raises():
+    with pytest.raises(ValueError, match="unknown method"):
+        build_mapping(SITE_LAT, SITE_LON, *_toy_geometry(), 0.5,
+                      CartesianGrid.around(SITE_LAT, SITE_LON, 1e4, 2, 2),
+                      method="bilinear")
+
+
+def test_mixed_geometry_sweeps_raise(gridded_archive, tmp_path):
+    """CAPPI/column-max refuse to blend sweeps whose (azimuth, range)
+    axes differ — e.g. a long-range surveillance cut next to short ones."""
+    repo = Repository.create(str(tmp_path / "mixed"))
+    tx = repo.writable_session()
+    tx.update_group_attrs("", {"site_id": "KVNX", "latitude": SITE_LAT,
+                               "longitude": SITE_LON, "altitude": 369.0})
+    tx.create_group(VCP, {"vcp_id": 212})
+    t = tx.create_array(f"{VCP}/time", shape=(1,), dtype="float64",
+                        chunks=(1,))
+    t.write_full(np.array([0.0]))
+    for si, n_gates in ((0, 100), (1, 160)):   # sweep 1: longer range
+        g = f"{VCP}/sweep_{si}"
+        tx.create_group(g, {"sweep_number": si, "fixed_angle": 0.5 + si})
+        az = tx.create_array(f"{g}/azimuth", shape=(36,), dtype="float32",
+                             chunks=(36,))
+        az.write_full(np.arange(0, 360, 10, dtype=np.float32))
+        rg = tx.create_array(f"{g}/range", shape=(n_gates,),
+                             dtype="float32", chunks=(n_gates,))
+        rg.write_full(np.arange(n_gates, dtype=np.float32) * 500 + 500)
+        m = tx.create_array(f"{g}/DBZH", shape=(1, 36, n_gates),
+                            dtype="float32", chunks=(1, 36, n_gates))
+        m.write_full(np.zeros((1, 36, n_gates), np.float32))
+    tx.commit("mixed-geometry archive")
+    s = repo.readonly_session()
+    with pytest.raises(ValueError, match="mixed .azimuth, range. geometry"):
+        cappi_from_session(s, vcp=VCP, altitude_m=2000.0, ny=8, nx=8)
+    # single-sweep gridding of either cut still works
+    one = grid_sweep_from_session(s, vcp=VCP, sweep=1, ny=8, nx=8)
+    assert one.values.shape == (1, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# Products off the store
+# ---------------------------------------------------------------------------
+
+
+def test_ppi_kernel_matches_ref_mode(session):
+    a = grid_sweep_from_session(session, vcp=VCP, sweep=0, ny=40, nx=40,
+                                mode="ref")
+    b = grid_sweep_from_session(session, vcp=VCP, sweep=0, ny=40, nx=40,
+                                mode="kernel")
+    np.testing.assert_array_equal(a.values, b.values)  # bitwise (interpret)
+
+
+def test_cappi_cells_come_from_some_sweep(session):
+    """Every CAPPI cell equals that cell's value in one of the per-sweep
+    grids (nearest sampling selects, never blends across sweeps)."""
+    cap = cappi_from_session(session, vcp=VCP, altitude_m=3000.0,
+                             ny=36, nx=36)
+    ppis = [grid_sweep_from_session(session, vcp=VCP, sweep=s, grid=cap.grid)
+            for s in (0, 1, 2)]
+    stack = np.stack([p.values for p in ppis])          # (S, T, ny, nx)
+    matches = (stack == cap.values[None]) | (
+        np.isnan(stack) & np.isnan(cap.values[None])
+    )
+    assert matches.any(axis=0).all()
+
+
+def test_cappi_altitude_selects_higher_sweeps(session):
+    """Raising the target altitude must move cells to higher elevations,
+    raising (or keeping) the sampled beam height near the site."""
+    low = cappi_from_session(session, vcp=VCP, altitude_m=500.0,
+                             ny=36, nx=36)
+    high = cappi_from_session(session, vcp=VCP, altitude_m=8000.0,
+                              grid=low.grid)
+    ppis = [grid_sweep_from_session(session, vcp=VCP, sweep=s, grid=low.grid)
+            for s in (0, 1, 2)]
+    stack = np.stack([p.values for p in ppis])
+
+    def chosen_sweep(cap):
+        eq = (stack == cap.values[None])
+        return np.where(eq.any(axis=0), eq.argmax(axis=0), -1)
+
+    cl, ch = chosen_sweep(low), chosen_sweep(high)
+    both = (cl >= 0) & (ch >= 0)
+    assert both.any()
+    assert (ch[both] >= cl[both]).mean() > 0.95
+    assert (ch[both] > cl[both]).any()
+
+
+def test_column_max_is_fmax_of_ppis(session):
+    cm = column_max_from_session(session, vcp=VCP, ny=36, nx=36)
+    ppis = [grid_sweep_from_session(session, vcp=VCP, sweep=s, grid=cm.grid)
+            for s in (0, 1, 2)]
+    want = np.fmax.reduce(np.stack([p.values for p in ppis]), axis=0)
+    np.testing.assert_array_equal(cm.values, want)
+
+
+def test_time_slice_partial_read(gridded_archive):
+    # fresh session per arm: chunk_fetches counts cache *misses*, so the
+    # decoded-chunk LRU of a shared session would hide the second read
+    archive = RadarArchive(gridded_archive)
+    with_full, with_part = archive.session(), archive.session()
+    full = cappi_from_session(with_full, vcp=VCP, altitude_m=2000.0,
+                              ny=30, nx=30)
+    part = cappi_from_session(with_part, vcp=VCP, altitude_m=2000.0,
+                              grid=full.grid, time_slice=(2, 4))
+    with_full.close(), with_part.close()
+    np.testing.assert_array_equal(part.values, full.values[2:4])
+    np.testing.assert_array_equal(part.times, full.times[2:4])
+    assert 0 < part.chunk_fetches < full.chunk_fetches
+
+
+# ---------------------------------------------------------------------------
+# Write-back as versioned DataTree nodes
+# ---------------------------------------------------------------------------
+
+
+def test_write_back_roundtrip_and_versioning(gridded_archive):
+    repo = gridded_archive
+    session = RadarArchive(repo).session()
+    cap = cappi_from_session(session, vcp=VCP, altitude_m=2000.0,
+                             ny=24, nx=24)
+    sid1 = write_grid_product(repo, cap, name="cappi2k")
+    assert repo.branch_head() == sid1
+
+    s1 = RadarArchive(repo).session()
+    back = read_grid_product(s1, "cappi2k")
+    np.testing.assert_array_equal(back.values, cap.values)
+    np.testing.assert_array_equal(back.times, cap.times)
+    assert back.product == "cappi"
+    assert back.params["altitude_m"] == 2000.0
+    assert back.grid == cap.grid
+    np.testing.assert_allclose(
+        s1.array("products/cappi2k/latitude").read(), cap.grid.lats()
+    )
+
+    # products carry stat sidecars: value queries prune them like moments
+    assert s1.has_stats("products/cappi2k/DBZH")
+    res = s1.array("products/cappi2k/DBZH").scan(value_gt=1e9)
+    assert res.stats.n_pruned == res.stats.n_chunks > 0
+
+    # re-writing the same name replaces the head product ...
+    cap2 = cappi_from_session(session, vcp=VCP, altitude_m=4000.0,
+                              grid=cap.grid)
+    sid2 = write_grid_product(repo, cap2, name="cappi2k")
+    s2 = RadarArchive(repo).session()
+    np.testing.assert_array_equal(
+        read_grid_product(s2, "cappi2k").values, cap2.values
+    )
+    # ... while the previous version stays readable via time travel
+    old = RadarArchive(repo).tree(snapshot_id=sid1)
+    np.testing.assert_array_equal(
+        old["products/cappi2k/DBZH"].values(), cap.values
+    )
+    assert sid2 != sid1
+    session.close()
+
+
+def test_raw_moments_unchanged_by_product_write(gridded_archive):
+    s = RadarArchive(gridded_archive).session()
+    dbzh = s.array(f"{VCP}/sweep_0/DBZH").read()
+    assert dbzh.shape[0] == 6  # product commits resized nothing
+    assert np.isfinite(dbzh).any()
+
+
+# ---------------------------------------------------------------------------
+# Federated mosaics through the catalog planner
+# ---------------------------------------------------------------------------
+
+SITES = ["KVNX", "KTLX", "KICT"]
+
+
+@pytest.fixture(scope="module")
+def mosaic_catalog(tmp_path_factory):
+    base = tmp_path_factory.mktemp("mosaic")
+    catalog = Catalog.create(str(base / "catalog"))
+    for i, site in enumerate(SITES):
+        raw = ObjectStore(str(base / f"raw-{site}"))
+        generate_raw_archive(raw, site_id=site, n_scans=6, n_az=72,
+                             n_gates=300, n_sweeps=3, seed=21 + i)
+        repo = Repository.create(str(base / f"store-{site}"))
+        ingest(raw, repo, batch_size=3, time_chunk=2, catalog=catalog,
+               repo_id=site)
+    return catalog
+
+
+def test_federated_mosaic_equals_sequential_composite(mosaic_catalog):
+    mos = federated_mosaic(mosaic_catalog, product="column_max",
+                           ny=48, nx=48, workers=3)
+    assert mos.repo_ids == sorted(SITES)
+    assert mos.composite.shape == (48, 48)
+    # the fan-out must equal compositing each repository by hand, bitwise
+    seq = np.fmax.reduce(
+        np.stack([mos.results[r].composite() for r in sorted(SITES)]), axis=0
+    )
+    np.testing.assert_array_equal(mos.composite, seq)
+    # all sites grid onto the *same* shared grid
+    for r in mos.results.values():
+        assert r.grid == mos.grid
+    # three overlapping sites: some cells are covered by several radars
+    covered = np.isfinite(np.stack(
+        [mos.results[r].composite() for r in SITES]
+    )).sum(axis=0)
+    assert (covered >= 2).any()
+
+
+def test_federated_mosaic_time_window_prunes_chunks(mosaic_catalog):
+    t0, t1 = mosaic_catalog.entry("KVNX").time_range()
+    blind = federated_mosaic(mosaic_catalog, ny=32, nx=32)
+    pruned = federated_mosaic(mosaic_catalog, ny=32, nx=32,
+                              time_between=(t0, t0 + 0.4 * (t1 - t0)))
+    assert 0 < pruned.chunk_fetches < blind.chunk_fetches
+    # windowed values are a prefix slice of the full mosaic's per-repo grids
+    for rid in SITES:
+        n = pruned.results[rid].values.shape[0]
+        np.testing.assert_array_equal(
+            pruned.results[rid].values, blind.results[rid].values[:n]
+        )
+
+
+def test_federated_mosaic_bbox_prunes_repositories(mosaic_catalog):
+    # a box overlapping only KICT's footprint opens only KICT
+    mos = federated_mosaic(mosaic_catalog, ny=16, nx=16,
+                           within=(38.2, 39.0, -98.5, -97.0))
+    assert mos.repo_ids == ["KICT"]
+    with pytest.raises(ValueError, match="matches no repository"):
+        federated_mosaic(mosaic_catalog, ny=16, nx=16,
+                         within=(10.0, 11.0, 0.0, 1.0))
+
+
+def test_federated_mosaic_empty_window_is_all_nan(mosaic_catalog):
+    """A window inside coverage that matches no scan timestamp yields a
+    zero-scan product and an all-NaN composite, not a reduction crash."""
+    t0, _ = mosaic_catalog.entry("KVNX").time_range()
+    mos = federated_mosaic(mosaic_catalog, ny=16, nx=16,
+                           time_between=(t0 + 1.0, t0 + 2.0))
+    assert np.isnan(mos.composite).all()
+    for r in mos.results.values():
+        assert r.values.shape[0] == 0
+
+
+def test_federated_mosaic_cappi_product(mosaic_catalog):
+    mos = federated_mosaic(mosaic_catalog, product="cappi",
+                           altitude_m=2000.0, ny=32, nx=32)
+    for rid, r in mos.results.items():
+        assert r.product == "cappi"
+        assert r.params["altitude_m"] == 2000.0
+    with pytest.raises(ValueError, match="unknown mosaic product"):
+        federated_mosaic(mosaic_catalog, product="vil")
+
+
+def test_mosaic_writes_back_per_site(mosaic_catalog):
+    """The mosaic's per-site grids round-trip into their own repositories
+    as versioned product nodes, and the catalog head refresh keeps the
+    entry pointing at the new snapshot."""
+    mos = federated_mosaic(mosaic_catalog, product="column_max",
+                           ny=24, nx=24)
+    rid = "KVNX"
+    repo = mosaic_catalog.open_repository(rid)
+    sid = write_grid_product(repo, mos.results[rid], name="colmax")
+    mosaic_catalog.note_snapshot(rid, sid)
+    assert mosaic_catalog.entry(rid).snapshot_id == sid
+    back = read_grid_product(repo.readonly_session(), "colmax")
+    np.testing.assert_array_equal(back.values, mos.results[rid].values)

@@ -13,6 +13,7 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grid_map import grid_map_pallas
 from repro.kernels.mamba2_scan import mamba2_scan_pallas
 from repro.kernels.qvp_reduce import qvp_reduce_pallas
 from repro.kernels.zr_accum import zr_accum_pallas
@@ -57,6 +58,80 @@ def test_qvp_reduce_all_invalid_row_is_nan():
     field = np.full((2, 8, 16), np.nan, dtype=np.float32)
     out = qvp_reduce_pallas(field, np.ones_like(field), interpret=True)
     assert np.isnan(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# grid_map
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.integers(1, 9),
+    g=st.integers(8, 4000),
+    c=st.integers(1, 3000),
+    k=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 999),
+)
+@settings(max_examples=20, deadline=None)
+def test_grid_map_matches_ref_bitwise(t, g, c, k, seed):
+    """Interpret mode must equal the oracle *bitwise* (same op order) —
+    the equality bench_grid.py gates in CI."""
+    rng = np.random.default_rng(seed)
+    field = rng.normal(20.0, 12.0, size=(t, g)).astype(np.float32)
+    field[rng.random((t, g)) < 0.2] = np.nan
+    idx = rng.integers(0, g, size=(c, k)).astype(np.int32)
+    w = rng.uniform(0.0, 2.0, size=(c, k)).astype(np.float32)
+    w[rng.random((c, k)) < 0.3] = 0.0     # dropped neighbours
+    got = np.asarray(grid_map_pallas(field, idx, w, bt=4, bc=256,
+                                     interpret=True))
+    want = np.asarray(ref.grid_map(field, idx, w))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_grid_map_nearest_is_plain_gather():
+    """k=1 unit weights: each cell is exactly its gate's value."""
+    rng = np.random.default_rng(1)
+    field = rng.normal(size=(3, 50)).astype(np.float32)
+    idx = rng.integers(0, 50, size=(20, 1)).astype(np.int32)
+    w = np.ones((20, 1), np.float32)
+    out = np.asarray(grid_map_pallas(field, idx, w, interpret=True))
+    np.testing.assert_array_equal(out, field[:, idx[:, 0]])
+
+
+def test_grid_map_zero_weight_cell_is_nan():
+    """Cells out of radar reach (all weights 0) come back NaN."""
+    field = np.ones((2, 16), np.float32)
+    idx = np.zeros((5, 4), np.int32)
+    w = np.zeros((5, 4), np.float32)
+    w[2] = 1.0  # one in-reach cell
+    out = np.asarray(grid_map_pallas(field, idx, w, interpret=True))
+    assert np.isnan(out[:, [0, 1, 3, 4]]).all()
+    np.testing.assert_array_equal(out[:, 2], 1.0)
+
+
+def test_grid_map_empty_axes_match_ref():
+    """T=0 (empty planner window) and C=0 must not crash the tiler and
+    must agree with the oracle's empty results."""
+    idx = np.zeros((5, 2), np.int32)
+    w = np.ones((5, 2), np.float32)
+    out = np.asarray(grid_map_pallas(np.empty((0, 16), np.float32), idx, w,
+                                     interpret=True))
+    want = np.asarray(ref.grid_map(np.empty((0, 16), np.float32), idx, w))
+    assert out.shape == want.shape == (0, 5)
+    out = np.asarray(grid_map_pallas(
+        np.ones((3, 16), np.float32), np.zeros((0, 2), np.int32),
+        np.zeros((0, 2), np.float32), interpret=True,
+    ))
+    assert out.shape == (3, 0)
+
+
+def test_grid_map_skips_nan_gates():
+    """A NaN neighbour drops out of the weighted mean instead of
+    poisoning the cell."""
+    field = np.array([[1.0, np.nan, 3.0]], np.float32)
+    idx = np.array([[0, 1], [1, 2]], np.int32)
+    w = np.ones((2, 2), np.float32)
+    out = np.asarray(grid_map_pallas(field, idx, w, interpret=True))
+    np.testing.assert_allclose(out, [[1.0, 3.0]])
 
 
 # ---------------------------------------------------------------------------
