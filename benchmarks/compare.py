@@ -67,6 +67,20 @@ GATED: List[Tuple[str, str, str]] = [
 ]
 
 
+def missing_from_baseline(baseline_doc: dict) -> List[str]:
+    """Gated metrics the committed baseline does not carry, each message
+    naming the bench file that emits the metric (so a truncated baseline
+    refresh says exactly which ``--only`` selection to rerun)."""
+    have = {(r.get("bench"), r.get("name"))
+            for r in baseline_doc.get("records", [])}
+    return [
+        f"{b}.{n}: gated metric absent from the committed baseline — "
+        f"regenerate it including benchmarks/bench_{b}.py (see module "
+        "docstring)"
+        for b, n, _ in GATED if (b, n) not in have
+    ]
+
+
 def gate(baseline_doc: dict, fresh_doc: dict,
          threshold: float = DEFAULT_THRESHOLD) -> Tuple[List[dict], List[str]]:
     """-> (delta rows for the gated metrics, failure messages)."""
@@ -86,9 +100,9 @@ def gate(baseline_doc: dict, fresh_doc: dict,
             # metric new in this PR: nothing to regress against.  Still
             # worth a loud note — a truncated baseline refresh would land
             # here for *existing* metrics and quietly disable their gates
-            # (tests/test_bench_compare.py pins the committed baseline
-            # covering every gated metric, so in CI this is always the
-            # new-metric case)
+            # (``missing_from_baseline`` hard-fails that case in main(),
+            # naming the bench file, and tests/test_bench_compare.py pins
+            # the committed baseline covering every gated metric)
             print(f"note: {key[0]}.{key[1]} absent from the baseline — "
                   "gate skipped; refresh the baseline to arm it",
                   file=sys.stderr)
@@ -131,6 +145,14 @@ def main() -> None:
         baseline_doc = json.load(f)
     with open(args.fresh) as f:
         fresh_doc = json.load(f)
+
+    uncovered = missing_from_baseline(baseline_doc)
+    if uncovered:
+        print(f"BASELINE COVERAGE FAILED ({len(uncovered)} gated "
+              "metric(s) missing):", file=sys.stderr)
+        for msg in uncovered:
+            print(f"  {msg}", file=sys.stderr)
+        sys.exit(1)
 
     rows, failures = gate(baseline_doc, fresh_doc, args.threshold)
     print(f"baseline: {args.baseline} "

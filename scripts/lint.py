@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Project static analysis: the repro.analysis checker suite as a CLI.
+
+    PYTHONPATH=src python scripts/lint.py [--json OUT.json]
+
+Runs every registered checker (lock-discipline, kernel-contract,
+determinism, dependency-policy, exception-safety) over the tree and
+exits 1 on any finding not in the committed baseline
+(``scripts/lint_baseline.json``).  Suppressed findings (same-line
+``# repro: ignore[rule]`` comments) and expired baseline entries are
+reported but never fail the run.
+
+    --rules lock-discipline,determinism   run a subset
+    --write-baseline                      accept current findings
+    --json OUT.json                       machine-readable report (CI
+                                          uploads this as an artifact)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import (  # noqa: E402
+    CHECKERS,
+    Project,
+    diff_baseline,
+    findings_to_baseline_doc,
+    load_baseline,
+    render_human,
+    run,
+    to_json_doc,
+)
+
+DEFAULT_BASELINE = "scripts/lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--root", default=str(ROOT),
+                    help="project root to analyze (default: this repo)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"findings baseline (default <root>/"
+                         f"{DEFAULT_BASELINE}; missing file = empty)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the JSON report here ('-' = stdout)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rule ids and exit")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept every current finding into the baseline")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(CHECKERS):
+            print(name)
+        return 0
+
+    root = Path(args.root).resolve()
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else root / DEFAULT_BASELINE)
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+
+    project = Project(root)
+    result = run(project, rules)
+
+    if args.write_baseline:
+        doc = findings_to_baseline_doc(result.findings)
+        baseline_path.parent.mkdir(parents=True, exist_ok=True)
+        baseline_path.write_text(
+            json.dumps(doc, indent=2, sort_keys=True) + "\n",
+            encoding="utf-8",
+        )
+        print(f"baseline written: {baseline_path} "
+              f"({len(doc['findings'])} finding(s))")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, known, expired = diff_baseline(result.findings, baseline)
+
+    print(f"repro.analysis: {len(project.modules)} module(s), "
+          f"rules: {', '.join(result.rules)}")
+    print(render_human(result, new, known, expired))
+
+    if args.json:
+        doc = to_json_doc(result, new, known, expired)
+        blob = json.dumps(doc, indent=2, sort_keys=True) + "\n"
+        if args.json == "-":
+            sys.stdout.write(blob)
+        else:
+            Path(args.json).write_text(blob, encoding="utf-8")
+            print(f"json report: {args.json}")
+
+    if new:
+        print(
+            f"\nFAIL: {len(new)} non-baselined finding(s). Fix them, "
+            "suppress in place with `# repro: ignore[rule]`, or (for "
+            "accepted debt) re-run with --write-baseline.",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,9 @@ export TMPDIR="$SMOKE_TMPDIR"
 echo "== byte-compile src/ =="
 python -m compileall -q src
 
+echo "== static analysis (scripts/lint.py) =="
+python scripts/lint.py
+
 echo "== pytest =="
 python -m pytest -x -q
 

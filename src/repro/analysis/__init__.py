@@ -1,0 +1,54 @@
+"""repro.analysis — project-native static analysis for the archive's
+reproducibility invariants.
+
+The paper's claims rest on properties that convention alone cannot hold
+over a long-lived codebase: CAS commits need correct lock discipline
+across the store's thread pools, snapshot ids must be bit-deterministic,
+and every Pallas kernel must stay bitwise-faithful to its jnp oracle.
+This package machine-checks them on every push:
+
+``lock-discipline``
+    Lockset-style race detector over :mod:`repro.store` (and friends):
+    infers which attributes are mutated under each lock and flags
+    mutations on paths — including thread-pool callables — that provably
+    don't hold it, inconsistent lock-acquisition order, and CAS mutate
+    closures that store state captured *before* the retry loop.
+``kernel-contract``
+    Every ``pallas_call`` in ``src/repro/kernels/`` must live in a
+    ``*_pallas`` wrapper with a registered oracle in ``ref.py``, an
+    interpret-mode test in ``tests/test_kernels.py``, and a kernel body
+    free of Python side effects and host-side ops.
+``determinism``
+    No wall-clock reads, ``random``/``os.urandom``/``uuid``, unordered
+    ``set`` iteration, or float-``repr`` formatting on any path reachable
+    from the canonical-JSON/content-hash seeds (``store/codecs.py`` and
+    the commit encode pass).
+``dependency-policy``
+    The required import surface stays stdlib + {numpy, jax, pandas,
+    psutil}; optional deps only behind ``try``/``except ImportError``.
+``exception-safety``
+    Pools and pool-backed sessions release via ``try``/``finally`` or
+    context managers; no handler swallows ``ConflictError``.
+
+Entry point: ``python scripts/lint.py`` (see its ``--help``).  Suppress a
+finding in place with a same-line ``# repro: ignore[rule]`` comment, or
+baseline it in ``scripts/lint_baseline.json``.
+"""
+
+from .core import (  # noqa: F401
+    CHECKERS,
+    AnalysisResult,
+    Finding,
+    Module,
+    Project,
+    ProjectConfig,
+    checker,
+    diff_baseline,
+    findings_to_baseline_doc,
+    load_baseline,
+    parse_suppressions,
+    render_human,
+    run,
+    to_json_doc,
+)
+from . import checkers  # noqa: F401  (registers the built-in checkers)

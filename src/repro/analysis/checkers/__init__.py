@@ -1,0 +1,9 @@
+"""Built-in checkers; importing this package registers them all."""
+
+from . import (  # noqa: F401
+    dependency_policy,
+    determinism,
+    exception_safety,
+    kernel_contract,
+    lock_discipline,
+)

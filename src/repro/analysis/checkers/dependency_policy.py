@@ -1,0 +1,86 @@
+"""Dependency-policy checker (the PR 1 AST guard, framework edition).
+
+The package's *required* import surface is stdlib + the configured
+third-party set ({numpy, jax, pandas, psutil} here): ``pip install -e .``
+must be enough to import everything under ``src/repro`` and pass the
+tier-1 suite.  Optional fast paths (zstandard, orjson, ...) may only be
+imported behind a ``try``/``except`` that catches ``ImportError`` — the
+store degrades, it never hard-requires.
+
+Module-level *and* lazy in-function imports both count: a lazy import
+still crashes at runtime on the stdlib-only CI leg.  Relative imports
+(``level > 0``) are intra-package by construction and skipped.
+
+``tests/test_dependency_policy.py`` asserts this checker agrees with the
+historical standalone walker on the current tree.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from typing import Iterator, Tuple
+
+from ..core import Finding, Project, checker
+
+RULE = "dependency-policy"
+
+_IMPORT_GUARDS = {"ImportError", "ModuleNotFoundError", "Exception",
+                  "BaseException"}
+
+
+def _catches_import_error(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:  # bare except
+        return True
+    return any(
+        isinstance(node, ast.Name) and node.id in _IMPORT_GUARDS
+        for node in ast.walk(handler.type)
+    )
+
+
+def iter_imports(tree: ast.AST) -> Iterator[Tuple[int, str]]:
+    """(lineno, module) for every required-path (unguarded) import."""
+
+    def walk(node: ast.AST, guarded: bool) -> Iterator[Tuple[int, str]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Try):
+                body_guarded = guarded or any(
+                    _catches_import_error(h) for h in child.handlers
+                )
+                for stmt in child.body:
+                    yield from walk(stmt, body_guarded)
+                for part in (child.handlers, child.orelse, child.finalbody):
+                    for stmt in part:
+                        yield from walk(stmt, guarded)
+                continue
+            if isinstance(child, ast.Import):
+                if not guarded:
+                    for alias in child.names:
+                        yield child.lineno, alias.name
+            elif isinstance(child, ast.ImportFrom):
+                # relative imports (level > 0) are intra-package
+                if not guarded and child.level == 0 and child.module:
+                    yield child.lineno, child.module
+            yield from walk(child, guarded)
+
+    yield from walk(node=tree, guarded=False)
+
+
+@checker(RULE)
+def check(project: Project) -> Iterator[Finding]:
+    cfg = project.config
+    stdlib = set(sys.stdlib_module_names)
+    allowed = stdlib | set(cfg.required_third_party) | set(cfg.self_packages)
+    policy = ", ".join(cfg.required_third_party)
+    for mod in project.iter_src():
+        for lineno, module in iter_imports(mod.tree):
+            if module.split(".")[0] in allowed:
+                continue
+            yield Finding(
+                rule=RULE, path=mod.rel, line=lineno, symbol=module,
+                message=(
+                    f"import of `{module}` outside the required-dependency "
+                    f"policy (stdlib + {policy}); guard optional deps with "
+                    "try/except ImportError or move them to an extra"
+                ),
+            )

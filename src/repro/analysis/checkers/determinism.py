@@ -1,0 +1,199 @@
+"""Determinism checker for hash-feeding code paths.
+
+Snapshot and manifest ids are sha256 hashes of canonical JSON; the same
+logical archive state must produce the same id in every environment, on
+every run.  This checker seeds a best-effort intra-package call graph
+from the canonical-JSON/content-hash entry points (``store/codecs.py``
+and the commit encode pass, see :class:`repro.analysis.ProjectConfig`)
+and flags, in every function reachable from a seed:
+
+* wall-clock reads (``time.time``/``monotonic``/``perf_counter``,
+  ``datetime.now``/``utcnow``),
+* randomness (``random``, ``np.random``, ``os.urandom``, ``secrets``,
+  ``uuid``),
+* iteration over unordered ``set``s (wrap in ``sorted()``; dict
+  iteration is insertion-ordered and allowed),
+* ``repr()``/``!r`` and float-precision f-string formatting (float repr
+  is version- and platform-sensitive; canonical JSON owns all float
+  serialization).
+
+Call resolution is by simple name within the configured packages —
+deliberately over-approximate: a false edge only widens the checked set.
+``raise``/``assert`` message subtrees are exempt (error text never feeds
+a hash).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Set, Tuple
+
+from ..core import Finding, Project, checker, dotted_name, qualnames
+
+RULE = "determinism"
+
+_WALLCLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+}
+_FLOAT_SPEC = re.compile(r"[#0\-+ ]*[\d,_.]*[eEfFgG%]$")
+
+
+def _called_names(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name):
+                out.add(node.func.id)
+            elif isinstance(node.func, ast.Attribute):
+                out.add(node.func.attr)
+    return out
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset"))
+
+
+def _banned_calls(d: str) -> str:
+    """Why a dotted call name is nondeterministic, or '' if it is fine."""
+    root = d.split(".", 1)[0]
+    if d in _WALLCLOCK:
+        return f"wall-clock read `{d}()`"
+    if root == "datetime" and d.rsplit(".", 1)[-1] in (
+            "now", "utcnow", "today"):
+        return f"wall-clock read `{d}()`"
+    if root in ("random", "secrets", "uuid"):
+        return f"randomness source `{d}()`"
+    if d in ("np.random", "numpy.random") or d.startswith(
+            ("np.random.", "numpy.random.")):
+        return f"randomness source `{d}()`"
+    if d == "os.urandom":
+        return f"randomness source `{d}()`"
+    return ""
+
+
+def _outer_functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
+    def visit(node: ast.AST) -> Iterator[ast.FunctionDef]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child
+            else:
+                yield from visit(child)
+
+    yield from visit(tree)
+
+
+@checker(RULE)
+def check(project: Project) -> Iterator[Finding]:
+    cfg = project.config
+    # unit = one outer function (nested defs are analyzed as part of it,
+    # since they execute on its behalf)
+    units: List[Tuple[str, ast.FunctionDef, str]] = []   # (rel, fn, qualname)
+    by_name: Dict[str, List[int]] = {}                   # simple name -> idx
+    for pkg in cfg.determinism_packages:
+        for mod in project.iter_under(pkg):
+            qn = qualnames(mod.tree)
+            for fn in _outer_functions(mod.tree):
+                idx = len(units)
+                units.append((mod.rel, fn, qn.get(id(fn), fn.name)))
+                by_name.setdefault(fn.name, []).append(idx)
+
+    seeds: Set[int] = set()
+    seed_fn_names = {name for _, name in cfg.determinism_seed_functions}
+    seed_fn_pairs = set(cfg.determinism_seed_functions)
+    for i, (rel, fn, _) in enumerate(units):
+        if rel in cfg.determinism_seed_modules and fn.col_offset == 0:
+            seeds.add(i)
+        elif fn.name in seed_fn_names and (rel, fn.name) in seed_fn_pairs:
+            seeds.add(i)
+
+    reachable: Set[int] = set()
+    frontier = sorted(seeds)
+    while frontier:
+        idx = frontier.pop()
+        if idx in reachable:
+            continue
+        reachable.add(idx)
+        for name in _called_names(units[idx][1]):
+            for callee in by_name.get(name, ()):
+                if callee not in reachable:
+                    frontier.append(callee)
+
+    for idx in sorted(reachable):
+        rel, fn, symbol = units[idx]
+        yield from _scan_unit(rel, fn, symbol)
+
+
+def _scan_unit(rel: str, fn: ast.FunctionDef,
+               symbol: str) -> Iterator[Finding]:
+    on_path = ("on a hash-feeding path (reachable from the canonical-"
+               "JSON/content-hash seeds) — snapshot ids must be "
+               "bit-deterministic")
+
+    def walk(node: ast.AST) -> Iterator[Finding]:
+        if isinstance(node, (ast.Raise, ast.Assert)):
+            return                      # error text never feeds a hash
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d:
+                why = _banned_calls(d)
+                if why:
+                    yield Finding(
+                        rule=RULE, path=rel, line=node.lineno,
+                        symbol=symbol, message=f"{why} {on_path}",
+                    )
+            if isinstance(node.func, ast.Name) and node.func.id == "repr":
+                yield Finding(
+                    rule=RULE, path=rel, line=node.lineno, symbol=symbol,
+                    message=(f"`repr()` formatting {on_path}; float repr "
+                             "varies across versions — canonical JSON "
+                             "owns serialization"),
+                )
+        iters: List[ast.AST] = []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters.extend(gen.iter for gen in node.generators)
+        for it in iters:
+            if _is_set_expr(it):
+                yield Finding(
+                    rule=RULE, path=rel, line=it.lineno, symbol=symbol,
+                    message=(f"iteration over an unordered set {on_path}; "
+                             "wrap the set in sorted()"),
+                )
+        if isinstance(node, ast.JoinedStr):
+            for part in node.values:
+                if not isinstance(part, ast.FormattedValue):
+                    continue
+                if part.conversion == ord("r"):
+                    yield Finding(
+                        rule=RULE, path=rel, line=node.lineno,
+                        symbol=symbol,
+                        message=(f"`!r` conversion in an f-string "
+                                 f"{on_path}; repr varies across "
+                                 "versions"),
+                    )
+                spec = part.format_spec
+                if isinstance(spec, ast.JoinedStr):
+                    text = "".join(
+                        c.value for c in spec.values
+                        if isinstance(c, ast.Constant)
+                    )
+                    if _FLOAT_SPEC.match(text):
+                        yield Finding(
+                            rule=RULE, path=rel, line=node.lineno,
+                            symbol=symbol,
+                            message=(f"float format spec `:{text}` in an "
+                                     f"f-string {on_path}; canonical "
+                                     "JSON owns float serialization"),
+                        )
+        for child in ast.iter_child_nodes(node):
+            yield from walk(child)
+
+    for stmt in fn.body:
+        yield from walk(stmt)

@@ -1,0 +1,199 @@
+"""Exception-safety checker: resources release on every path, conflicts
+propagate.
+
+Two sub-checks under the ``exception-safety`` rule id:
+
+* **Leaked pools / pool-backed sessions.**  A local bound to a
+  ``ThreadPoolExecutor(...)`` or to a session factory called with
+  ``read_workers=`` (the sessions that lazily own a reader pool) must be
+  released — ``close``/``shutdown``/``abort`` inside a ``try``/
+  ``finally``, or a ``with`` block.  A value that *escapes* the function
+  (returned, yielded, stored on an object, passed to another call) is
+  the caller's to manage and is exempt.
+* **Swallowed ConflictError.**  ``ConflictError`` is the store's
+  optimistic-concurrency signal; a handler that catches it and does
+  nothing (``pass``) turns a lost commit into silent data loss.  Retry
+  (``continue``), re-raise, or surface it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..core import Finding, Project, checker, dotted_name, qualnames
+
+RULE = "exception-safety"
+
+_RELEASES = {"close", "shutdown", "abort"}
+_POOL_FACTORIES = {"ThreadPoolExecutor", "ProcessPoolExecutor"}
+_SESSION_FACTORIES = {"writable_session", "readonly_session",
+                      "open_session", "Session", "Transaction"}
+
+
+def _creation_kind(node: ast.AST) -> Optional[str]:
+    if not isinstance(node, ast.Call):
+        return None
+    d = dotted_name(node.func)
+    if d is None:
+        return None
+    last = d.rsplit(".", 1)[-1]
+    if last in _POOL_FACTORIES:
+        return "thread pool"
+    if last in _SESSION_FACTORIES and any(
+            kw.arg == "read_workers" for kw in node.keywords):
+        return "pool-backed session"
+    return None
+
+
+def _shallow_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """Every node of ``fn``'s own body, not descending into nested
+    function definitions (their resources are their own scope's job)."""
+
+    def walk(node: ast.AST) -> Iterator[ast.AST]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            yield child
+            yield from walk(child)
+
+    yield from walk(fn)
+
+
+def _value_positions(value: ast.AST) -> Iterator[ast.AST]:
+    """The expression itself, plus container elements one level deep."""
+    yield value
+    if isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+        yield from value.elts
+    elif isinstance(value, ast.Dict):
+        yield from value.values
+
+
+def _finalbody_ids(fn: ast.AST) -> Set[int]:
+    out: Set[int] = set()
+    for node in _shallow_nodes(fn):
+        if isinstance(node, ast.Try):
+            for stmt in node.finalbody:
+                out.add(id(stmt))
+                out.update(id(n) for n in ast.walk(stmt))
+    return out
+
+
+def _scan_function(fn: ast.FunctionDef, rel: str,
+                   symbol: str) -> Iterator[Finding]:
+    created: Dict[str, Tuple[int, str]] = {}   # var -> (line, kind)
+    managed: Set[str] = set()                  # with ... as var
+    released: Set[str] = set()                 # var.close() in a finally
+    escaped: Set[str] = set()
+    finals = _finalbody_ids(fn)
+
+    for node in _shallow_nodes(fn):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if _creation_kind(item.context_expr):
+                    if isinstance(item.optional_vars, ast.Name):
+                        managed.add(item.optional_vars.id)
+                    else:
+                        managed.add("")      # anonymous, still managed
+        elif isinstance(node, ast.Assign):
+            kind = _creation_kind(node.value)
+            if kind and len(node.targets) == 1 and isinstance(
+                    node.targets[0], ast.Name):
+                name = node.targets[0].id
+                # reassignment without release is its own hazard, but
+                # one finding per variable is enough
+                created.setdefault(name, (node.lineno, kind))
+            else:
+                # ``y = pool`` / ``self.p = pool`` / ``d[k] = pool``:
+                # the object is stored somewhere that outlives this
+                # scope — ownership escapes.  Only *top-level* value
+                # positions count (``n = len(pool.stats())`` does not
+                # hand the pool off).
+                for v in _value_positions(node.value):
+                    if isinstance(v, ast.Name):
+                        escaped.add(v.id)
+        elif isinstance(node, (ast.Return, ast.Yield, ast.YieldFrom)):
+            # ``return pool`` or ``return Wrapper(pool)`` hands the
+            # resource to the caller; ``return report(n=pool.count)``
+            # does not — only top-level value/arg positions escape
+            if node.value is not None:
+                positions = list(_value_positions(node.value))
+                if isinstance(node.value, ast.Call):
+                    positions.extend(node.value.args)
+                    positions.extend(
+                        kw.value for kw in node.value.keywords)
+                for v in positions:
+                    if isinstance(v, ast.Name):
+                        escaped.add(v.id)
+        elif isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _RELEASES
+                    and isinstance(node.func.value, ast.Name)):
+                if id(node) in finals:
+                    released.add(node.func.value.id)
+
+    for name, (line, kind) in sorted(created.items()):
+        if name in managed or name in released or name in escaped:
+            continue
+        yield Finding(
+            rule=RULE, path=rel, line=line, symbol=symbol,
+            message=(
+                f"`{name}` ({kind}) is not released on error paths — "
+                "close/shutdown it in a try/finally or use a with block"
+            ),
+        )
+
+
+def _swallows_conflict(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:
+        return False                     # bare except: not our call here
+    mentions = any(
+        (isinstance(n, ast.Name) and n.id == "ConflictError")
+        or (isinstance(n, ast.Attribute) and n.attr == "ConflictError")
+        for n in ast.walk(handler.type)
+    )
+    if not mentions:
+        return False
+    for stmt in handler.body:
+        if not (isinstance(stmt, ast.Pass)
+                or (isinstance(stmt, ast.Expr)
+                    and isinstance(stmt.value, ast.Constant))):
+            return False
+    return True
+
+
+@checker(RULE)
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.iter_src():
+        qn = qualnames(mod.tree)
+        fns: List[ast.FunctionDef] = [
+            n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for fn in fns:
+            yield from _scan_function(fn, mod.rel, qn.get(id(fn), fn.name))
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ExceptHandler) and _swallows_conflict(
+                    node):
+                yield Finding(
+                    rule=RULE, path=mod.rel, line=node.lineno,
+                    symbol=_enclosing(qn, mod.tree, node),
+                    message=(
+                        "handler swallows ConflictError — commit "
+                        "conflicts must propagate or be retried, never "
+                        "silenced"
+                    ),
+                )
+
+
+def _enclosing(qn: Dict[int, str], tree: ast.Module,
+               target: ast.AST) -> str:
+    best = ""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(n is target for n in ast.walk(node)):
+                cand = qn.get(id(node), node.name)
+                if len(cand) > len(best):
+                    best = cand
+    return best

@@ -1,0 +1,180 @@
+"""Kernel-contract checker for the Pallas kernel suite.
+
+Every ``pallas_call`` site under ``src/repro/kernels/`` carries a
+three-part contract the TPU dispatch path relies on:
+
+1. it lives inside a ``<name>_pallas`` wrapper function, whose name ties
+   the compiled path to its oracle;
+2. ``ref.py`` registers a jnp oracle ``<name>`` the wrapper must match
+   bitwise in interpret mode;
+3. ``tests/test_kernels.py`` calls ``<name>_pallas(..., interpret=...)``
+   — the sweep CI runs on the CPU backend;
+4. the kernel body itself is a pure traced function: no ``print``/IO, no
+   ``global``/``nonlocal``, no host-side ``numpy``/``os``/``time``/
+   ``random`` calls (use ``jnp``/``jax.lax``).
+
+``ref.py``, ``ops.py`` and ``__init__.py`` are exempt surfaces (oracles
+and dispatch, no kernels).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+from ..core import Finding, Module, Project, checker, dotted_name, qualnames
+
+RULE = "kernel-contract"
+
+_HOST_CALLS = {"print", "open", "input", "eval", "exec", "compile",
+               "__import__", "breakpoint"}
+_HOST_ROOTS = {"np", "numpy", "os", "sys", "io", "time", "random",
+               "socket", "subprocess", "builtins"}
+
+
+def _parents(tree: ast.Module) -> Dict[int, ast.AST]:
+    out: Dict[int, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            out[id(child)] = node
+    return out
+
+
+def _interpret_tested(mod: Optional[Module]) -> Set[str]:
+    """Function names called with an ``interpret=`` keyword in the test
+    module (``interpret=True`` literally, or threaded through a helper
+    parameter — both drive the interpret-mode sweep)."""
+    if mod is None:
+        return set()
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not any(kw.arg == "interpret" for kw in node.keywords):
+            continue
+        if isinstance(node.func, ast.Name):
+            out.add(node.func.id)
+        elif isinstance(node.func, ast.Attribute):
+            out.add(node.func.attr)
+    return out
+
+
+def _kernel_fn(call: ast.Call, mod: Module) -> Optional[ast.FunctionDef]:
+    """Resolve the kernel body function from a ``pallas_call``'s first
+    argument (unwrapping ``functools.partial``)."""
+    if not call.args:
+        return None
+    target = call.args[0]
+    if isinstance(target, ast.Call):
+        d = dotted_name(target.func)
+        if d in ("functools.partial", "partial") and target.args:
+            target = target.args[0]
+    if not isinstance(target, ast.Name):
+        return None
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == target.id:
+            return node
+    return None
+
+
+def _scan_kernel_body(fn: ast.FunctionDef, rel: str,
+                      symbol: str) -> Iterator[Finding]:
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            kind = "global" if isinstance(node, ast.Global) else "nonlocal"
+            yield Finding(
+                rule=RULE, path=rel, line=node.lineno, symbol=symbol,
+                message=(f"kernel body `{fn.name}` uses `{kind}` — Python "
+                         "side effects do not trace; kernels must be "
+                         "pure functions of their refs"),
+            )
+        elif isinstance(node, (ast.Yield, ast.YieldFrom, ast.Await)):
+            yield Finding(
+                rule=RULE, path=rel, line=node.lineno, symbol=symbol,
+                message=(f"kernel body `{fn.name}` yields/awaits — "
+                         "kernels must be plain traced functions"),
+            )
+        elif isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if isinstance(node.func, ast.Name) and node.func.id in \
+                    _HOST_CALLS:
+                yield Finding(
+                    rule=RULE, path=rel, line=node.lineno, symbol=symbol,
+                    message=(f"kernel body `{fn.name}` calls "
+                             f"`{node.func.id}` — host-side effect "
+                             "inside a traced kernel"),
+                )
+            elif d and d.split(".", 1)[0] in _HOST_ROOTS:
+                yield Finding(
+                    rule=RULE, path=rel, line=node.lineno, symbol=symbol,
+                    message=(f"kernel body `{fn.name}` calls `{d}` — "
+                             "host-side op inside a traced kernel; use "
+                             "jnp/jax.lax equivalents"),
+                )
+
+
+@checker(RULE)
+def check(project: Project) -> Iterator[Finding]:
+    cfg = project.config
+    ref_mod = project.module(cfg.kernels_ref)
+    oracles: Set[str] = set()
+    if ref_mod is not None:
+        oracles = {n.name for n in ref_mod.tree.body
+                   if isinstance(n, ast.FunctionDef)}
+    tested = _interpret_tested(project.module(cfg.kernels_test))
+
+    for mod in project.iter_under(cfg.kernels_dir):
+        if mod.path.name in cfg.kernels_exempt_basenames:
+            continue
+        parents = _parents(mod.tree)
+        qn = qualnames(mod.tree)
+        scanned_bodies: Set[int] = set()
+        sites: List[ast.Call] = [
+            node for node in ast.walk(mod.tree)
+            if isinstance(node, ast.Call)
+            and (dotted_name(node.func) or "").rsplit(".", 1)[-1]
+            == "pallas_call"
+        ]
+        for call in sites:
+            chain: List[ast.FunctionDef] = []
+            node: ast.AST = call
+            while id(node) in parents:
+                node = parents[id(node)]
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    chain.append(node)
+            wrapper = chain[-1] if chain else None
+            symbol = qn.get(id(wrapper), "") if wrapper else ""
+            if wrapper is None or not wrapper.name.endswith("_pallas"):
+                yield Finding(
+                    rule=RULE, path=mod.rel, line=call.lineno,
+                    symbol=symbol,
+                    message=("pallas_call outside a `*_pallas` wrapper "
+                             "function — the dispatch/oracle contract "
+                             "keys on the wrapper naming convention"),
+                )
+            else:
+                base = wrapper.name[: -len("_pallas")]
+                if base not in oracles:
+                    yield Finding(
+                        rule=RULE, path=mod.rel, line=call.lineno,
+                        symbol=symbol,
+                        message=(f"kernel wrapper `{wrapper.name}` has no "
+                                 f"oracle `{base}` registered in "
+                                 f"{cfg.kernels_ref}"),
+                    )
+                if wrapper.name not in tested:
+                    yield Finding(
+                        rule=RULE, path=mod.rel, line=call.lineno,
+                        symbol=symbol,
+                        message=(f"no interpret-mode test in "
+                                 f"{cfg.kernels_test} calls "
+                                 f"`{wrapper.name}(..., interpret=...)` — "
+                                 "the bitwise oracle sweep is the "
+                                 "kernel's contract"),
+                    )
+            body = _kernel_fn(call, mod)
+            if body is not None and id(body) not in scanned_bodies:
+                scanned_bodies.add(id(body))
+                yield from _scan_kernel_body(
+                    body, mod.rel, qn.get(id(body), body.name))

@@ -1,0 +1,431 @@
+"""Lockset-style lock-discipline / race detector.
+
+Three sub-checks, all under the ``lock-discipline`` rule id:
+
+* **Unguarded mutation.**  Per class (and per module for module-level
+  locks), infer the *guarded set*: attributes/globals mutated at least
+  once while a lock is held.  Every other mutation of a guarded name
+  must hold the same lock — except in ``__init__``-style constructors,
+  where the object is not yet shared.  Nested functions do **not**
+  inherit the enclosing lockset: a closure handed to a thread pool runs
+  long after the ``with`` block exited, which is exactly the race this
+  checker exists to catch.
+* **Inconsistent lock order.**  ``with A: with B:`` in one function and
+  ``with B: with A:`` in another is a deadlock waiting for contention.
+* **CAS stale capture.**  A mutate closure passed to a ``_update``-style
+  read-modify-CAS loop must not write a dict literal captured *before*
+  the loop into the freshly loaded document: on retry (or when a
+  concurrent writer already advanced the document) the stale value
+  clobbers the concurrent update — the lost-update bug class PR 3/4
+  fixed by hand.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterator, List, Optional, Set, Tuple
+
+from ..core import Finding, Module, Project, checker, dotted_name, qualnames
+
+RULE = "lock-discipline"
+
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
+                   "BoundedSemaphore"}
+_MUTATORS = {
+    "append", "extend", "insert", "add", "update", "setdefault", "pop",
+    "popitem", "clear", "remove", "discard", "move_to_end", "appendleft",
+    "extendleft",
+}
+_CONSTRUCTORS = {"__init__", "__post_init__", "__new__"}
+
+
+def _is_lock_factory(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    d = dotted_name(node.func)
+    if d is None:
+        return False
+    last = d.rsplit(".", 1)[-1]
+    return last in _LOCK_FACTORIES and (d == last or d == f"threading.{last}")
+
+
+@dataclass
+class _Mutation:
+    owner: str            # "class:<Name>" or "module"
+    name: str             # attribute or global name
+    held: FrozenSet[str]
+    line: int
+    func: str             # display name of the enclosing function
+    symbol: str           # qualname for the finding
+    nested: bool          # inside a nested callable (deferred execution)
+    in_ctor: bool
+
+
+def _mut_target(expr: ast.AST) -> Optional[Tuple[str, str]]:
+    """Resolve a mutated expression to ('self', attr) or ('name', id)."""
+    node = expr
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name) and node.value.id == "self"):
+        return ("self", node.attr)
+    if isinstance(node, ast.Name):
+        return ("name", node.id)
+    return None
+
+
+def _bound_names(target: ast.AST) -> Iterator[str]:
+    """Names a binding target actually binds.  ``x[k] = v`` and
+    ``x.a = v`` bind nothing — the Name inside is a *read* of ``x``."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            yield from _bound_names(el)
+    elif isinstance(target, ast.Starred):
+        yield from _bound_names(target.value)
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Parameter and plain-assignment names bound locally in ``fn``
+    (shallow plus nested — conservative shadow set for globals)."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.arg):
+            out.add(node.arg)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                out.update(_bound_names(t))
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            out.update(_bound_names(node.target))
+        elif isinstance(node, ast.comprehension):
+            out.update(_bound_names(node.target))
+        elif isinstance(node, ast.Global):
+            out.difference_update(node.names)
+    return out
+
+
+class _ModuleScan:
+    def __init__(self, mod: Module):
+        self.mod = mod
+        self.qn = qualnames(mod.tree)
+        self.module_locks: Set[str] = set()
+        self.module_names: Set[str] = set()
+        self.class_locks: Dict[str, Set[str]] = {}
+        self.mutations: List[_Mutation] = []
+        # (lock_a, lock_b) -> (line, func) for a-held-while-acquiring-b
+        self.order_edges: Dict[Tuple[str, str], Tuple[int, str]] = {}
+        self.findings: List[Finding] = []
+
+        for stmt in mod.tree.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.module_names.add(t.id)
+                        if _is_lock_factory(stmt.value):
+                            self.module_locks.add(t.id)
+            elif isinstance(stmt, ast.AnnAssign) and isinstance(
+                    stmt.target, ast.Name):
+                self.module_names.add(stmt.target.id)
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                locks: Set[str] = set()
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Assign) and _is_lock_factory(
+                            sub.value):
+                        for t in sub.targets:
+                            got = _mut_target(t)
+                            if got and got[0] == "self":
+                                locks.add(got[1])
+                self.class_locks[node.name] = locks
+
+    # -- per-function event collection ----------------------------------
+    def scan_function(self, fn: ast.FunctionDef, owner: str,
+                      cls_name: Optional[str]) -> None:
+        inst_locks = self.class_locks.get(cls_name or "", set())
+        fn_locals = _local_names(fn)
+        symbol = self.qn.get(id(fn), fn.name)
+        in_ctor = fn.name in _CONSTRUCTORS
+
+        def lock_token(expr: ast.AST) -> Optional[str]:
+            if (isinstance(expr, ast.Attribute)
+                    and isinstance(expr.value, ast.Name)
+                    and expr.value.id == "self" and expr.attr in inst_locks):
+                return f"self.{expr.attr}"
+            if isinstance(expr, ast.Name) and expr.id in self.module_locks:
+                return expr.id
+            return None
+
+        def record(expr: ast.AST, held: FrozenSet[str], line: int,
+                   nested: bool) -> None:
+            got = _mut_target(expr)
+            if got is None:
+                return
+            kind, name = got
+            if kind == "self":
+                if cls_name is None:
+                    return
+                self.mutations.append(_Mutation(
+                    owner=owner, name=name, held=held, line=line,
+                    func=fn.name, symbol=symbol, nested=nested,
+                    in_ctor=in_ctor and not nested,
+                ))
+            else:
+                # a bare name only mutates module state when it is a
+                # module-level binding not shadowed by a local
+                if name in self.module_names and name not in fn_locals:
+                    self.mutations.append(_Mutation(
+                        owner="module", name=name, held=held, line=line,
+                        func=fn.name, symbol=symbol, nested=nested,
+                        in_ctor=False,
+                    ))
+
+        def walk(node: ast.AST, held: FrozenSet[str], nested: bool) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                # deferred execution: a closure (thread-pool callable,
+                # callback) does not run under the enclosing lockset
+                body = (node.body if isinstance(node.body, list)
+                        else [node.body])
+                for stmt in body:
+                    walk(stmt, frozenset(), True)
+                return
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                acquired = []
+                for item in node.items:
+                    tok = lock_token(item.context_expr)
+                    if tok is not None:
+                        for h in sorted(held) + acquired:
+                            self.order_edges.setdefault(
+                                (h, tok), (node.lineno, symbol))
+                        acquired.append(tok)
+                    else:
+                        walk(item.context_expr, held, nested)
+                inner = held | frozenset(acquired)
+                for stmt in node.body:
+                    walk(stmt, inner, nested)
+                return
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for el in ([t] if not isinstance(t, (ast.Tuple, ast.List))
+                               else list(t.elts)):
+                        record(el, held, node.lineno, nested)
+                walk(node.value, held, nested)
+                return
+            if isinstance(node, ast.AugAssign):
+                record(node.target, held, node.lineno, nested)
+                walk(node.value, held, nested)
+                return
+            if isinstance(node, ast.Delete):
+                for t in node.targets:
+                    record(t, held, node.lineno, nested)
+                return
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MUTATORS):
+                record(node.func.value, held, node.lineno, nested)
+            for child in ast.iter_child_nodes(node):
+                walk(child, held, nested)
+
+        for stmt in fn.body:
+            walk(stmt, frozenset(), False)
+        self._scan_cas_closures(fn, symbol)
+
+    # -- CAS stale-capture ----------------------------------------------
+    def _scan_cas_closures(self, fn: ast.FunctionDef, symbol: str) -> None:
+        bindings: Dict[str, ast.AST] = {}
+        local_defs: Dict[str, ast.FunctionDef] = {}
+        update_calls: Dict[int, ast.Call] = {}
+
+        def shallow(body: List[ast.stmt]) -> Iterator[ast.stmt]:
+            for stmt in body:
+                yield stmt
+                for attr in ("body", "orelse", "finalbody"):
+                    sub = getattr(stmt, attr, None)
+                    if sub and not isinstance(
+                            stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        yield from shallow(sub)
+                for h in getattr(stmt, "handlers", []) or []:
+                    yield from shallow(h.body)
+
+        for stmt in shallow(fn.body):
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        bindings[t.id] = stmt.value
+            elif isinstance(stmt, ast.FunctionDef):
+                local_defs[stmt.name] = stmt
+            for node in ast.walk(stmt):
+                if (isinstance(node, ast.Call)
+                        and ((isinstance(node.func, ast.Attribute)
+                              and node.func.attr == "_update")
+                             or (isinstance(node.func, ast.Name)
+                                 and node.func.id == "_update"))
+                        and node.args):
+                    update_calls[id(node)] = node
+
+        for call in update_calls.values():
+            closure = call.args[0]
+            if isinstance(closure, ast.Name):
+                closure = local_defs.get(closure.id)
+            if not isinstance(closure, (ast.Lambda, ast.FunctionDef)):
+                continue
+            params = closure.args.args
+            if not params:
+                continue
+            doc_param = params[0].arg
+            body = (closure.body if isinstance(closure.body, list)
+                    else [ast.Expr(closure.body)])
+            tainted = {doc_param}          # names derived from the doc
+            closure_local = {doc_param}
+            for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+                if isinstance(node, ast.Assign) and isinstance(
+                        node.targets[0], ast.Name):
+                    closure_local.add(node.targets[0].id)
+                    root = node.value
+                    while isinstance(root, (ast.Subscript, ast.Attribute,
+                                            ast.Call)):
+                        root = getattr(root, "value",
+                                       getattr(root, "func", None))
+                    if isinstance(root, ast.Name) and root.id in tainted:
+                        tainted.add(node.targets[0].id)
+
+            def doc_rooted(expr: ast.AST) -> bool:
+                node = expr
+                while isinstance(node, (ast.Subscript, ast.Attribute)):
+                    node = node.value
+                return isinstance(node, ast.Name) and node.id in tainted
+
+            stores: List[Tuple[ast.AST, int]] = []
+            for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.targets[0], ast.Subscript)
+                        and doc_rooted(node.targets[0])):
+                    stores.append((node.value, node.lineno))
+                elif (isinstance(node, ast.Call)
+                      and isinstance(node.func, ast.Attribute)
+                      and node.func.attr in ("__setitem__", "setdefault")
+                      and doc_rooted(node.func.value)
+                      and len(node.args) >= 2):
+                    stores.append((node.args[1], node.lineno))
+            for value, line in stores:
+                if not isinstance(value, ast.Name):
+                    continue
+                if value.id in closure_local:
+                    continue
+                bound = bindings.get(value.id)
+                if isinstance(bound, ast.Dict) or (
+                        isinstance(bound, ast.Call)
+                        and isinstance(bound.func, ast.Name)
+                        and bound.func.id == "dict"):
+                    self.findings.append(Finding(
+                        rule=RULE, path=self.mod.rel, line=line,
+                        symbol=symbol,
+                        message=(
+                            f"CAS mutate closure writes `{value.id}`, a "
+                            "dict captured before the retry loop, into "
+                            "the freshly loaded document — a concurrent "
+                            "update between load and CAS is clobbered; "
+                            "build the entry inside the closure"
+                        ),
+                    ))
+
+    # -- finish ----------------------------------------------------------
+    def finish(self) -> List[Finding]:
+        by_name: Dict[Tuple[str, str], List[_Mutation]] = {}
+        for m in self.mutations:
+            if m.in_ctor:
+                continue       # pre-publication writes are unshared
+            by_name.setdefault((m.owner, m.name), []).append(m)
+
+        for (owner, name), events in sorted(by_name.items()):
+            locked = [e for e in events if e.held]
+            if not locked:
+                continue       # never guarded anywhere: no inferred lock
+            guard = frozenset.intersection(*(e.held for e in locked))
+            where = (f"class {owner.split(':', 1)[1]}"
+                     if owner.startswith("class:") else "this module")
+            display = f"self.{name}" if owner.startswith("class:") else name
+            if not guard:
+                first = min(locked, key=lambda e: e.line)
+                locks = sorted({lk for e in locked for lk in e.held})
+                self.findings.append(Finding(
+                    rule=RULE, path=self.mod.rel, line=first.line,
+                    symbol=first.symbol,
+                    message=(
+                        f"mutations of `{display}` in {where} are guarded "
+                        f"by different locks ({', '.join(locks)}) — pick "
+                        "one lock for the attribute"
+                    ),
+                ))
+                continue
+            lock = "/".join(sorted(guard))
+            for e in events:
+                if guard <= e.held:
+                    continue
+                suffix = (" — in a nested callable that may run on a "
+                          "worker thread after the caller's locks are "
+                          "released" if e.nested else "")
+                self.findings.append(Finding(
+                    rule=RULE, path=self.mod.rel, line=e.line,
+                    symbol=e.symbol,
+                    message=(
+                        f"mutation of `{display}` in `{e.func}` without "
+                        f"holding `{lock}`, which guards it elsewhere in "
+                        f"{where}{suffix}"
+                    ),
+                ))
+
+        reported: Set[Tuple[str, str]] = set()
+        for (a, b), (line, sym) in sorted(self.order_edges.items()):
+            if (b, a) not in self.order_edges or (b, a) in reported:
+                continue
+            reported.add((a, b))
+            other_line, other_sym = self.order_edges[(b, a)]
+            first, second = sorted(
+                [(line, sym, a, b), (other_line, other_sym, b, a)])
+            self.findings.append(Finding(
+                rule=RULE, path=self.mod.rel, line=first[0],
+                symbol=first[1],
+                message=(
+                    f"locks `{a}` and `{b}` are acquired in both orders "
+                    f"(`{sym}` vs `{other_sym}`) — deadlock under "
+                    "contention; pick one acquisition order"
+                ),
+            ))
+        return self.findings
+
+
+def _outer_functions(
+    tree: ast.Module,
+) -> Iterator[Tuple[ast.FunctionDef, Optional[str]]]:
+    """(function, owning class name) for every non-nested function."""
+
+    def visit(node: ast.AST, cls: Optional[str]) -> Iterator:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, cls
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, child.name)
+            else:
+                yield from visit(child, cls)
+
+    yield from visit(tree, None)
+
+
+@checker(RULE)
+def check(project: Project) -> Iterator[Finding]:
+    for mod in project.iter_src():
+        scan = _ModuleScan(mod)
+        if not (scan.module_locks or any(scan.class_locks.values())):
+            # still run the CAS sub-check: CAS loops are lock-free
+            for fn, cls in _outer_functions(mod.tree):
+                scan._scan_cas_closures(fn, scan.qn.get(id(fn), fn.name))
+            yield from scan.findings
+            continue
+        for fn, cls in _outer_functions(mod.tree):
+            owner = f"class:{cls}" if cls else "module"
+            scan.scan_function(fn, owner, cls)
+        yield from scan.finish()

@@ -1,0 +1,379 @@
+"""Framework core: findings, suppressions, project loading, registry,
+baseline, and reports.
+
+Design points, in the order they matter:
+
+* **Findings fingerprint line-independently.**  A fingerprint hashes
+  ``(rule, path, symbol, message)`` — never the line number — so a
+  baselined finding survives unrelated edits above it.  Messages must
+  therefore be stable for a given defect (no line numbers, no volatile
+  ordering inside the text).
+* **Suppressions are same-line comments**: ``# repro: ignore[rule]``
+  (or bare ``# repro: ignore`` for any rule) on the line a finding
+  anchors to.  Suppressed findings still appear in the JSON report under
+  ``suppressed`` — silence is visible, not free.
+* **Reports are deterministic**: findings sort by ``(path, line, rule,
+  message)`` and JSON serializes with sorted keys, so two runs over the
+  same tree are byte-identical — the report itself honors the
+  determinism rule it enforces.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    FrozenSet,
+    Iterable,
+    Iterator,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
+
+BASELINE_VERSION = 1
+REPORT_VERSION = 1
+
+# ``# repro: ignore`` or ``# repro: ignore[rule-a, rule-b]``
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore(?:\[\s*([A-Za-z0-9_,\s\-]*?)\s*\])?"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One defect: ``rule`` names the checker, ``symbol`` the enclosing
+    function/class (qualified, best effort), ``message`` the stable
+    human-readable statement of what is wrong."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    symbol: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        blob = "\x1f".join((self.rule, self.path, self.symbol, self.message))
+        return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}:{sym} {self.message}"
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "symbol": self.symbol,
+            "message": self.message,
+            "fingerprint": self.fingerprint,
+        }
+
+
+def parse_suppressions(source: str) -> Dict[int, Optional[FrozenSet[str]]]:
+    """1-based line -> suppressed rule set (``None`` = every rule)."""
+    out: Dict[int, Optional[FrozenSet[str]]] = {}
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = m.group(1)
+        if rules is None:
+            out[lineno] = None
+        else:
+            names = frozenset(
+                r.strip() for r in rules.split(",") if r.strip()
+            )
+            # ``ignore[]`` names nothing: treat as ignore-all rather than
+            # a comment that silently suppresses nothing
+            out[lineno] = names or None
+    return out
+
+
+@dataclass
+class Module:
+    """One parsed source file (never imported — analysis is AST-only)."""
+
+    rel: str                 # repo-root-relative posix path
+    path: Path
+    source: str
+    tree: ast.Module
+    suppressions: Dict[int, Optional[FrozenSet[str]]]
+
+    def suppresses(self, finding: Finding) -> bool:
+        if finding.line not in self.suppressions:
+            return False
+        rules = self.suppressions[finding.line]
+        return rules is None or finding.rule in rules
+
+
+@dataclass(frozen=True)
+class ProjectConfig:
+    """Where the checked surfaces live, relative to the project root.
+
+    Defaults describe this repository; the fixture corpus overrides them
+    to point tiny synthetic trees at the same checkers.
+    """
+
+    src_root: str = "src/repro"
+    # kernel contract
+    kernels_dir: str = "src/repro/kernels"
+    kernels_ref: str = "src/repro/kernels/ref.py"
+    kernels_test: str = "tests/test_kernels.py"
+    kernels_exempt_basenames: Tuple[str, ...] = (
+        "ref.py", "ops.py", "__init__.py",
+    )
+    # determinism: packages scanned, plus the hash/encode seed set —
+    # every top-level function of a seed module is a seed, and the
+    # (module, function) pairs name the commit encode pass explicitly
+    determinism_packages: Tuple[str, ...] = ("src/repro/store",)
+    determinism_seed_modules: Tuple[str, ...] = (
+        "src/repro/store/codecs.py",
+    )
+    determinism_seed_functions: Tuple[Tuple[str, str], ...] = (
+        ("src/repro/store/chunks.py", "content_hash"),
+        ("src/repro/store/chunks.py", "encode_chunk"),
+        ("src/repro/store/chunks.py", "chunk_stats_summary"),
+        ("src/repro/store/icechunk.py", "_flush_staged_arrays"),
+        ("src/repro/store/icechunk.py", "_build_snapshot_doc"),
+        ("src/repro/store/icechunk.py", "_write_snapshot"),
+    )
+    # dependency policy
+    required_third_party: Tuple[str, ...] = (
+        "numpy", "jax", "pandas", "psutil",
+    )
+    self_packages: Tuple[str, ...] = ("repro",)
+
+
+@dataclass
+class AnalysisResult:
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[Finding] = field(default_factory=list)
+    rules: List[str] = field(default_factory=list)
+
+
+class Project:
+    """A parsed source tree: every ``*.py`` under ``config.src_root``
+    plus the extra files the config names (e.g. the kernel test)."""
+
+    def __init__(self, root, config: Optional[ProjectConfig] = None):
+        self.root = Path(root).resolve()
+        self.config = config or ProjectConfig()
+        self.modules: Dict[str, Module] = {}
+        src = self.root / self.config.src_root
+        paths = sorted(src.rglob("*.py")) if src.is_dir() else []
+        extra = self.root / self.config.kernels_test
+        if extra.is_file():
+            paths.append(extra)
+        for path in paths:
+            rel = path.relative_to(self.root).as_posix()
+            if rel in self.modules:
+                continue
+            source = path.read_text(encoding="utf-8")
+            self.modules[rel] = Module(
+                rel=rel,
+                path=path,
+                source=source,
+                tree=ast.parse(source, filename=str(path)),
+                suppressions=parse_suppressions(source),
+            )
+
+    def module(self, rel: str) -> Optional[Module]:
+        return self.modules.get(rel)
+
+    def iter_src(self) -> Iterator[Module]:
+        prefix = self.config.src_root.rstrip("/") + "/"
+        for rel in sorted(self.modules):
+            if rel.startswith(prefix) or rel == self.config.src_root:
+                yield self.modules[rel]
+
+    def iter_under(self, rel_dir: str) -> Iterator[Module]:
+        prefix = rel_dir.rstrip("/") + "/"
+        for rel in sorted(self.modules):
+            if rel.startswith(prefix):
+                yield self.modules[rel]
+
+
+# -- checker registry --------------------------------------------------------
+
+CheckerFn = Callable[[Project], Iterable[Finding]]
+CHECKERS: Dict[str, CheckerFn] = {}
+
+
+def checker(name: str) -> Callable[[CheckerFn], CheckerFn]:
+    """Register ``fn`` as the checker behind rule id ``name``."""
+
+    def register(fn: CheckerFn) -> CheckerFn:
+        if name in CHECKERS:
+            raise ValueError(f"checker {name!r} already registered")
+        CHECKERS[name] = fn
+        return fn
+
+    return register
+
+
+def run(project: Project,
+        rules: Optional[Sequence[str]] = None) -> AnalysisResult:
+    """Run the selected checkers; split findings by suppression state."""
+    selected = sorted(CHECKERS) if rules is None else list(rules)
+    unknown = [r for r in selected if r not in CHECKERS]
+    if unknown:
+        raise KeyError(
+            f"unknown rule(s) {unknown}; available: {sorted(CHECKERS)}"
+        )
+    result = AnalysisResult(rules=selected)
+    for rule in selected:
+        for finding in CHECKERS[rule](project):
+            mod = project.module(finding.path)
+            if mod is not None and mod.suppresses(finding):
+                result.suppressed.append(finding)
+            else:
+                result.findings.append(finding)
+    key = lambda f: (f.path, f.line, f.rule, f.message)  # noqa: E731
+    result.findings.sort(key=key)
+    result.suppressed.sort(key=key)
+    return result
+
+
+# -- helpers shared by checkers ---------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def qualnames(tree: ast.Module) -> Dict[int, str]:
+    """``id(node)`` -> dotted qualname for every function/class def."""
+    out: Dict[int, str] = {}
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qn = f"{prefix}.{child.name}" if prefix else child.name
+                out[id(child)] = qn
+                visit(child, qn)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+# -- baseline ---------------------------------------------------------------
+
+def load_baseline(path) -> Dict[str, Dict[str, Any]]:
+    """fingerprint -> baseline entry; missing file = empty baseline."""
+    p = Path(path)
+    if not p.is_file():
+        return {}
+    doc = json.loads(p.read_text(encoding="utf-8"))
+    return {e["fingerprint"]: e for e in doc.get("findings", [])}
+
+
+def diff_baseline(
+    findings: Sequence[Finding],
+    baseline: Dict[str, Dict[str, Any]],
+) -> Tuple[List[Finding], List[Finding], List[Dict[str, Any]]]:
+    """-> (new findings, baselined findings, expired baseline entries)."""
+    new: List[Finding] = []
+    known: List[Finding] = []
+    seen: set = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            known.append(f)
+            seen.add(f.fingerprint)
+        else:
+            new.append(f)
+    expired = [e for fp, e in sorted(baseline.items()) if fp not in seen]
+    return new, known, expired
+
+
+def findings_to_baseline_doc(findings: Sequence[Finding]) -> Dict[str, Any]:
+    entries = sorted(
+        ({k: v for k, v in f.to_doc().items() if k != "line"}
+         for f in findings),
+        key=lambda e: (e["path"], e["rule"], e["message"]),
+    )
+    return {"version": BASELINE_VERSION, "findings": entries}
+
+
+# -- reports ----------------------------------------------------------------
+
+def to_json_doc(
+    result: AnalysisResult,
+    new: Sequence[Finding],
+    known: Sequence[Finding],
+    expired: Sequence[Dict[str, Any]],
+) -> Dict[str, Any]:
+    new_fps = {f.fingerprint for f in new}
+    return {
+        "version": REPORT_VERSION,
+        "rules": list(result.rules),
+        "findings": [
+            dict(f.to_doc(), baselined=f.fingerprint not in new_fps)
+            for f in result.findings
+        ],
+        "suppressed": [f.to_doc() for f in result.suppressed],
+        "expired_baseline": list(expired),
+        "counts": {
+            "new": len(new),
+            "baselined": len(known),
+            "suppressed": len(result.suppressed),
+            "expired_baseline": len(expired),
+        },
+    }
+
+
+def render_human(
+    result: AnalysisResult,
+    new: Sequence[Finding],
+    known: Sequence[Finding],
+    expired: Sequence[Dict[str, Any]],
+) -> str:
+    lines: List[str] = []
+    if new:
+        lines.append(f"{len(new)} new finding(s):")
+        lines.extend(f"  {f.render()}" for f in new)
+    if known:
+        lines.append(f"{len(known)} baselined finding(s):")
+        lines.extend(f"  {f.render()}" for f in known)
+    if result.suppressed:
+        lines.append(f"{len(result.suppressed)} suppressed finding(s):")
+        lines.extend(f"  {f.render()}" for f in result.suppressed)
+    if expired:
+        lines.append(
+            f"{len(expired)} expired baseline entr(y/ies) — fixed or "
+            "moved; prune with --write-baseline:"
+        )
+        lines.extend(
+            f"  {e['path']}: {e['rule']}: {e['message']}" for e in expired
+        )
+    if not lines:
+        lines.append("analysis clean: no findings")
+    return "\n".join(lines)
+
+
+__all__ = [
+    "AnalysisResult", "CHECKERS", "Finding", "Module", "Project",
+    "ProjectConfig", "checker", "diff_baseline", "dotted_name",
+    "findings_to_baseline_doc", "load_baseline", "parse_suppressions",
+    "qualnames", "render_human", "replace", "run", "to_json_doc",
+]

@@ -283,17 +283,33 @@ class Catalog:
         )
         cov = scan_repository(repo, branch)
         rid = repo_id or cov["site"]["site_id"] or repo.store.root
-        entry_doc = {
-            "uri": uri or repo.store.root,
-            "branch": branch,
-            "snapshot_id": cov["snapshot_id"],
-            "site": cov["site"],
-            "vcps": cov["vcps"],
-            "bbox": coverage_bbox(cov["site"], cov["vcps"]),
-        }
         self._attached[rid] = repo
-        self._update(lambda d: d["repositories"].__setitem__(rid, entry_doc))
-        return CatalogEntry.from_doc(rid, entry_doc)
+        # the entry is built *inside* the CAS closure from a scan that is
+        # revalidated against the repository's current head on every
+        # attempt: a dict captured before the loop would clobber a
+        # concurrent commit + note_snapshot with the stale scanned head
+        # (the lost-update class repro.analysis' lock-discipline rule
+        # flags).  The memo keys on head, so the uncontended path scans
+        # exactly once.
+        memo = {"head": cov["snapshot_id"], "cov": cov}
+
+        def mutate(doc: Dict[str, Any]) -> None:
+            head = repo.branch_head(branch)
+            if head != memo["head"]:
+                memo["cov"] = scan_repository(repo, branch)
+                memo["head"] = memo["cov"]["snapshot_id"]
+            fresh = memo["cov"]
+            doc["repositories"][rid] = {
+                "uri": uri or repo.store.root,
+                "branch": branch,
+                "snapshot_id": fresh["snapshot_id"],
+                "site": fresh["site"],
+                "vcps": fresh["vcps"],
+                "bbox": coverage_bbox(fresh["site"], fresh["vcps"]),
+            }
+
+        doc = self._update(mutate)
+        return CatalogEntry.from_doc(rid, doc["repositories"][rid])
 
     def update_from_report(
         self,

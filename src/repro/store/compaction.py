@@ -229,52 +229,60 @@ def compact(
     t0 = time.perf_counter()
     for attempt in range(max_retries + 1):
         tx = repo.writable_session(branch, read_workers=read_workers)
-        tx.encode_workers = max(1, int(read_workers))
-        _, jobs = plan_compaction(tx, prof, paths)
-        if not jobs:
+        # every attempt's transaction releases its reader pool on every
+        # exit — no-op return, conflict retry (``continue`` still runs
+        # the finally), success, or a raised error mid-copy
+        try:
+            tx.encode_workers = max(1, int(read_workers))
+            _, jobs = plan_compaction(tx, prof, paths)
+            if not jobs:
+                return CompactionReport(
+                    profile=prof.name, snapshot_id=tx.snapshot_id,
+                    committed=False, retries=attempt,
+                    wall_s=time.perf_counter() - t0,
+                )
+            # source reads come from a read-only view pinned to the same
+            # snapshot the transaction is based on: the rechunk below
+            # drops the transaction's own view of the old chunks
+            src_session = Session(repo, tx.snapshot_id, writable=False,
+                                  read_workers=read_workers)
+            arrays: List[ArrayCompaction] = []
+            try:
+                for job in jobs:
+                    src = src_session.array(job.path)
+                    n_before = len(src_session._manifest(job.path))
+                    if job.chunks != tuple(job.meta.chunks):
+                        dst = tx.rechunk_array(job.path, job.chunks)
+                    else:
+                        # migrate/stats rewrite: same grid, re-staged
+                        # content dedups against the existing chunk
+                        # objects
+                        dst = tx.array(job.path)
+                    n_after = _copy_array(src, dst)
+                    tx._flush_staged_arrays()
+                    arrays.append(ArrayCompaction(
+                        job.path, job.reason, tuple(job.meta.chunks),
+                        job.chunks, n_before, n_after,
+                    ))
+            finally:
+                src_session.close()
+            try:
+                sid = tx.commit(
+                    message or f"compact profile={prof.name} "
+                               f"arrays={len(arrays)}"
+                )
+            except ConflictError:
+                # a concurrent append won the head and touched an array
+                # we rewrote; its data must survive, so replan from the
+                # new head
+                continue
             return CompactionReport(
-                profile=prof.name, snapshot_id=tx.snapshot_id,
-                committed=False, retries=attempt,
+                profile=prof.name, snapshot_id=sid, committed=True,
+                arrays=arrays, retries=attempt,
                 wall_s=time.perf_counter() - t0,
             )
-        # source reads come from a read-only view pinned to the same
-        # snapshot the transaction is based on: the rechunk below drops
-        # the transaction's own view of the old chunks
-        src_session = Session(repo, tx.snapshot_id, writable=False,
-                              read_workers=read_workers)
-        arrays: List[ArrayCompaction] = []
-        try:
-            for job in jobs:
-                src = src_session.array(job.path)
-                n_before = len(src_session._manifest(job.path))
-                if job.chunks != tuple(job.meta.chunks):
-                    dst = tx.rechunk_array(job.path, job.chunks)
-                else:
-                    # migrate/stats rewrite: same grid, re-staged content
-                    # dedups against the existing chunk objects
-                    dst = tx.array(job.path)
-                n_after = _copy_array(src, dst)
-                tx._flush_staged_arrays()
-                arrays.append(ArrayCompaction(
-                    job.path, job.reason, tuple(job.meta.chunks),
-                    job.chunks, n_before, n_after,
-                ))
         finally:
-            src_session.close()
-        try:
-            sid = tx.commit(
-                message or f"compact profile={prof.name} "
-                           f"arrays={len(arrays)}"
-            )
-        except ConflictError:
-            # a concurrent append won the head and touched an array we
-            # rewrote; its data must survive, so replan from the new head
-            continue
-        return CompactionReport(
-            profile=prof.name, snapshot_id=sid, committed=True,
-            arrays=arrays, retries=attempt,
-            wall_s=time.perf_counter() - t0,
-        )
+            tx.close()
     raise ConflictError(
         f"compaction lost the branch head {max_retries + 1} times; "
         "archive too write-hot, retry later or raise max_retries"

@@ -448,9 +448,14 @@ class Session:
     def close(self) -> None:
         """Release the session-owned reader pool (caches die with the
         session object)."""
-        if self._own_pool is not None:
-            self._own_pool.shutdown(wait=False)
-            self._own_pool = None
+        # take the pool reference under the same lock reader_pool()
+        # creates it under: an unlocked check-then-clear can miss a pool
+        # a concurrent first reader is building (leaked threads) or hand
+        # that reader a pool this close() already shut down
+        with self._cache_lock:
+            pool, self._own_pool = self._own_pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     def cache_stats(self) -> Dict[str, int]:
         with self._cache_lock:
@@ -1058,7 +1063,9 @@ class Transaction(Session):
         doc = {
             "parent": self.snapshot_id,
             "message": message,
-            "written_at": time.time(),
+            # sanctioned wall-clock: written_at is provenance only and is
+            # in _VOLATILE_SNAPSHOT_FIELDS, stripped before the id hash
+            "written_at": time.time(),  # repro: ignore[determinism]
             "touched": sorted(self._touched),
             "groups": self._doc["groups"],
             "arrays": self._doc["arrays"],

@@ -1,0 +1,18 @@
+"""Near-miss negatives: guarded optionals, relatives, stdlib."""
+
+import json
+
+try:
+    import zstandard  # optional fast path, properly guarded
+except ImportError:
+    zstandard = None
+
+from . import sibling  # relative: intra-package, always allowed
+
+
+def guarded():
+    try:
+        from orjson import dumps
+    except (ValueError, ImportError):
+        dumps = json.dumps
+    return dumps

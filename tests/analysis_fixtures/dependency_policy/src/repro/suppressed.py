@@ -1,0 +1,3 @@
+"""A policy exception accepted in place."""
+
+import requests  # repro: ignore[dependency-policy]

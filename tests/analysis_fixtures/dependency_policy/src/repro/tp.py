@@ -1,0 +1,9 @@
+"""True positives: unguarded imports outside the dependency policy."""
+
+import requests  # FINDING: not stdlib, not a required dependency
+
+
+def lazy():
+    import torch  # FINDING: function-scoped but still unguarded
+
+    return torch

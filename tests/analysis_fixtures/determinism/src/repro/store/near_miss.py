@@ -1,0 +1,20 @@
+"""Near-miss negatives: deterministic code and off-path wall-clock."""
+
+import json
+import time
+
+
+def canonical_sorted(doc):
+    items = [doc[k] for k in sorted(set(doc))]  # sorted: deterministic
+    for key in doc:  # dict order is insertion order
+        items.append(key)
+    if not items:
+        raise ValueError(f"empty doc at {time.time()}")  # raise-path only
+    return json.dumps(items, sort_keys=True).encode()
+
+
+class OffPath:
+    """Not reachable from any determinism seed."""
+
+    def stamp(self):
+        return time.time()

@@ -1,0 +1,10 @@
+"""Sanctioned wall-clock, suppressed in place."""
+
+import time
+
+
+def provenance_doc(doc):
+    out = dict(doc)
+    # the stamped field is stripped before the identity hash
+    out["written_at"] = time.time()  # repro: ignore[determinism]
+    return out

@@ -1,0 +1,24 @@
+"""True positives: nondeterminism on the canonical-encoding path."""
+
+import hashlib
+import json
+import time
+
+
+def snapshot_doc(payload):
+    doc = dict(payload)
+    doc["written_at"] = time.time()  # FINDING: wall-clock in hashed doc
+    return doc
+
+
+def snapshot_id(doc):
+    return hashlib.sha256(canonical(doc)).hexdigest()
+
+
+def canonical(doc):
+    blob = [doc[k] for k in set(doc)]  # FINDING: unordered set iteration
+    return json.dumps(blob).encode()
+
+
+def float_key(value):
+    return f"{value:.6f}"  # FINDING: float formatting in an identity key

@@ -1,0 +1,35 @@
+"""Near-miss negatives: every release/ownership pattern that is fine."""
+
+from concurrent.futures import ThreadPoolExecutor
+
+
+def with_pool(items):
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        return list(pool.map(len, items))
+
+
+def finally_session(repo):
+    tx = repo.writable_session("main", read_workers=2)
+    try:
+        tx.commit("x")
+    finally:
+        tx.close()
+
+
+def handed_off(repo):
+    tx = repo.writable_session("main", read_workers=2)
+    return tx  # caller-managed: ownership escapes
+
+
+def retried(repo):
+    for _ in range(3):
+        try:
+            return repo.commit("x")
+        except ConflictError:
+            continue  # retry is handling, not swallowing
+    raise RuntimeError("contention")
+
+
+def plain_session(repo):
+    tx = repo.writable_session("main")  # no reader pool: nothing to leak
+    tx.commit("x")

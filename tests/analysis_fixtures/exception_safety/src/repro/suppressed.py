@@ -1,0 +1,8 @@
+"""A deliberately long-lived pool, accepted in place."""
+
+from concurrent.futures import ThreadPoolExecutor
+
+
+def long_lived(items):
+    pool = ThreadPoolExecutor(max_workers=2)  # repro: ignore[exception-safety]
+    return list(pool.map(len, items))

@@ -1,0 +1,20 @@
+"""True positives: leaked resources and swallowed conflicts."""
+
+from concurrent.futures import ThreadPoolExecutor
+
+
+def leak_pool(items):
+    pool = ThreadPoolExecutor(max_workers=2)  # FINDING: never shut down
+    return list(pool.map(len, items))
+
+
+def leak_session(repo):
+    tx = repo.writable_session("main", read_workers=2)  # FINDING
+    tx.commit("x")
+
+
+def swallow(repo):
+    try:
+        repo.commit("x")
+    except ConflictError:
+        pass  # FINDING: a lost commit vanishes silently

@@ -1,0 +1,5 @@
+"""Pure-jnp oracles for the fixture kernels."""
+
+
+def good(x):
+    return x * 2.0

@@ -1,0 +1,13 @@
+"""Contract gaps accepted in place (e.g. an experimental kernel)."""
+
+
+def _quiet_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def quiet_pallas(x, *, interpret=False):
+    return pl.pallas_call(  # repro: ignore[kernel-contract]
+        _quiet_kernel,
+        out_shape=x,
+        interpret=interpret,
+    )(x)

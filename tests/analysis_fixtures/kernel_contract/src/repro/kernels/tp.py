@@ -1,0 +1,18 @@
+"""True positives: contract violations around pallas_call."""
+
+
+def _bad_kernel(x_ref, o_ref):
+    print("debug")  # FINDING: host-side effect inside a kernel body
+    o_ref[...] = x_ref[...]
+
+
+def bad_pallas(x, *, interpret=False):
+    # FINDINGS: no `bad` oracle in ref.py, no interpret-mode test
+    return pl.pallas_call(
+        _bad_kernel,
+        out_shape=x,
+        interpret=interpret,
+    )(x)
+
+
+NAKED = pl.pallas_call(_bad_kernel, out_shape=None)  # FINDING: no wrapper

@@ -1,0 +1,5 @@
+"""Fixture interpret-mode tests (parsed by the checker, never run)."""
+
+
+def test_good_pallas_matches_oracle():
+    good_pallas(None, interpret=True)

@@ -1,0 +1,56 @@
+"""Near-miss negatives: correct locking the checker must not flag."""
+
+import threading
+
+_REG = {}
+_REG_LOCK = threading.Lock()
+
+
+class Meter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0  # unshared until __init__ returns
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def bump_later(self):
+        def work():
+            with self._lock:  # the closure takes the lock itself
+                self._count += 1
+
+        return work
+
+    def ordered(self):
+        with _REG_LOCK:
+            with self._lock:
+                self._count += 1
+
+    def ordered_again(self):
+        with _REG_LOCK:  # same order as ordered(): consistent
+            with self._lock:
+                self._count += 1
+
+
+class Index:
+    def register(self, rid, uri):
+        def mutate(doc):
+            doc[rid] = {"uri": uri}  # built inside the closure: fresh
+
+        self._update(mutate)
+
+    def refresh(self, rid, snapshot_id):
+        def mutate(doc):
+            entry = doc.setdefault(rid, {})  # doc-rooted, not stale
+            entry["snapshot_id"] = snapshot_id
+
+        self._update(mutate)
+
+    def _update(self, mutate):
+        return mutate
+
+
+def register_module(key, value):
+    with _REG_LOCK:
+        _REG[key] = value

@@ -1,0 +1,17 @@
+"""A real violation silenced with an in-place suppression comment."""
+
+import threading
+
+
+class Tally:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0
+
+    def add(self):
+        with self._lock:
+            self._n += 1
+
+    def reset_unsafe(self):
+        # single-threaded teardown path, documented
+        self._n = 0  # repro: ignore[lock-discipline]

@@ -1,0 +1,52 @@
+"""True positives for the lock-discipline checker."""
+
+import threading
+
+_ENTRIES = {}
+_LOCK = threading.Lock()
+_OTHER = threading.Lock()
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._hits = 0  # constructor writes are exempt
+
+    def hit(self):
+        with self._lock:
+            self._hits += 1
+
+    def reset(self):
+        self._hits = 0  # FINDING: mutation without the inferred guard
+
+
+class Cache:
+    """CAS closure capturing a dict built before the retry loop."""
+
+    def register(self, rid, uri):
+        entry = {"uri": uri}  # stale after a retry replays the closure
+        self._update(lambda doc: doc.__setitem__(rid, entry))  # FINDING
+
+    def _update(self, mutate):
+        return mutate
+
+
+def record(key, value):
+    with _LOCK:
+        _ENTRIES[key] = value
+
+
+def forget(key):
+    _ENTRIES.pop(key, None)  # FINDING: unguarded module-global mutation
+
+
+def swap_ab():
+    with _LOCK:
+        with _OTHER:  # FINDING (pair): opposite order of swap_ba
+            pass
+
+
+def swap_ba():
+    with _OTHER:
+        with _LOCK:
+            pass

@@ -1,0 +1,9 @@
+"""Shared pytest configuration for the suite.
+
+The static-analysis fixture corpus under ``analysis_fixtures/`` contains
+deliberately broken mini-projects (including a fake ``tests/test_kernels.py``
+the kernel-contract checker parses).  They are inputs to
+``tests/test_analysis.py``, never test modules themselves.
+"""
+
+collect_ignore = ["analysis_fixtures"]

@@ -8,7 +8,12 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks.compare import DEFAULT_BASELINE, GATED, gate  # noqa: E402
+from benchmarks.compare import (  # noqa: E402
+    DEFAULT_BASELINE,
+    GATED,
+    gate,
+    missing_from_baseline,
+)
 from benchmarks.make_perf_deltas import make_perf_deltas  # noqa: E402
 
 
@@ -104,7 +109,20 @@ def test_committed_baseline_covers_every_gated_metric():
     CI gate can never silently skip one."""
     path = Path(__file__).resolve().parent.parent / DEFAULT_BASELINE
     baseline = json.loads(path.read_text())
-    have = {(r["bench"], r["name"]) for r in baseline["records"]}
-    missing = [(b, n) for b, n, _ in GATED if (b, n) not in have]
-    assert not missing, f"baseline lacks gated metrics: {missing}"
+    assert missing_from_baseline(baseline) == []
     assert baseline.get("quick") is True  # CI compares quick runs
+
+
+def test_missing_from_baseline_names_the_bench_file():
+    """A truncated baseline refresh must say which bench file to rerun."""
+    full = doc({(b, n): 10.0 for b, n, _ in GATED})
+    assert missing_from_baseline(full) == []
+
+    truncated = doc({(b, n): 10.0 for b, n, _ in GATED
+                     if b != "transactional"})
+    msgs = missing_from_baseline(truncated)
+    dropped = [(b, n) for b, n, _ in GATED if b == "transactional"]
+    assert len(msgs) == len(dropped)
+    assert all("benchmarks/bench_transactional.py" in m for m in msgs)
+    for _, name in dropped:
+        assert any(name in m for m in msgs)

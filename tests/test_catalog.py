@@ -490,3 +490,46 @@ def test_variable_where_lazy_matches_eager(federation):
     ecoords, evalues = eager.where(value_gt=45.0)
     assert set(zip(*coords)) == set(zip(*ecoords))
     assert sorted(values.tolist()) == sorted(evalues.tolist())
+
+
+def test_register_respects_concurrent_catalog_update(tmp_path, monkeypatch):
+    """A registration whose scan is raced by a concurrent ingest (which
+    commits a new head and records it via the catalog's CAS) must not
+    clobber the newer entry with its stale scan — the entry it leaves
+    behind must point at the repository's current head and keep the
+    concurrent data's coverage."""
+    from repro.catalog import index as catalog_index
+
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    raw = ObjectStore(str(tmp_path / "raw"))
+    repo = Repository.create(str(tmp_path / "store"))
+    t0 = 1305849600.0
+    keys1 = generate_raw_archive(raw, n_scans=2, n_az=N_AZ,
+                                 n_gates=N_GATES, n_sweeps=N_SWEEPS, t0=t0)
+    ingest(raw, repo, keys=keys1)       # history predating the catalog
+
+    real_scan = catalog_index.scan_repository
+    state = {"fired": False}
+
+    def racing_scan(repo_, branch="main"):
+        cov = real_scan(repo_, branch)
+        if not state["fired"]:
+            # between register's scan and its CAS write: a concurrent
+            # ingest advances the branch head and records it
+            state["fired"] = True
+            keys2 = generate_raw_archive(raw, n_scans=2, n_az=N_AZ,
+                                         n_gates=N_GATES,
+                                         n_sweeps=N_SWEEPS,
+                                         t0=t0 + 2 * 270.0)
+            ingest(raw, repo, keys=keys2, catalog=catalog,
+                   repo_id="KVNX")
+        return cov
+
+    monkeypatch.setattr(catalog_index, "scan_repository", racing_scan)
+    entry = catalog.register_repository(repo, repo_id="KVNX")
+    head = repo.branch_head()
+    assert entry.snapshot_id == head
+    recorded = catalog.entry("KVNX")
+    assert recorded.snapshot_id == head
+    # the concurrent ingest's coverage survived the registration
+    assert recorded.vcps["VCP-212"]["n_times"] == 4

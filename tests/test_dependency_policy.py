@@ -6,18 +6,25 @@ psutil}: `pip install -e .` must be enough to import everything under
 orjson, ...) may only be imported behind a ``try``/``except`` that
 catches ``ImportError`` — the store degrades, it never hard-requires.
 
-This test walks every module's AST and fails on any import statement —
-module level *or* lazily inside a function — of a module outside the
-policy, unless an enclosing ``try`` catches ``ImportError``.  Lazy
-imports count because they still crash at runtime on the stdlib-only CI
-leg; an optional dependency must be guarded wherever it is imported.
+Since PR 6 the policy is implemented once, as the ``dependency-policy``
+rule of the ``repro.analysis`` static-analysis framework; this test
+drives that checker.  The original standalone AST walker is kept below
+as a *reference implementation* and the suite asserts both agree on the
+current tree, so the migration can never silently weaken the guard.
 """
 
 import ast
 import sys
 from pathlib import Path
 
-SRC = Path(__file__).resolve().parent.parent / "src"
+from repro.analysis import Project, run
+from repro.analysis.checkers.dependency_policy import (
+    RULE,
+    iter_imports,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
 
 REQUIRED_THIRD_PARTY = {"numpy", "jax", "pandas", "psutil"}
 # the package itself (absolute self-imports) — relative imports carry
@@ -28,6 +35,8 @@ STDLIB = set(sys.stdlib_module_names)
 _IMPORT_GUARDS = {"ImportError", "ModuleNotFoundError", "Exception",
                   "BaseException"}
 
+
+# -- historical reference implementation (pre-framework PR 1 walker) ---------
 
 def _catches_import_error(handler: ast.ExceptHandler) -> bool:
     if handler.type is None:  # bare except
@@ -70,35 +79,54 @@ def _violations(tree: ast.AST, relpath: str):
         yield f"{relpath}:{lineno}: {module}"
 
 
+# -- enforcement, via the framework checker ----------------------------------
+
 def test_required_imports_stay_inside_the_policy():
-    assert SRC.is_dir(), SRC
-    violations = []
-    for py in sorted(SRC.rglob("*.py")):
-        tree = ast.parse(py.read_text(), filename=str(py))
-        violations.extend(_violations(tree, str(py.relative_to(SRC))))
-    assert not violations, (
+    findings = run(Project(REPO), [RULE]).findings
+    assert not findings, (
         "imports outside stdlib + {numpy, jax, pandas, psutil} on a "
         "required path (guard optional deps with try/except ImportError "
         "or move them to a [speed]-style extra):\n  "
-        + "\n  ".join(violations)
+        + "\n  ".join(f.render() for f in findings)
     )
 
 
+def test_checker_agrees_with_reference_walker_on_current_tree():
+    # run the historical walker over the same files the checker sees and
+    # compare (path, line, module) sets — one policy, one implementation
+    assert SRC.is_dir(), SRC
+    reference = set()
+    for py in sorted((SRC / "repro").rglob("*.py")):
+        rel = py.relative_to(REPO).as_posix()
+        tree = ast.parse(py.read_text(), filename=str(py))
+        for v in _violations(tree, rel):
+            reference.add(v)
+
+    result = run(Project(REPO), [RULE])
+    checker_found = {
+        f"{f.path}:{f.line}: {f.symbol}"
+        for f in result.findings + result.suppressed
+    }
+    assert checker_found == reference
+
+
 def test_guard_detection_is_sound():
-    # the walker itself: guarded imports pass, unguarded ones are caught
+    # the guard logic: guarded imports pass, unguarded ones are caught
     ok = ast.parse(
         "try:\n"
         "    import zstandard\n"
         "except ImportError:\n"
         "    zstandard = None\n"
     )
-    assert not list(_violations(ok, "m.py"))
+    assert not list(iter_imports(ok))
     bad = ast.parse("def f():\n    import zstandard\n")
-    assert list(_violations(bad, "m.py")) == ["m.py:2: zstandard"]
+    assert list(iter_imports(bad)) == [(2, "zstandard")]
     nested = ast.parse(
         "try:\n"
         "    from orjson import dumps\n"
         "except (ValueError, ImportError):\n"
         "    import zstandard\n"  # handler body is NOT import-guarded
     )
-    assert list(_violations(nested, "m.py")) == ["m.py:4: zstandard"]
+    assert list(iter_imports(nested)) == [(4, "zstandard")]
+    relative = ast.parse("from . import codecs\n")
+    assert not list(iter_imports(relative))

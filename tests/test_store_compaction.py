@@ -384,3 +384,38 @@ def test_catalog_note_snapshot_unknown_repo(tmp_path):
     catalog = Catalog.create(str(tmp_path / "cat"))
     with pytest.raises(KeyError, match="not in catalog"):
         catalog.note_snapshot("nope", "abc")
+
+
+def test_compact_closes_every_attempt_transaction(tmp_path, monkeypatch):
+    """Each attempt's pool-backed transaction must release its reader
+    pool on every exit — committed, no-op, and conflict-retry alike
+    (the exception-safety lint flagged the abandoned-retry leak)."""
+    repo = _series_repo(tmp_path / "store", n=12)
+    created, closed = [], []
+    state = {"fail_once": True}
+    real = Repository.writable_session
+
+    def spying(self, branch="main", **kw):
+        tx = real(self, branch, **kw)
+        created.append(tx)
+        orig_close, orig_commit = tx.close, tx.commit
+
+        def close_():
+            closed.append(tx)
+            orig_close()
+
+        def commit_(message=None):
+            if state.pop("fail_once", None):
+                raise ConflictError("injected: concurrent append won")
+            return orig_commit(message)
+
+        tx.close, tx.commit = close_, commit_
+        return tx
+
+    monkeypatch.setattr(Repository, "writable_session", spying)
+    report = compact(repo, "timeseries", read_workers=2)
+    assert report.committed and report.retries == 1
+    compact(repo, "timeseries", read_workers=2)   # idempotent no-op path
+    assert len(created) == 3                      # retry + commit + no-op
+    assert [id(t) for t in closed] == [id(t) for t in created]
+    assert all(t._own_pool is None for t in created)

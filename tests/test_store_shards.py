@@ -244,3 +244,81 @@ def test_cache_budget_evicts(tmp_path):
     stats = s.cache_stats()
     assert stats["chunk_bytes"] <= 2 * one_chunk
     assert stats["chunk_entries"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# session close vs. reader-pool lifecycle (lock discipline)
+# ---------------------------------------------------------------------------
+
+def _pool_repo(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    tx = repo.writable_session()
+    tx.create_array("v", shape=(8, 8), dtype="float32",
+                    chunks=(2, 8)).write_full(
+        np.arange(64, dtype="float32").reshape(8, 8))
+    tx.commit("w")
+    return repo
+
+
+def test_session_close_synchronizes_with_cache_lock(tmp_path):
+    """close() used to drop ``_own_pool`` without ``_cache_lock`` — an
+    unlocked check-then-clear races ``reader_pool()`` into leaking a
+    pool a first reader is building (or handing that reader a pool this
+    close() already shut down).  Pin the discipline: close() acquires
+    the same lock the pool is created under."""
+    session = _pool_repo(tmp_path).readonly_session(read_workers=2)
+
+    class ProbeLock:
+        def __init__(self, inner):
+            self.inner = inner
+            self.acquisitions = 0
+
+        def __enter__(self):
+            self.acquisitions += 1
+            return self.inner.__enter__()
+
+        def __exit__(self, *exc):
+            return self.inner.__exit__(*exc)
+
+    probe = session._cache_lock = ProbeLock(session._cache_lock)
+    assert session.reader_pool() is not None
+    before = probe.acquisitions
+    session.close()
+    assert probe.acquisitions > before, "close() bypassed the cache lock"
+    assert session._own_pool is None
+
+
+def test_session_close_reader_pool_stress_leaves_no_threads(tmp_path):
+    import threading
+    import time as _time
+
+    session = _pool_repo(tmp_path).readonly_session(read_workers=2)
+    errors = []
+
+    def spin(fn):
+        try:
+            for _ in range(200):
+                fn()
+        except Exception as exc:  # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [
+        threading.Thread(target=spin, args=(session.reader_pool,)),
+        threading.Thread(target=spin, args=(session.close,)),
+        threading.Thread(target=spin, args=(session.reader_pool,)),
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    session.close()   # whoever created last, this must reap it
+    assert session._own_pool is None
+    deadline = _time.monotonic() + 10.0
+    while _time.monotonic() < deadline:
+        leaked = [t.name for t in threading.enumerate()
+                  if t.name.startswith("repro-read")]
+        if not leaked:
+            break
+        _time.sleep(0.05)
+    assert not leaked, f"reader-pool threads leaked: {leaked}"
