@@ -11,15 +11,28 @@ exits 1 on any finding not in the committed baseline
 reported but never fail the run.
 
     --rules lock-discipline,determinism   run a subset
+    --changed [REF]                       only fail on findings in files
+                                          touched vs REF (default HEAD) —
+                                          the pre-commit mode
+    --dynamic                             run the concurrency sanitizer
+                                          gate: live scenario sweep +
+                                          static<->dynamic agreement +
+                                          seeded self-check
     --write-baseline                      accept current findings
     --json OUT.json                       machine-readable report (CI
                                           uploads this as an artifact)
+
+``--dynamic`` honours ``REPRO_TSAN_SEED_RACE=1``: a deliberately racy
+scenario is injected into the sweep, which must turn the gate red — the
+CI lane uses this to prove the sanitizer can actually fail.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 from pathlib import Path
 
@@ -40,6 +53,95 @@ from repro.analysis import (  # noqa: E402
 DEFAULT_BASELINE = "scripts/lint_baseline.json"
 
 
+def changed_paths(root: Path, ref: str) -> set:
+    """Repo-relative posix paths touched vs ``ref``: committed diff,
+    working-tree diff, and untracked files."""
+    out: set = set()
+    for cmd in (
+        ["git", "diff", "--name-only", ref],
+        ["git", "diff", "--name-only"],
+        ["git", "ls-files", "--others", "--exclude-standard"],
+    ):
+        proc = subprocess.run(cmd, cwd=root, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"--changed: `{' '.join(cmd)}` failed: {proc.stderr.strip()}"
+            )
+        out.update(p.strip() for p in proc.stdout.splitlines() if p.strip())
+    return out
+
+
+def run_dynamic(root: Path, json_path) -> int:
+    """The concurrency-sanitizer gate: live corpus sweep (must be clean),
+    static<->dynamic lockset agreement (every inferred guard confirmed),
+    and the seeded self-check (every planted PR 6 race re-found, every
+    fixed counterpart clean)."""
+    from repro.analysis.dynamic import scenarios, seeded
+    from repro.analysis.dynamic.agreement import agreement_report
+    from repro.analysis.dynamic.scheduler import find_defect
+
+    doc = {"corpus": {}, "agreement": None, "seeded_self_check": None,
+           "ok": True}
+
+    results = scenarios.sweep()
+    if os.environ.get("REPRO_TSAN_SEED_RACE") == "1":
+        # red path: plant a known race in the sweep; the gate must fail
+        case = seeded.CASES["session-close-pool-leak"]
+        results["seeded-race-injection"] = find_defect(
+            case.buggy, depth=case.depth,
+            max_schedules=case.max_schedules)
+    for name, res in sorted(results.items()):
+        if res is None:
+            doc["corpus"][name] = {"clean": True}
+            print(f"dynamic: corpus {name}: clean")
+        else:
+            doc["corpus"][name] = {
+                "clean": False,
+                "schedule": res.schedule,
+                "defects": res.defects,
+            }
+            doc["ok"] = False
+            print(f"dynamic: corpus {name}: DEFECT "
+                  f"(schedule {res.schedule})")
+            for d in res.defects:
+                print(f"  {d}")
+
+    agree = agreement_report(str(root))
+    doc["agreement"] = agree
+    for key, info in sorted(agree["guards"].items()):
+        print(f"dynamic: agreement {key}: {info['status']} "
+              f"(static {'+'.join(info['static_locks'])}, observed "
+              f"{'+'.join(info['observed_lockset']) or 'nothing'}, "
+              f"{info['accesses']} access(es))")
+    if not agree["ok"]:
+        doc["ok"] = False
+        print("dynamic: agreement FAILED — a statically inferred guard "
+              "was refuted or never observed", file=sys.stderr)
+
+    selfcheck = seeded.run_self_check()
+    doc["seeded_self_check"] = selfcheck
+    for name, info in sorted(selfcheck.items()):
+        status = "ok" if info["ok"] else "FAILED"
+        print(f"dynamic: self-check {name}: {status}")
+        if not info["ok"]:
+            doc["ok"] = False
+
+    if json_path:
+        blob = json.dumps(doc, indent=2, sort_keys=True) + "\n"
+        if json_path == "-":
+            sys.stdout.write(blob)
+        else:
+            Path(json_path).write_text(blob, encoding="utf-8")
+            print(f"json report: {json_path}")
+
+    if not doc["ok"]:
+        print("\nFAIL: concurrency sanitizer gate is red.",
+              file=sys.stderr)
+        return 1
+    print("dynamic: sanitizer gate green")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
@@ -58,12 +160,23 @@ def main(argv=None) -> int:
                     help="print registered rule ids and exit")
     ap.add_argument("--write-baseline", action="store_true",
                     help="accept every current finding into the baseline")
+    ap.add_argument("--changed", nargs="?", const="HEAD", default=None,
+                    metavar="REF",
+                    help="scope findings to files touched vs REF "
+                         "(default HEAD) plus working-tree/untracked "
+                         "changes — the pre-commit mode")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="run the concurrency sanitizer gate instead of "
+                         "the static checkers")
     args = ap.parse_args(argv)
 
     if args.list_rules:
         for name in sorted(CHECKERS):
             print(name)
         return 0
+
+    if args.dynamic:
+        return run_dynamic(Path(args.root).resolve(), args.json)
 
     root = Path(args.root).resolve()
     baseline_path = (Path(args.baseline) if args.baseline
@@ -73,6 +186,15 @@ def main(argv=None) -> int:
 
     project = Project(root)
     result = run(project, rules)
+
+    if args.changed is not None:
+        # pre-commit scope: checkers still see the whole tree (cross-
+        # module inference needs it) but only findings anchored in
+        # touched files count
+        scope = changed_paths(root, args.changed)
+        result.findings = [f for f in result.findings if f.path in scope]
+        result.suppressed = [f for f in result.suppressed
+                             if f.path in scope]
 
     if args.write_baseline:
         doc = findings_to_baseline_doc(result.findings)
@@ -87,9 +209,13 @@ def main(argv=None) -> int:
 
     baseline = load_baseline(baseline_path)
     new, known, expired = diff_baseline(result.findings, baseline)
+    if args.changed is not None:
+        expired = []   # a scoped run cannot judge the rest of the tree
 
+    scope_note = (f", scoped to changes vs {args.changed}"
+                  if args.changed is not None else "")
     print(f"repro.analysis: {len(project.modules)} module(s), "
-          f"rules: {', '.join(result.rules)}")
+          f"rules: {', '.join(result.rules)}{scope_note}")
     print(render_human(result, new, known, expired))
 
     if args.json:

@@ -24,6 +24,9 @@ python -m compileall -q src
 echo "== static analysis (scripts/lint.py) =="
 python scripts/lint.py
 
+echo "== concurrency sanitizer (scripts/lint.py --dynamic) =="
+python scripts/lint.py --dynamic
+
 echo "== pytest =="
 python -m pytest -x -q
 

@@ -71,8 +71,12 @@ def check(project: Project) -> Iterator[Finding]:
     cfg = project.config
     stdlib = set(sys.stdlib_module_names)
     allowed = stdlib | set(cfg.required_third_party) | set(cfg.self_packages)
+    # the extra scanned trees are part of this repository: importing
+    # `benchmarks.common` from a benchmark driver is a self-import
+    allowed |= {t.rstrip("/").split("/")[-1] for t in cfg.extra_trees}
     policy = ", ".join(cfg.required_third_party)
-    for mod in project.iter_src():
+    modules = list(project.iter_src()) + list(project.iter_extra(RULE))
+    for mod in modules:
         for lineno, module in iter_imports(mod.tree):
             if module.split(".")[0] in allowed:
                 continue

@@ -94,13 +94,18 @@ def check(project: Project) -> Iterator[Finding]:
     # since they execute on its behalf)
     units: List[Tuple[str, ast.FunctionDef, str]] = []   # (rel, fn, qualname)
     by_name: Dict[str, List[int]] = {}                   # simple name -> idx
-    for pkg in cfg.determinism_packages:
-        for mod in project.iter_under(pkg):
-            qn = qualnames(mod.tree)
-            for fn in _outer_functions(mod.tree):
-                idx = len(units)
-                units.append((mod.rel, fn, qn.get(id(fn), fn.name)))
-                by_name.setdefault(fn.name, []).append(idx)
+    scanned = [mod for pkg in cfg.determinism_packages
+               for mod in project.iter_under(pkg)]
+    # extra trees (scripts/, benchmarks/) are in scope for this rule:
+    # a CLI or benchmark helper that a hash-feeding seed reaches by
+    # name is held to the same bit-determinism bar
+    scanned.extend(project.iter_extra(RULE))
+    for mod in scanned:
+        qn = qualnames(mod.tree)
+        for fn in _outer_functions(mod.tree):
+            idx = len(units)
+            units.append((mod.rel, fn, qn.get(id(fn), fn.name)))
+            by_name.setdefault(fn.name, []).append(idx)
 
     seeds: Set[int] = set()
     seed_fn_names = {name for _, name in cfg.determinism_seed_functions}

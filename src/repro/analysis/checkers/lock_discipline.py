@@ -18,6 +18,25 @@ Three sub-checks, all under the ``lock-discipline`` rule id:
   concurrent writer already advanced the document) the stale value
   clobbers the concurrent update — the lost-update bug class PR 3/4
   fixed by hand.
+
+The unguarded-mutation pass is **interprocedural through private
+helpers**: when a *private* helper (``self._helper()`` or a module-level
+``_helper()`` defined in the same module) is called anywhere in the
+module, the helper's direct mutation events are *replaced* by one
+synthetic event per call site whose lockset is the union of the call
+site's and the helper's own — expanded to a fixed point (cycle-guarded)
+so chains like ``yield_point -> _pause -> _grant_next`` resolve.  This
+models the two idioms that an intra-procedural lockset pass gets wrong:
+"the caller holds the lock for me" (no false positive) and "an unlocked
+caller reaches a guarded mutation" (flagged at the call site, where the
+fix belongs).  Public callees keep their direct events — they can be
+called from outside the module, so their own body must hold the guard.
+
+Lock factories recognized: ``threading.Lock``/``RLock``/etc. and the
+sanitizer's ``new_lock``/``new_rlock``
+(:mod:`repro.analysis.dynamic.runtime`), so instrumented modules keep
+their static guard inference — :func:`inferred_guards` is what the
+static↔dynamic agreement report joins against.
 """
 
 from __future__ import annotations
@@ -40,6 +59,12 @@ _MUTATORS = {
 _CONSTRUCTORS = {"__init__", "__post_init__", "__new__"}
 
 
+# the sanitizer's traced factories (repro.analysis.dynamic.runtime) are
+# lock factories under any import alias — instrumented modules must keep
+# their static guard inference
+_TRACED_FACTORIES = {"new_lock", "new_rlock"}
+
+
 def _is_lock_factory(node: ast.AST) -> bool:
     if not isinstance(node, ast.Call):
         return False
@@ -47,6 +72,8 @@ def _is_lock_factory(node: ast.AST) -> bool:
     if d is None:
         return False
     last = d.rsplit(".", 1)[-1]
+    if last in _TRACED_FACTORIES:
+        return True
     return last in _LOCK_FACTORIES and (d == last or d == f"threading.{last}")
 
 
@@ -60,6 +87,23 @@ class _Mutation:
     symbol: str           # qualname for the finding
     nested: bool          # inside a nested callable (deferred execution)
     in_ctor: bool
+    # (class name or None, function name) of the enclosing function —
+    # the join key for one-level interprocedural call-site expansion
+    fn_key: Tuple[Optional[str], str] = (None, "")
+    via: str = ""         # helper the mutation was reached through
+
+
+@dataclass
+class _CallSite:
+    held: FrozenSet[str]
+    line: int
+    func: str
+    symbol: str
+    nested: bool
+    in_ctor: bool
+    # enclosing function of the call site — synthetic events inherit it
+    # so expansion can continue through chains of private helpers
+    fn_key: Tuple[Optional[str], str] = (None, "")
 
 
 def _mut_target(expr: ast.AST) -> Optional[Tuple[str, str]]:
@@ -114,6 +158,12 @@ class _ModuleScan:
         self.module_names: Set[str] = set()
         self.class_locks: Dict[str, Set[str]] = {}
         self.mutations: List[_Mutation] = []
+        # one-level interprocedural: private callees defined in this
+        # module, and every call site's lockset
+        self.class_methods: Dict[str, Set[str]] = {}
+        self.module_funcs: Set[str] = set()
+        self.call_sites: Dict[Tuple[Optional[str], str],
+                              List[_CallSite]] = {}
         # (lock_a, lock_b) -> (line, func) for a-held-while-acquiring-b
         self.order_edges: Dict[Tuple[str, str], Tuple[int, str]] = {}
         self.findings: List[Finding] = []
@@ -128,10 +178,17 @@ class _ModuleScan:
             elif isinstance(stmt, ast.AnnAssign) and isinstance(
                     stmt.target, ast.Name):
                 self.module_names.add(stmt.target.id)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.module_funcs.add(stmt.name)
 
         for node in ast.walk(mod.tree):
             if isinstance(node, ast.ClassDef):
                 locks: Set[str] = set()
+                methods: Set[str] = set()
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        methods.add(sub.name)
                 for sub in ast.walk(node):
                     if isinstance(sub, ast.Assign) and _is_lock_factory(
                             sub.value):
@@ -140,14 +197,20 @@ class _ModuleScan:
                             if got and got[0] == "self":
                                 locks.add(got[1])
                 self.class_locks[node.name] = locks
+                self.class_methods[node.name] = methods
 
     # -- per-function event collection ----------------------------------
     def scan_function(self, fn: ast.FunctionDef, owner: str,
                       cls_name: Optional[str]) -> None:
         inst_locks = self.class_locks.get(cls_name or "", set())
+        methods = self.class_methods.get(cls_name or "", set())
         fn_locals = _local_names(fn)
         symbol = self.qn.get(id(fn), fn.name)
         in_ctor = fn.name in _CONSTRUCTORS
+        fn_key = (cls_name, fn.name)
+
+        def _private(name: str) -> bool:
+            return name.startswith("_") and not name.startswith("__")
 
         def lock_token(expr: ast.AST) -> Optional[str]:
             if (isinstance(expr, ast.Attribute)
@@ -170,7 +233,7 @@ class _ModuleScan:
                 self.mutations.append(_Mutation(
                     owner=owner, name=name, held=held, line=line,
                     func=fn.name, symbol=symbol, nested=nested,
-                    in_ctor=in_ctor and not nested,
+                    in_ctor=in_ctor and not nested, fn_key=fn_key,
                 ))
             else:
                 # a bare name only mutates module state when it is a
@@ -179,8 +242,30 @@ class _ModuleScan:
                     self.mutations.append(_Mutation(
                         owner="module", name=name, held=held, line=line,
                         func=fn.name, symbol=symbol, nested=nested,
-                        in_ctor=False,
+                        in_ctor=False, fn_key=fn_key,
                     ))
+
+        def record_call(node: ast.Call, held: FrozenSet[str],
+                        nested: bool) -> None:
+            # one-level interprocedural: remember the lockset at every
+            # call of a *private* same-module callee; its direct
+            # mutation events are re-attributed to these sites
+            key: Optional[Tuple[Optional[str], str]] = None
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name) and f.value.id == "self"
+                    and cls_name is not None and f.attr in methods
+                    and _private(f.attr)):
+                key = (cls_name, f.attr)
+            elif (isinstance(f, ast.Name) and f.id in self.module_funcs
+                    and f.id not in fn_locals and _private(f.id)):
+                key = (None, f.id)
+            if key is not None and key != fn_key:   # ignore direct recursion
+                self.call_sites.setdefault(key, []).append(_CallSite(
+                    held=held, line=node.lineno, func=fn.name,
+                    symbol=symbol, nested=nested,
+                    in_ctor=in_ctor and not nested, fn_key=fn_key,
+                ))
 
         def walk(node: ast.AST, held: FrozenSet[str], nested: bool) -> None:
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
@@ -222,10 +307,11 @@ class _ModuleScan:
                 for t in node.targets:
                     record(t, held, node.lineno, nested)
                 return
-            if (isinstance(node, ast.Call)
-                    and isinstance(node.func, ast.Attribute)
-                    and node.func.attr in _MUTATORS):
-                record(node.func.value, held, node.lineno, nested)
+            if isinstance(node, ast.Call):
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in _MUTATORS):
+                    record(node.func.value, held, node.lineno, nested)
+                record_call(node, held, nested)
             for child in ast.iter_child_nodes(node):
                 walk(child, held, nested)
 
@@ -332,19 +418,62 @@ class _ModuleScan:
                         ),
                     ))
 
-    # -- finish ----------------------------------------------------------
-    def finish(self) -> List[Finding]:
+    # -- interprocedural expansion + guard inference --------------------
+    def _expanded(self) -> List[_Mutation]:
+        """Mutation events after call-site expansion: a private helper
+        with recorded same-module call sites has each direct event
+        *replaced* by one synthetic event per call site, held =
+        call-site lockset ∪ the helper's own — iterated to a fixed point
+        so the lockset follows chains of private helpers, with a
+        per-path cycle guard for mutual recursion."""
+        out: List[_Mutation] = []
+        work: List[Tuple[_Mutation, FrozenSet[Tuple[Optional[str], str]]]]
+        work = [(m, frozenset([m.fn_key])) for m in self.mutations]
+        while work:
+            m, seen = work.pop()
+            sites = self.call_sites.get(m.fn_key)
+            if not sites:
+                out.append(m)
+                continue
+            for cs in sites:
+                nm = _Mutation(
+                    owner=m.owner, name=m.name, held=m.held | cs.held,
+                    line=cs.line, func=cs.func, symbol=cs.symbol,
+                    nested=m.nested or cs.nested, in_ctor=cs.in_ctor,
+                    fn_key=cs.fn_key, via=m.via or m.func,
+                )
+                if cs.fn_key in seen:
+                    out.append(nm)     # recursive chain: stop expanding
+                else:
+                    work.append((nm, seen | {cs.fn_key}))
+        return out
+
+    def guard_map(self) -> Dict[Tuple[str, str],
+                                Tuple[FrozenSet[str], List[_Mutation]]]:
+        """(owner, name) -> (inferred guard lockset, expanded events).
+        The guard is the intersection of locksets over every locked
+        mutation; empty when the name is never locked or locked
+        inconsistently."""
         by_name: Dict[Tuple[str, str], List[_Mutation]] = {}
-        for m in self.mutations:
+        for m in self._expanded():
             if m.in_ctor:
                 continue       # pre-publication writes are unshared
             by_name.setdefault((m.owner, m.name), []).append(m)
+        out: Dict[Tuple[str, str],
+                  Tuple[FrozenSet[str], List[_Mutation]]] = {}
+        for key, events in sorted(by_name.items()):
+            locked = [e for e in events if e.held]
+            guard = (frozenset.intersection(*(e.held for e in locked))
+                     if locked else frozenset())
+            out[key] = (guard, events)
+        return out
 
-        for (owner, name), events in sorted(by_name.items()):
+    # -- finish ----------------------------------------------------------
+    def finish(self) -> List[Finding]:
+        for (owner, name), (guard, events) in self.guard_map().items():
             locked = [e for e in events if e.held]
             if not locked:
                 continue       # never guarded anywhere: no inferred lock
-            guard = frozenset.intersection(*(e.held for e in locked))
             where = (f"class {owner.split(':', 1)[1]}"
                      if owner.startswith("class:") else "this module")
             display = f"self.{name}" if owner.startswith("class:") else name
@@ -368,13 +497,14 @@ class _ModuleScan:
                 suffix = (" — in a nested callable that may run on a "
                           "worker thread after the caller's locks are "
                           "released" if e.nested else "")
+                via = f" (reached via call to `{e.via}`)" if e.via else ""
                 self.findings.append(Finding(
                     rule=RULE, path=self.mod.rel, line=e.line,
                     symbol=e.symbol,
                     message=(
                         f"mutation of `{display}` in `{e.func}` without "
                         f"holding `{lock}`, which guards it elsewhere in "
-                        f"{where}{suffix}"
+                        f"{where}{via}{suffix}"
                     ),
                 ))
 
@@ -429,3 +559,40 @@ def check(project: Project) -> Iterator[Finding]:
             owner = f"class:{cls}" if cls else "module"
             scan.scan_function(fn, owner, cls)
         yield from scan.finish()
+
+
+def inferred_guards(project: Project) -> Dict[str, Dict[str, object]]:
+    """Every name this pass statically infers a guard for, normalized to
+    the dynamic sanitizer's naming so the agreement report can join the
+    two: ``"Session._own_pool" -> {"module": ..., "locks":
+    ["Session._cache_lock"]}``.
+
+    Keys are ``Class.attr`` for instance state and ``<module-rel>::name``
+    for module globals; lock tokens ``self.<attr>`` in class ``C``
+    normalize to ``C.<attr>`` — the name the instrumented module passes
+    to :func:`repro.analysis.dynamic.runtime.new_lock`.  Only names with
+    a single consistent inferred lock are returned (inconsistent
+    locksets are a finding, not a guard).
+    """
+    out: Dict[str, Dict[str, object]] = {}
+    for mod in project.iter_src():
+        scan = _ModuleScan(mod)
+        if not (scan.module_locks or any(scan.class_locks.values())):
+            continue
+        for fn, cls in _outer_functions(mod.tree):
+            owner = f"class:{cls}" if cls else "module"
+            scan.scan_function(fn, owner, cls)
+        for (owner, name), (guard, _events) in scan.guard_map().items():
+            if not guard:
+                continue
+            if owner.startswith("class:"):
+                cls_name = owner.split(":", 1)[1]
+                key = f"{cls_name}.{name}"
+                locks = sorted(
+                    f"{cls_name}.{lk[5:]}" if lk.startswith("self.") else lk
+                    for lk in guard)
+            else:
+                key = f"{mod.rel}::{name}"
+                locks = sorted(guard)
+            out[key] = {"module": mod.rel, "locks": locks}
+    return out

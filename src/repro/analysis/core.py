@@ -153,6 +153,12 @@ class ProjectConfig:
         "numpy", "jax", "pandas", "psutil",
     )
     self_packages: Tuple[str, ...] = ("repro",)
+    # extra scanned trees (CLI entry points, benchmark drivers) and the
+    # rules that apply there.  kernel-contract, lock-discipline and
+    # exception-safety stay src-only: scripts are sequential entry
+    # points and the kernel contract is a src/repro/kernels property.
+    extra_trees: Tuple[str, ...] = ("scripts", "benchmarks")
+    extra_tree_rules: Tuple[str, ...] = ("dependency-policy", "determinism")
 
 
 @dataclass
@@ -172,6 +178,10 @@ class Project:
         self.modules: Dict[str, Module] = {}
         src = self.root / self.config.src_root
         paths = sorted(src.rglob("*.py")) if src.is_dir() else []
+        for tree in self.config.extra_trees:
+            tree_dir = self.root / tree
+            if tree_dir.is_dir():
+                paths.extend(sorted(tree_dir.rglob("*.py")))
         extra = self.root / self.config.kernels_test
         if extra.is_file():
             paths.append(extra)
@@ -202,6 +212,14 @@ class Project:
         for rel in sorted(self.modules):
             if rel.startswith(prefix):
                 yield self.modules[rel]
+
+    def iter_extra(self, rule: str) -> Iterator[Module]:
+        """Modules in the extra trees — empty unless ``rule`` is scoped
+        to apply there (``config.extra_tree_rules``)."""
+        if rule not in self.config.extra_tree_rules:
+            return
+        for tree in self.config.extra_trees:
+            yield from self.iter_under(tree)
 
 
 # -- checker registry --------------------------------------------------------

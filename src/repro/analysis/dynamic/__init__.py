@@ -1,0 +1,48 @@
+"""Dynamic concurrency analysis: the ``REPRO_TSAN`` sanitizer.
+
+Three pieces (see ROADMAP "Resolved decisions"):
+
+* :mod:`.runtime` — the instrumented synchronization layer the live code
+  routes through (``new_lock`` / ``wrap_pool`` / access notes /
+  object-store atomic hooks), zero-cost when disabled,
+* :mod:`.detector` — the vector-clock happens-before race detector,
+* :mod:`.scheduler` — the deterministic schedule explorer.
+
+Heavier consumers (the live scenario corpus, the static↔dynamic
+agreement report, the seeded-race fixtures) import the packages under
+test and are loaded lazily — import :mod:`repro.analysis.dynamic.scenarios`,
+``.agreement`` or ``.seeded`` explicitly.
+"""
+
+from .detector import Race, RaceDetector
+from .runtime import (
+    atomic_read,
+    atomic_update,
+    new_lock,
+    new_rlock,
+    note_read,
+    note_write,
+    rt,
+    schedule_point,
+    wrap_pool,
+)
+from .scheduler import Explorer, RunResult, Scenario, find_defect, verify_clean
+
+__all__ = [
+    "Explorer",
+    "Race",
+    "RaceDetector",
+    "RunResult",
+    "Scenario",
+    "atomic_read",
+    "atomic_update",
+    "find_defect",
+    "new_lock",
+    "new_rlock",
+    "note_read",
+    "note_write",
+    "rt",
+    "schedule_point",
+    "verify_clean",
+    "wrap_pool",
+]

@@ -1,0 +1,138 @@
+"""Static↔dynamic lockset agreement report.
+
+The static ``lock-discipline`` pass *infers* guards ("``Session._own_pool``
+is guarded by ``Session._cache_lock``"); the dynamic sanitizer *observes*
+locksets (the intersection of locks actually held across every traced
+access to the attribute).  This module joins the two over
+``src/repro/store``: every guard the static pass infers must be
+**confirmed** by the dynamic run —
+
+* ``confirmed`` — the attribute was exercised and the inferred lock was
+  held on every access,
+* ``refuted`` — the attribute was exercised but some access did not hold
+  the inferred lock: either the static inference or the runtime locking
+  is wrong, and the build fails,
+* ``unobserved`` — the workload never touched the attribute: the
+  cross-check is vacuous, which also fails the build (the workload must
+  keep pace with the instrumentation).
+
+Any data race detected during the workload fails the report too.  Run it
+via ``scripts/lint.py --dynamic``.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict
+
+import numpy as np
+
+from .runtime import rt
+
+# agreement scope: the transactional store, where both the static pass
+# and the instrumentation are densest
+_SCOPE = "src/repro/store"
+
+
+def _exercise_store() -> None:
+    """Drive every Session surface whose guard the static pass infers:
+    pool build (``_own_pool``), manifest/stat object cache
+    (``_obj_cache``), chunk cache + byte budget + fetch counter
+    (``_chunk_cache`` / ``_chunk_cache_nbytes`` / ``_fetch_count``),
+    ``cache_stats`` reads, and ``close`` — including two concurrent
+    readers so the locksets are observed under real contention."""
+    from repro.store import Repository
+
+    root = tempfile.mkdtemp(prefix="repro-tsan-agree-")
+    try:
+        repo = Repository.create(f"{root}/repo")
+        tx = repo.writable_session()
+        tx.create_array("x", shape=(8,), dtype="float32",
+                        chunks=(4,)).write_full(np.arange(8, dtype="float32"))
+        tx.commit("seed")
+
+        s = repo.readonly_session(read_workers=2)
+        try:
+            s.reader_pool()
+
+            def read() -> None:
+                np.testing.assert_array_equal(
+                    s.array("x").read(), np.arange(8, dtype="float32"))
+
+            threads = [threading.Thread(target=read, name=f"agree-r{i}")
+                       for i in range(2)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            s.array("x").read()     # warm-cache hit path
+            s.cache_stats()
+        finally:
+            s.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def agreement_report(repo_root: str = ".") -> Dict[str, Any]:
+    """Run the static inference and the dynamic workload; join them.
+
+    Returns ``{"scope", "guards": {name: {static_locks, status,
+    observed_lockset, accesses}}, "races_during_workload", "ok"}`` —
+    ``ok`` only when every static guard is confirmed and the workload
+    was race-free.
+    """
+    from repro.analysis.checkers.lock_discipline import inferred_guards
+    from repro.analysis.core import Project
+
+    static = {
+        key: info
+        for key, info in inferred_guards(Project(repo_root)).items()
+        if str(info["module"]).startswith(_SCOPE)
+    }
+
+    with rt.scoped() as scope:
+        _exercise_store()
+        det = scope.detector
+        observed = {
+            key: {
+                "lockset": sorted(o["lockset"] or ()),
+                "accesses": o["accesses"],
+                "writes": o["writes"],
+            }
+            for key, o in det.observations.items()
+        }
+        races = [r.to_doc() for r in det.races]
+
+    guards: Dict[str, Any] = {}
+    ok = not races
+    for key, info in sorted(static.items()):
+        obs = observed.get(key)
+        if obs is None or obs["accesses"] == 0:
+            status = "unobserved"
+        elif set(info["locks"]) <= set(obs["lockset"]):
+            status = "confirmed"
+        else:
+            status = "refuted"
+        if status != "confirmed":
+            ok = False
+        guards[key] = {
+            "static_locks": list(info["locks"]),
+            "status": status,
+            "observed_lockset": obs["lockset"] if obs else [],
+            "accesses": obs["accesses"] if obs else 0,
+        }
+    if not guards:
+        ok = False      # static pass inferring nothing is itself a bug
+
+    return {
+        "scope": _SCOPE,
+        "guards": guards,
+        "observed": observed,
+        "races_during_workload": races,
+        "ok": ok,
+    }
+
+
+__all__ = ["agreement_report"]

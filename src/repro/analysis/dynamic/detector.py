@@ -1,0 +1,292 @@
+"""Vector-clock happens-before race detection (FastTrack-style).
+
+The detector consumes the event stream the instrumented synchronization
+layer (:mod:`repro.analysis.dynamic.runtime`) emits — lock acquire and
+release, thread-pool fork/join, object-store atomic read/update, and
+lightweight shared-state access notes — and maintains per-thread vector
+clocks plus per-location access histories.  An access races with a prior
+access by another thread when neither happens-before the other, i.e. the
+prior access's clock exceeds the current thread's component for that
+thread.  Races are reported as *pairs* of short stacks with the locks
+each side held.
+
+Happens-before edges modeled:
+
+* **Lock release -> next acquire** of the same lock (and the same for the
+  cooperative locks the schedule explorer substitutes — serialization by
+  the explorer itself is deliberately *not* an edge, which is what lets a
+  fully serialized exploration still detect races).
+* **Pool submit -> task start** (fork) and **task end -> ``result()``**
+  (join), threaded through :class:`runtime.TracedPool`.  Tasks keep their
+  worker thread's clock, so two tasks run sequentially on one worker stay
+  program-ordered.
+* **Object-store put / CAS-success -> get / CAS-failure** per key: the
+  store's atomic primitives are release/acquire pairs (this is exactly
+  why the branch-ref CAS commit and the catalog document's
+  read-modify-CAS loop are race-free without locks).
+
+Everything in this module is plain data + one internal mutex; it never
+imports the packages it watches.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+
+# A vector clock is a sparse {tid: count} dict; missing entries are 0.
+VC = Dict[int, int]
+
+
+def vc_join(into: VC, other: Optional[VC]) -> None:
+    if not other:
+        return
+    for t, c in other.items():
+        if into.get(t, 0) < c:
+            into[t] = c
+
+
+def vc_copy(vc: VC) -> VC:
+    return dict(vc)
+
+
+@dataclass
+class _Access:
+    """One remembered access per (location, thread, kind)."""
+
+    clock: int              # the accessor's own component at access time
+    vc: VC                  # full clock snapshot (for HB comparison)
+    stack: Tuple[str, ...]
+    held: FrozenSet[str]
+    thread_name: str
+
+
+@dataclass
+class _Location:
+    writes: Dict[int, _Access] = field(default_factory=dict)
+    reads: Dict[int, _Access] = field(default_factory=dict)
+
+
+@dataclass
+class Race:
+    """One happens-before violation, reported as a pair of access sites."""
+
+    location: str
+    kind: str               # "write-write" | "read-write" | "write-read"
+    first_thread: str
+    first_stack: Tuple[str, ...]
+    first_held: Tuple[str, ...]
+    second_thread: str
+    second_stack: Tuple[str, ...]
+    second_held: Tuple[str, ...]
+
+    def key(self) -> Tuple:
+        """Dedup key: one report per (location, site pair, kind)."""
+        a = self.first_stack[0] if self.first_stack else ""
+        b = self.second_stack[0] if self.second_stack else ""
+        return (self.location.split("#", 1)[0], self.kind, a, b)
+
+    def render(self) -> str:
+        def side(name, stack, held):
+            locks = ", ".join(held) if held else "no locks held"
+            frames = "\n      ".join(stack) if stack else "<no frames>"
+            return f"  {name} ({locks}):\n      {frames}"
+
+        return (
+            f"RACE [{self.kind}] on {self.location}\n"
+            + side(self.first_thread, self.first_stack, self.first_held)
+            + "\n"
+            + side(self.second_thread, self.second_stack, self.second_held)
+        )
+
+    def to_doc(self) -> Dict[str, Any]:
+        return {
+            "location": self.location,
+            "kind": self.kind,
+            "first": {"thread": self.first_thread,
+                      "stack": list(self.first_stack),
+                      "held": list(self.first_held)},
+            "second": {"thread": self.second_thread,
+                       "stack": list(self.second_stack),
+                       "held": list(self.second_held)},
+        }
+
+
+@dataclass
+class _ThreadState:
+    tid: int
+    name: str
+    vc: VC
+    held: List[str] = field(default_factory=list)
+
+
+class RaceDetector:
+    """Global event sink.  Thread-safe behind one internal mutex (the
+    mutex orders detector bookkeeping only — it contributes no
+    happens-before edges to the program under test)."""
+
+    def __init__(self) -> None:
+        self._mu = threading.Lock()
+        self._threads: Dict[int, _ThreadState] = {}
+        self._next_tid = 0
+        self._lock_clocks: Dict[str, VC] = {}
+        self._atomic_clocks: Dict[str, VC] = {}
+        self._locations: Dict[str, _Location] = {}
+        self.races: List[Race] = []
+        self._race_keys: set = set()
+        # owner key (e.g. "Session._own_pool") -> observed lockset info,
+        # consumed by the static<->dynamic agreement report
+        self.observations: Dict[str, Dict[str, Any]] = {}
+
+    # -- thread registry -------------------------------------------------
+    def _state(self) -> _ThreadState:
+        ident = threading.get_ident()
+        st = self._threads.get(ident)
+        if st is None:
+            tid = self._next_tid
+            self._next_tid += 1
+            st = _ThreadState(tid=tid, name=threading.current_thread().name,
+                              vc={tid: 1})
+            self._threads[ident] = st
+        return st
+
+    # -- lock edges ------------------------------------------------------
+    def on_acquire(self, lock_name: str) -> None:
+        with self._mu:
+            st = self._state()
+            st.held.append(lock_name)
+            vc_join(st.vc, self._lock_clocks.get(lock_name))
+
+    def on_release(self, lock_name: str) -> None:
+        with self._mu:
+            st = self._state()
+            if lock_name in st.held:
+                # remove the most recent acquisition of this name
+                for i in range(len(st.held) - 1, -1, -1):
+                    if st.held[i] == lock_name:
+                        del st.held[i]
+                        break
+            lc = self._lock_clocks.setdefault(lock_name, {})
+            vc_join(lc, st.vc)
+            st.vc[st.tid] = st.vc.get(st.tid, 0) + 1
+
+    # -- fork / join (thread pools) -------------------------------------
+    def fork(self) -> VC:
+        """Snapshot the current thread's clock (then advance it) — the
+        packet a submitted task joins at start, or a ``result()`` caller
+        joins after completion."""
+        with self._mu:
+            st = self._state()
+            packet = vc_copy(st.vc)
+            st.vc[st.tid] = st.vc.get(st.tid, 0) + 1
+            return packet
+
+    def join(self, packet: Optional[VC]) -> None:
+        with self._mu:
+            st = self._state()
+            vc_join(st.vc, packet)
+
+    # -- object-store atomics -------------------------------------------
+    def atomic_release(self, key: str) -> None:
+        """A successful put / compare-and-swap publishes the writer's
+        clock on the key."""
+        with self._mu:
+            st = self._state()
+            kc = self._atomic_clocks.setdefault(key, {})
+            vc_join(kc, st.vc)
+            st.vc[st.tid] = st.vc.get(st.tid, 0) + 1
+
+    def atomic_acquire(self, key: str) -> None:
+        """A get (or failed CAS, which observed the current value)
+        inherits the publisher's clock."""
+        with self._mu:
+            st = self._state()
+            vc_join(st.vc, self._atomic_clocks.get(key))
+
+    # -- shared-state access notes --------------------------------------
+    def on_access(self, location: str, *, write: bool,
+                  stack: Tuple[str, ...], owner: str = "") -> None:
+        with self._mu:
+            st = self._state()
+            held = frozenset(st.held)
+            loc = self._locations.setdefault(location, _Location())
+            me = _Access(clock=st.vc.get(st.tid, 0), vc=vc_copy(st.vc),
+                         stack=stack, held=held,
+                         thread_name=st.name)
+
+            def conflicts(prior: _Access, u: int) -> bool:
+                return u != st.tid and prior.clock > st.vc.get(u, 0)
+
+            if write:
+                for u, prior in loc.writes.items():
+                    if conflicts(prior, u):
+                        self._report(location, "write-write", prior, me)
+                for u, prior in loc.reads.items():
+                    if conflicts(prior, u):
+                        self._report(location, "read-write", prior, me)
+                loc.writes[st.tid] = me
+                # a write supersedes this thread's read entry
+                loc.reads.pop(st.tid, None)
+            else:
+                for u, prior in loc.writes.items():
+                    if conflicts(prior, u):
+                        self._report(location, "write-read", prior, me)
+                loc.reads[st.tid] = me
+
+            if owner:
+                obs = self.observations.setdefault(owner, {
+                    "lockset": None, "accesses": 0, "writes": 0,
+                    "unlocked_witness": None,
+                })
+                obs["accesses"] += 1
+                if write:
+                    obs["writes"] += 1
+                if obs["lockset"] is None:
+                    obs["lockset"] = set(held)
+                else:
+                    obs["lockset"] &= held
+                if not held and obs["unlocked_witness"] is None:
+                    obs["unlocked_witness"] = {
+                        "thread": st.name, "stack": list(stack),
+                        "write": write,
+                    }
+
+    def _report(self, location: str, kind: str,
+                first: _Access, second: _Access) -> None:
+        race = Race(
+            location=location, kind=kind,
+            first_thread=first.thread_name, first_stack=first.stack,
+            first_held=tuple(sorted(first.held)),
+            second_thread=second.thread_name, second_stack=second.stack,
+            second_held=tuple(sorted(second.held)),
+        )
+        k = race.key()
+        if k not in self._race_keys:
+            self._race_keys.add(k)
+            self.races.append(race)
+
+    # -- reporting -------------------------------------------------------
+    def held_locks(self) -> Tuple[str, ...]:
+        with self._mu:
+            return tuple(self._state().held)
+
+    def report_doc(self) -> Dict[str, Any]:
+        with self._mu:
+            return {
+                "races": [r.to_doc() for r in self.races],
+                "counts": {"races": len(self.races),
+                           "locations": len(self._locations),
+                           "threads": len(self._threads)},
+                "observed_locksets": {
+                    owner: {
+                        "lockset": sorted(o["lockset"] or ()),
+                        "accesses": o["accesses"],
+                        "writes": o["writes"],
+                    }
+                    for owner, o in sorted(self.observations.items())
+                },
+            }
+
+
+__all__ = ["Race", "RaceDetector", "VC", "vc_copy", "vc_join"]

@@ -1,0 +1,512 @@
+"""Deterministic schedule exploration (cooperative scheduler).
+
+The :class:`Explorer` runs a small concurrent *scenario* — a setup
+function, N thread bodies, an invariant check — under a cooperative
+scheduler that serializes the managed threads and takes a scheduling
+decision at **every instrumentation point** (lock acquire/release,
+shared-state access note, object-store atomic op, pool task boundary).
+Because all interleaving happens at these points, a schedule is just the
+sequence of thread tokens chosen — a comma-joined, replayable string like
+``"t0,t1,t1,t0"``.
+
+Three exploration modes, all deterministic:
+
+* **replay**: force a recorded schedule string (regression tests pin the
+  exact interleaving that exposed a bug),
+* **seeded-random**: a ``random.Random(seed)`` picks among the runnable
+  threads at each step,
+* **exhaustive at small depth**: depth-first enumeration of alternative
+  choices over the first ``depth`` decisions (state-space exploration in
+  the stateless-model-checking style), capped by ``max_schedules``.
+
+A scenario *fails* when the vector-clock detector reports a race, an
+invariant check raises, a thread dies on an unexpected exception, or the
+managed threads deadlock (every live thread cooperatively blocked).
+Serialization itself contributes no happens-before edges, so a race
+between two threads is detected on *every* schedule in which both touch
+the location — which is what makes re-finding a seeded race from a fixed
+schedule deterministic.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
+
+from .runtime import rt
+
+# thread states
+_READY = "ready"
+_RUNNING = "running"
+_LOCKWAIT = "lockwait"
+_EXTERNAL = "external"
+_DONE = "done"
+
+
+class ScheduleAbort(BaseException):
+    """Raised inside managed threads to unwind on deadlock/stall/abort.
+
+    Derives from ``BaseException`` so scenario code's ``except Exception``
+    blocks cannot swallow the unwind.
+    """
+
+
+@dataclass
+class _Managed:
+    token: str
+    ident: int
+    state: str = _READY
+    waiting: Any = None          # TracedLock this thread is blocked on
+    error: Optional[BaseException] = None
+
+
+@dataclass
+class Scenario:
+    """One concurrency scenario: build state, run bodies, check invariants."""
+
+    name: str
+    setup: Callable[[], Any]
+    threads: Sequence[Tuple[str, Callable[[Any], None]]]
+    check: Optional[Callable[[Any], None]] = None
+    teardown: Optional[Callable[[Any], None]] = None
+
+
+@dataclass
+class RunResult:
+    scenario: str
+    schedule: str                              # replayable token string
+    choices: List[Tuple[str, Tuple[str, ...]]] = field(default_factory=list)
+    races: List[Any] = field(default_factory=list)
+    violations: List[str] = field(default_factory=list)
+    errors: List[str] = field(default_factory=list)
+    deadlock: bool = False
+
+    @property
+    def defects(self) -> List[str]:
+        out = [f"race: {r.location} [{r.kind}]" for r in self.races]
+        out += [f"invariant: {v}" for v in self.violations]
+        out += [f"error: {e}" for e in self.errors]
+        if self.deadlock:
+            out.append("deadlock")
+        return out
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.defects)
+
+    def render(self) -> str:
+        status = "FAIL" if self.failed else "ok"
+        lines = [f"[{status}] {self.scenario}  schedule={self.schedule!r}"]
+        lines += [f"  - {d}" for d in self.defects]
+        for r in self.races:
+            lines += ["    " + ln for ln in r.render().splitlines()]
+        return "\n".join(lines)
+
+
+class _Scheduler:
+    """Token-granting cooperative scheduler (one RUNNING thread at a
+    time).  All state behind one condition variable; decisions happen in
+    whichever thread releases control."""
+
+    def __init__(self, *, schedule: Optional[Sequence[str]] = None,
+                 seed: Optional[int] = None, max_steps: int = 20000,
+                 stall_timeout: float = 30.0) -> None:
+        self._cv = threading.Condition()
+        self._by_ident: Dict[int, _Managed] = {}
+        self._order: List[_Managed] = []
+        self._current: Optional[_Managed] = None
+        self._replay = list(schedule) if schedule else []
+        self._rng = random.Random(seed) if seed is not None else None
+        self._steps = 0
+        self.max_steps = max_steps
+        self.stall_timeout = stall_timeout
+        self.trace: List[str] = []
+        self.choices: List[Tuple[str, Tuple[str, ...]]] = []
+        self.deadlocked = False
+        self.aborted = False
+        self.abort_reason = ""
+        self._workers = 0
+
+    # -- registration ----------------------------------------------------
+    def register(self, token: str, ident: int) -> _Managed:
+        with self._cv:
+            st = _Managed(token=token, ident=ident)
+            self._by_ident[ident] = st
+            self._order.append(st)
+            return st
+
+    def register_pending(self, token: str) -> _Managed:
+        """Reserve a slot for a scenario thread that has not started yet;
+        the thread binds its real ident first thing on entry."""
+        with self._cv:
+            st = _Managed(token=token, ident=0)
+            self._order.append(st)
+            return st
+
+    def manages_current(self) -> bool:
+        return threading.get_ident() in self._by_ident
+
+    def _me(self) -> Optional[_Managed]:
+        return self._by_ident.get(threading.get_ident())
+
+    # -- core loop (all under self._cv) ----------------------------------
+    def _choose(self, ready: List[_Managed]) -> _Managed:
+        if len(self._trace_pending()) > 0:
+            tok = self._replay[len(self.trace)]
+            for st in ready:
+                if st.token == tok:
+                    return st
+        if self._rng is not None:
+            return ready[self._rng.randrange(len(ready))]
+        return ready[0]
+
+    def _trace_pending(self) -> List[str]:
+        return self._replay[len(self.trace):]
+
+    def _grant_next(self) -> None:
+        if self._current is not None or self.aborted:
+            return
+        ready = [st for st in self._order if st.state == _READY]
+        if not ready:
+            live = [st for st in self._order if st.state != _DONE]
+            if not live:
+                self._cv.notify_all()
+                return
+            if any(st.state in (_EXTERNAL, _RUNNING) for st in live):
+                return  # someone will come back and re-dispatch
+            # every live thread is cooperatively blocked on a lock
+            self.deadlocked = True
+            self._abort("deadlock: " + ", ".join(
+                f"{st.token} waiting on "
+                f"{getattr(st.waiting, 'name', '?')}" for st in live
+            ))
+            return
+        chosen = self._choose(ready)
+        self._steps += 1
+        if self._steps > self.max_steps:
+            self._abort(f"step budget exceeded ({self.max_steps})")
+            return
+        self.trace.append(chosen.token)
+        self.choices.append(
+            (chosen.token, tuple(st.token for st in ready))
+        )
+        chosen.state = _RUNNING
+        self._current = chosen
+        self._cv.notify_all()
+
+    def _abort(self, reason: str) -> None:
+        self.aborted = True
+        self.abort_reason = reason
+        self._cv.notify_all()
+
+    def _wait_running(self, st: _Managed) -> None:
+        deadline = time.monotonic() + self.stall_timeout
+        while st.state != _RUNNING:
+            if self.aborted:
+                raise ScheduleAbort(self.abort_reason)
+            if st.state == _DONE:  # abort path marked us done
+                raise ScheduleAbort("scheduler shut down")
+            if not self._cv.wait(timeout=0.5):
+                if time.monotonic() > deadline:
+                    self._abort(f"stall: {st.token} never granted")
+                    raise ScheduleAbort(self.abort_reason)
+
+    def _pause(self, st: _Managed) -> None:
+        """Yield control: become READY, dispatch someone, wait for grant."""
+        st.state = _READY
+        if self._current is st:
+            self._current = None
+        self._grant_next()
+        self._wait_running(st)
+
+    # -- instrumentation entry points ------------------------------------
+    def yield_point(self, desc: str = "") -> None:
+        st = self._me()
+        if st is None:
+            return
+        if self.aborted:
+            raise ScheduleAbort(self.abort_reason)
+        with self._cv:
+            self._pause(st)
+
+    def coop_acquire(self, lock, blocking: bool = True) -> bool:
+        st = self._me()
+        if st is None:
+            # unmanaged thread while exploring: use the real primitive
+            ok = lock._lock.acquire(blocking)
+            if ok and rt.enabled:
+                rt.detector.on_acquire(lock.name)
+            return ok
+        with self._cv:
+            self._pause(st)  # decision point before taking the lock
+            while True:
+                if lock._coop_owner is None:
+                    lock._coop_owner = st.token
+                    lock._coop_depth = 1
+                    break
+                if lock._coop_owner == st.token and lock._reentrant:
+                    lock._coop_depth += 1
+                    break
+                if not blocking:
+                    return False
+                st.waiting = lock
+                st.state = _LOCKWAIT
+                if self._current is st:
+                    self._current = None
+                self._grant_next()
+                self._wait_running(st)
+                st.waiting = None
+        if lock._coop_depth == 1:
+            rt.detector.on_acquire(lock.name)
+        return True
+
+    def coop_release(self, lock) -> None:
+        st = self._me()
+        if st is None:
+            if rt.enabled:
+                rt.detector.on_release(lock.name)
+            lock._lock.release()
+            return
+        with self._cv:
+            lock._coop_depth -= 1
+            if lock._coop_depth > 0:
+                return
+            lock._coop_owner = None
+            rt.detector.on_release(lock.name)
+            for t in self._order:
+                if t.state == _LOCKWAIT and t.waiting is lock:
+                    t.state = _READY
+            self._pause(st)  # release is a decision point too
+
+    @contextmanager
+    def external(self, desc: str = ""):
+        """The current managed thread is about to block on something the
+        scheduler cannot arbitrate (a real ``Future.result``, a pool
+        shutdown): hand control away, rejoin on return."""
+        st = self._me()
+        if st is None:
+            yield
+            return
+        with self._cv:
+            st.state = _EXTERNAL
+            if self._current is st:
+                self._current = None
+            self._grant_next()
+        try:
+            yield
+        finally:
+            with self._cv:
+                st.state = _READY
+                self._grant_next()
+                self._wait_running(st)
+
+    # -- pool-task boundaries --------------------------------------------
+    def task_enter(self) -> bool:
+        """Called at the start of a traced pool task.  Registers the
+        worker thread (first contact) and waits for a grant.  Returns
+        True when this thread is now scheduler-managed."""
+        st = self._me()
+        if st is None:
+            with self._cv:
+                tok = f"w{self._workers}"
+                self._workers += 1
+            st = self.register(tok, threading.get_ident())
+        with self._cv:
+            st.state = _READY
+            self._grant_next()
+            self._wait_running(st)
+        return True
+
+    def task_leave(self) -> None:
+        st = self._me()
+        if st is None:
+            return
+        with self._cv:
+            st.state = _EXTERNAL  # parked in the pool between tasks
+            if self._current is st:
+                self._current = None
+            self._grant_next()
+
+    # -- scenario-thread lifecycle ---------------------------------------
+    def thread_start(self, st: _Managed) -> None:
+        with self._cv:
+            self._wait_running(st)
+
+    def thread_done(self, st: _Managed) -> None:
+        with self._cv:
+            st.state = _DONE
+            if self._current is st:
+                self._current = None
+            self._grant_next()
+            self._cv.notify_all()
+
+    def kickoff(self) -> None:
+        with self._cv:
+            self._grant_next()
+
+
+class Explorer:
+    """Run scenarios under the cooperative scheduler."""
+
+    def __init__(self, *, max_steps: int = 20000,
+                 stall_timeout: float = 30.0,
+                 join_timeout: float = 60.0) -> None:
+        self.max_steps = max_steps
+        self.stall_timeout = stall_timeout
+        self.join_timeout = join_timeout
+
+    def run(self, scenario: Scenario, *,
+            schedule: Optional[Sequence[str]] = None,
+            seed: Optional[int] = None) -> RunResult:
+        tokens = (schedule.split(",") if isinstance(schedule, str)
+                  else list(schedule) if schedule else None)
+        with rt.scoped() as scope:
+            ctx = scenario.setup()
+            sch = _Scheduler(schedule=tokens, seed=seed,
+                             max_steps=self.max_steps,
+                             stall_timeout=self.stall_timeout)
+            errors: List[str] = []
+            threads: List[threading.Thread] = []
+            states: List[_Managed] = []
+
+            def body(st: _Managed, fn: Callable[[Any], None]) -> None:
+                try:
+                    sch.thread_start(st)
+                    fn(ctx)
+                except ScheduleAbort:
+                    pass
+                except BaseException as exc:  # reported, never swallowed
+                    st.error = exc
+                finally:
+                    sch.thread_done(st)
+
+            for i, (name, fn) in enumerate(scenario.threads):
+                st = sch.register_pending(f"t{i}")
+                th = threading.Thread(
+                    target=self._bound_body, name=f"t{i}:{name}",
+                    args=(sch, st, body, fn), daemon=True,
+                )
+                states.append(st)
+                threads.append(th)
+
+            rt.scheduler = sch
+            try:
+                for th in threads:
+                    th.start()
+                # wait until every thread has adopted its ident, then kick
+                for st in states:
+                    while st.ident == 0 and not sch.aborted:
+                        time.sleep(0.001)
+                sch.kickoff()
+                for th in threads:
+                    th.join(self.join_timeout)
+                    if th.is_alive():
+                        with sch._cv:
+                            sch._abort("join timeout")
+                        errors.append(f"thread {th.name} did not finish")
+            finally:
+                rt.scheduler = None
+
+            for st in states:
+                if st.error is not None:
+                    errors.append(f"{st.token}: {st.error!r}")
+            if sch.aborted and not sch.deadlocked:
+                errors.append(f"aborted: {sch.abort_reason}")
+
+            violations: List[str] = []
+            if scenario.check is not None:
+                try:
+                    scenario.check(ctx)
+                except AssertionError as exc:
+                    violations.append(str(exc) or "invariant check failed")
+            if scenario.teardown is not None:
+                scenario.teardown(ctx)
+
+            return RunResult(
+                scenario=scenario.name,
+                schedule=",".join(sch.trace),
+                choices=list(sch.choices),
+                races=list(scope.detector.races),
+                violations=violations,
+                errors=errors,
+                deadlock=sch.deadlocked,
+            )
+
+    @staticmethod
+    def _bound_body(sch: _Scheduler, st: _Managed, body, fn) -> None:
+        with sch._cv:
+            st.ident = threading.get_ident()
+            sch._by_ident[st.ident] = st
+        body(st, fn)
+
+
+def find_defect(
+    make_scenario: Callable[[], Scenario],
+    *,
+    depth: int = 10,
+    max_schedules: int = 128,
+    seeds: Sequence[int] = (0, 1, 2, 3),
+    explorer: Optional[Explorer] = None,
+) -> Optional[RunResult]:
+    """Deterministic defect search: exhaustive DFS over the first
+    ``depth`` scheduling decisions (bounded by ``max_schedules``), then
+    seeded-random schedules.  Returns the first failing
+    :class:`RunResult` (its ``schedule`` replays the bug) or None."""
+    ex = explorer or Explorer()
+    tried = {()}
+    stack: List[Tuple[str, ...]] = [()]
+    runs = 0
+    while stack and runs < max_schedules:
+        prefix = stack.pop()
+        result = ex.run(make_scenario(), schedule=list(prefix))
+        runs += 1
+        if result.failed:
+            return result
+        for i in range(len(prefix), min(len(result.choices), depth)):
+            chosen, ready = result.choices[i]
+            base = tuple(tok for tok, _ in result.choices[:i])
+            for alt in ready:
+                if alt == chosen:
+                    continue
+                cand = base + (alt,)
+                if cand not in tried:
+                    tried.add(cand)
+                    stack.append(cand)
+    for seed in seeds:
+        result = ex.run(make_scenario(), seed=seed)
+        if result.failed:
+            return result
+    return None
+
+
+def verify_clean(
+    make_scenario: Callable[[], Scenario],
+    *,
+    depth: int = 8,
+    max_schedules: int = 48,
+    seeds: Sequence[int] = (0, 1),
+    explorer: Optional[Explorer] = None,
+) -> Optional[RunResult]:
+    """Like :func:`find_defect` with a smaller budget — the green-path
+    sweep ``scripts/lint.py --dynamic`` runs over the live scenarios."""
+    return find_defect(make_scenario, depth=depth,
+                       max_schedules=max_schedules, seeds=seeds,
+                       explorer=explorer)
+
+
+__all__ = [
+    "Explorer", "RunResult", "Scenario", "ScheduleAbort", "find_defect",
+    "verify_clean",
+]

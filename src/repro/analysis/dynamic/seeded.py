@@ -1,0 +1,367 @@
+"""Seeded-race corpus: revert-style miniatures of the three PR 6 bugs.
+
+Each case pairs a **buggy** scenario — the pre-fix shape of a real bug
+the static ``lock-discipline`` pass caught in PR 6 — with its **fixed**
+counterpart, structured exactly like the live code:
+
+* ``session-close-pool-leak`` — ``Session.close()`` doing an *unlocked*
+  check-then-clear of the reader-pool reference while a concurrent first
+  reader builds the pool under ``_cache_lock`` (pre-fix: a just-built
+  pool could be leaked un-shutdown, and the unsynchronized access is a
+  data race the detector reports directly),
+* ``catalog-register-lost-update`` — ``Catalog.register_repository``
+  building its entry *before* the read-modify-CAS retry loop and writing
+  the stale captured dict on retry (pre-fix: a concurrent registration
+  landing mid-window is clobbered — HB-clean thanks to the CAS edges, so
+  this one is found as an *invariant violation*, not a race),
+* ``compact-retry-tx-leak`` — ``compact()``'s conflict-retry ``continue``
+  skipping the attempt's transaction release (pre-fix: a concurrent
+  append forcing a CAS conflict leaks the transaction's resources).
+
+The schedule explorer must find every buggy case deterministically and
+pass every fixed one; ``scripts/lint.py --dynamic`` runs this as a
+self-check, and the CI red path seeds a buggy case via
+``REPRO_TSAN_SEED_RACE=1``.  The deliberate violations below carry
+same-line ``# repro: ignore[lock-discipline]`` suppressions so the
+static pass reports them as *suppressed*, keeping the committed baseline
+empty.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from .runtime import new_lock, note_read, note_write
+from .scheduler import RunResult, Scenario, find_defect
+
+
+class _Conflict(Exception):
+    """Stand-in for ``repro.store.ConflictError`` (kept local so this
+    module imports without the store package)."""
+
+
+# -- case 1: Session.close() vs first-read pool build ------------------------
+
+class _FakePool:
+    def __init__(self) -> None:
+        self.shut = False
+
+    def shutdown(self) -> None:
+        self.shut = True
+
+
+class _MiniSession:
+    """The reader-pool lifecycle of ``repro.store.icechunk.Session``."""
+
+    def __init__(self) -> None:
+        self._cache_lock = new_lock("_MiniSession._cache_lock")
+        self._own_pool: Optional[_FakePool] = None
+        self.pools: List[_FakePool] = []
+
+    def reader_pool(self) -> _FakePool:
+        with self._cache_lock:
+            note_read(self, "_own_pool", owner="_MiniSession")
+            if self._own_pool is None:
+                pool = _FakePool()
+                self.pools.append(pool)
+                note_write(self, "_own_pool", owner="_MiniSession")
+                self._own_pool = pool
+            return self._own_pool
+
+    def close_buggy(self) -> None:
+        # pre-fix shape: unlocked check-then-clear of the pool reference
+        note_read(self, "_own_pool", owner="_MiniSession")
+        pool = self._own_pool  # repro: ignore[lock-discipline]
+        if pool is not None:
+            note_write(self, "_own_pool", owner="_MiniSession")
+            self._own_pool = None  # repro: ignore[lock-discipline]
+            pool.shutdown()
+
+    def close_fixed(self) -> None:
+        # PR 6 fix: swap the reference under the lock, shut down outside
+        with self._cache_lock:
+            note_read(self, "_own_pool", owner="_MiniSession")
+            pool = self._own_pool
+            note_write(self, "_own_pool", owner="_MiniSession")
+            self._own_pool = None
+        if pool is not None:
+            pool.shutdown()
+
+
+def _session_scenario(buggy: bool) -> Scenario:
+    # The defect signal here is the data race itself: the unlocked
+    # check-then-clear in close_buggy conflicts with the locked build in
+    # reader_pool under *every* interleaving (there is no happens-before
+    # edge between them), which is how a leaked-pool/use-after-shutdown
+    # window exists at all.  The fixed variant orders both through
+    # _cache_lock, so no schedule produces a race.
+    def setup() -> _MiniSession:
+        return _MiniSession()
+
+    def reader(s: _MiniSession) -> None:
+        s.reader_pool()
+
+    def closer(s: _MiniSession) -> None:
+        (s.close_buggy if buggy else s.close_fixed)()
+
+    return Scenario(
+        name="session-close-pool-leak" + ("" if buggy else "-fixed"),
+        setup=setup,
+        threads=[("reader", reader), ("closer", closer)],
+    )
+
+
+# -- case 2: Catalog.register_repository CAS lost update ---------------------
+
+def _store_setup():
+    """A real ``ObjectStore`` on a throwaway directory (its put/get/CAS
+    carry the atomic release/acquire edges and explorer yield points)."""
+    from repro.store.object_store import ObjectStore
+
+    root = tempfile.mkdtemp(prefix="repro-tsan-")
+    return ObjectStore(root), root
+
+
+class _MiniCatalog:
+    """The read-modify-CAS document loop of ``repro.catalog.Catalog``."""
+
+    KEY = "catalog.json"
+
+    def __init__(self, store) -> None:
+        import json
+
+        self.store = store
+        self.json = json
+        self.store.put(self.KEY, b"{}")
+
+    def _load(self) -> dict:
+        raw = self.store.get(self.KEY)
+        return self.json.loads(raw.decode("utf-8"))
+
+    def _update(self, mutate) -> None:
+        for _ in range(32):
+            raw = self.store.get(self.KEY)
+            doc = self.json.loads(raw.decode("utf-8"))
+            mutate(doc)
+            new = self.json.dumps(doc, sort_keys=True).encode("utf-8")
+            if self.store.compare_and_swap(self.KEY, raw, new):
+                return
+        raise RuntimeError("catalog CAS retry budget exhausted")
+
+    def register_buggy(self, rid: str, moment: str) -> None:
+        # pre-fix shape: the entry is built from a snapshot taken
+        # *before* the retry loop, so a retry writes stale state
+        doc0 = self._load()
+        entry = dict(doc0.get(rid, {}))
+        entry[moment] = True
+
+        def mutate(doc: dict) -> None:
+            doc[rid] = entry  # repro: ignore[lock-discipline]
+
+        self._update(mutate)
+
+    def register_fixed(self, rid: str, moment: str) -> None:
+        # PR 6 fix: rebuild the entry inside the closure from the doc
+        # the CAS attempt actually read
+        def mutate(doc: dict) -> None:
+            entry = dict(doc.get(rid, {}))
+            entry[moment] = True
+            doc[rid] = entry
+
+        self._update(mutate)
+
+
+def _catalog_scenario(buggy: bool) -> Scenario:
+    def setup():
+        store, root = _store_setup()
+        return {"catalog": _MiniCatalog(store), "root": root}
+
+    def make_writer(moment: str):
+        def writer(ctx) -> None:
+            cat = ctx["catalog"]
+            (cat.register_buggy if buggy else cat.register_fixed)(
+                "site-a", moment
+            )
+
+        return writer
+
+    def check(ctx) -> None:
+        doc = ctx["catalog"]._load()
+        entry = doc.get("site-a", {})
+        assert "DBZH" in entry and "VRADH" in entry, (
+            f"lost update: expected both moments registered, got "
+            f"{sorted(entry)}"
+        )
+
+    def teardown(ctx) -> None:
+        shutil.rmtree(ctx["root"], ignore_errors=True)
+
+    return Scenario(
+        name="catalog-register-lost-update" + ("" if buggy else "-fixed"),
+        setup=setup,
+        threads=[("reg-dbzh", make_writer("DBZH")),
+                 ("reg-vradh", make_writer("VRADH"))],
+        check=check,
+        teardown=teardown,
+    )
+
+
+# -- case 3: compact() conflict-retry transaction leak -----------------------
+
+class _MiniTx:
+    def __init__(self, log: List["_MiniTx"]) -> None:
+        self.closed = False
+        log.append(self)
+
+    def close(self) -> None:
+        self.closed = True
+
+
+class _MiniRepo:
+    """The branch-ref CAS commit surface ``compact()`` runs against."""
+
+    REF = "refs/main"
+
+    def __init__(self, store) -> None:
+        self.store = store
+        self.txs: List[_MiniTx] = []
+        self.store.put(self.REF, b"snap-0")
+
+    def head(self) -> bytes:
+        return self.store.get(self.REF)
+
+    def commit(self, base: bytes, new: bytes) -> None:
+        if not self.store.compare_and_swap(self.REF, base, new):
+            raise _Conflict(f"ref moved from {base!r}")
+
+
+def _compact_buggy(repo: _MiniRepo) -> None:
+    for attempt in range(4):
+        base = repo.head()  # replan on top of the current winner
+        tx = _MiniTx(repo.txs)
+        try:
+            repo.commit(base, b"compacted-" + base)
+            tx.close()
+            return
+        except _Conflict:
+            # pre-fix shape: retry without releasing this attempt's tx
+            continue
+    raise RuntimeError("compaction retries exhausted")
+
+
+def _compact_fixed(repo: _MiniRepo) -> None:
+    for attempt in range(4):
+        base = repo.head()
+        tx = _MiniTx(repo.txs)
+        try:
+            repo.commit(base, b"compacted-" + base)
+            return
+        except _Conflict:
+            continue
+        finally:
+            tx.close()  # PR 6 fix: every attempt releases, conflict or not
+    raise RuntimeError("compaction retries exhausted")
+
+
+def _compact_scenario(buggy: bool) -> Scenario:
+    def setup():
+        store, root = _store_setup()
+        return {"repo": _MiniRepo(store), "root": root}
+
+    def compactor(ctx) -> None:
+        (_compact_buggy if buggy else _compact_fixed)(ctx["repo"])
+
+    def appender(ctx) -> None:
+        repo = ctx["repo"]
+        base = repo.head()
+        # an append landing mid-compaction forces the CAS conflict
+        repo.store.compare_and_swap(repo.REF, base, b"append-" + base)
+
+    def check(ctx) -> None:
+        repo = ctx["repo"]
+        leaked = [t for t in repo.txs if not t.closed]
+        assert not leaked, (
+            f"{len(leaked)} compaction transaction(s) leaked on the "
+            f"conflict-retry path"
+        )
+
+    def teardown(ctx) -> None:
+        shutil.rmtree(ctx["root"], ignore_errors=True)
+
+    return Scenario(
+        name="compact-retry-tx-leak" + ("" if buggy else "-fixed"),
+        setup=setup,
+        threads=[("compactor", compactor), ("appender", appender)],
+        check=check,
+        teardown=teardown,
+    )
+
+
+# -- registry ---------------------------------------------------------------
+
+@dataclass
+class SeededCase:
+    name: str
+    description: str
+    buggy: Callable[[], Scenario]
+    fixed: Callable[[], Scenario]
+    depth: int = 12
+    max_schedules: int = 192
+
+
+CASES: Dict[str, SeededCase] = {
+    c.name: c
+    for c in [
+        SeededCase(
+            name="session-close-pool-leak",
+            description="Session.close() unlocked check-then-clear vs "
+                        "first-read pool build (PR 6 fix #1)",
+            buggy=lambda: _session_scenario(buggy=True),
+            fixed=lambda: _session_scenario(buggy=False),
+        ),
+        SeededCase(
+            name="catalog-register-lost-update",
+            description="Catalog.register_repository entry captured "
+                        "before the CAS retry loop (PR 6 fix #2)",
+            buggy=lambda: _catalog_scenario(buggy=True),
+            fixed=lambda: _catalog_scenario(buggy=False),
+        ),
+        SeededCase(
+            name="compact-retry-tx-leak",
+            description="compact() conflict-retry continue skipping the "
+                        "transaction release (PR 6 fix #3)",
+            buggy=lambda: _compact_scenario(buggy=True),
+            fixed=lambda: _compact_scenario(buggy=False),
+        ),
+    ]
+}
+
+
+def run_self_check() -> Dict[str, Dict[str, object]]:
+    """Explore every case both ways.  A healthy sanitizer finds each
+    buggy variant (with a replayable schedule) and passes each fixed
+    one; anything else is reported as a self-check failure."""
+    out: Dict[str, Dict[str, object]] = {}
+    for name, case in CASES.items():
+        found: Optional[RunResult] = find_defect(
+            case.buggy, depth=case.depth, max_schedules=case.max_schedules,
+        )
+        clean: Optional[RunResult] = find_defect(
+            case.fixed, depth=case.depth, max_schedules=case.max_schedules,
+        )
+        out[name] = {
+            "description": case.description,
+            "buggy_found": found is not None,
+            "buggy_schedule": found.schedule if found else None,
+            "buggy_defects": found.defects if found else [],
+            "fixed_clean": clean is None,
+            "fixed_defects": clean.defects if clean else [],
+            "ok": found is not None and clean is None,
+        }
+    return out
+
+
+__all__ = ["CASES", "SeededCase", "run_self_check"]

@@ -20,6 +20,8 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.dynamic.runtime import wrap_pool as _tsan_wrap_pool
+
 from ..radar import (
     CartesianGrid,
     GridProduct,
@@ -113,8 +115,10 @@ def _fan_out(catalog, payloads: "OrderedDict[str, object]",
     if n <= 1 or len(items) <= 1:
         results = [run(it) for it in items]
     else:
-        with ThreadPoolExecutor(max_workers=min(n, len(items)),
-                                thread_name_prefix="repro-fed") as pool:
+        with _tsan_wrap_pool(
+            ThreadPoolExecutor(max_workers=min(n, len(items)),
+                               thread_name_prefix="repro-fed")
+        ) as pool:
             results = list(pool.map(run, items))
     return OrderedDict(zip(payloads.keys(), results))
 

@@ -31,6 +31,8 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.analysis.dynamic.runtime import wrap_pool as _tsan_wrap_pool
+
 from ..core import fm301
 from ..core.datatree import RadarArchive
 from ..store import ObjectStore, Repository
@@ -342,7 +344,7 @@ def ingest(
         for start in range(0, len(vols), batch_size):
             _commit_batch(start, vols[start : start + batch_size])
     else:
-        with ThreadPoolExecutor(max_workers=n_threads) as pool:
+        with _tsan_wrap_pool(ThreadPoolExecutor(max_workers=n_threads)) as pool:
             # stage 1: fan out reads; keep key order for reporting only
             raw = [
                 f.result() for f in [pool.submit(_extract, k) for k in keys]

@@ -56,6 +56,9 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.analysis.dynamic.runtime import (new_lock, note_read, note_write,
+                                            wrap_pool)
+
 from .chunks import (chunk_stats_summary, content_hash, decode_chunk,
                      encode_chunk)
 from .codecs import get_codec, json_dumps, json_loads
@@ -418,7 +421,7 @@ class Session:
         # ETL pipeline lends its ingest pool here)
         self.read_pool = None
         self._own_pool = None
-        self._cache_lock = threading.Lock()
+        self._cache_lock = new_lock("Session._cache_lock")
         # manifest-object cache: shard/manifest hash -> {chunk key -> ref}
         self._obj_cache: "OrderedDict[str, Dict[str, str]]" = OrderedDict()
         # decoded-chunk cache: (ref, chunks, dtype, codec) -> read-only array
@@ -432,17 +435,19 @@ class Session:
     def reader_pool(self):
         """Executor for multi-chunk read fan-out; None means read serially."""
         if self.read_pool is not None:
-            return self.read_pool
+            return wrap_pool(self.read_pool)
         if self.read_workers <= 1:
             return None
         with self._cache_lock:  # two first-readers must not both build one
+            note_read(self, "_own_pool", owner="Session")
             if self._own_pool is None:
                 from concurrent.futures import ThreadPoolExecutor
 
-                self._own_pool = ThreadPoolExecutor(
+                note_write(self, "_own_pool", owner="Session")
+                self._own_pool = wrap_pool(ThreadPoolExecutor(
                     max_workers=self.read_workers,
                     thread_name_prefix="repro-read",
-                )
+                ))
             return self._own_pool
 
     def close(self) -> None:
@@ -453,12 +458,18 @@ class Session:
         # a concurrent first reader is building (leaked threads) or hand
         # that reader a pool this close() already shut down
         with self._cache_lock:
+            note_read(self, "_own_pool", owner="Session")
+            note_write(self, "_own_pool", owner="Session")
             pool, self._own_pool = self._own_pool, None
         if pool is not None:
             pool.shutdown(wait=False)
 
     def cache_stats(self) -> Dict[str, int]:
         with self._cache_lock:
+            note_read(self, "_chunk_cache", owner="Session")
+            note_read(self, "_chunk_cache_nbytes", owner="Session")
+            note_read(self, "_obj_cache", owner="Session")
+            note_read(self, "_fetch_count", owner="Session")
             return {
                 "chunk_entries": len(self._chunk_cache),
                 "chunk_bytes": self._chunk_cache_nbytes,
@@ -468,6 +479,7 @@ class Session:
 
     def _obj_cache_put(self, mh: str, obj: Dict[str, str]) -> None:
         with self._cache_lock:
+            note_write(self, "_obj_cache", owner="Session")
             self._obj_cache[mh] = obj
             self._obj_cache.move_to_end(mh)
             while len(self._obj_cache) > _OBJ_CACHE_ENTRIES:
@@ -476,6 +488,7 @@ class Session:
     def _manifest_obj(self, mh: str) -> Dict[str, str]:
         """One manifest object (v2 shard or v1 flat map), LRU-cached."""
         with self._cache_lock:
+            note_read(self, "_obj_cache", owner="Session")
             obj = self._obj_cache.get(mh)
             if obj is not None:
                 self._obj_cache.move_to_end(mh)
@@ -492,6 +505,7 @@ class Session:
         """
         ck = f"stats:{sh}"
         with self._cache_lock:
+            note_read(self, "_obj_cache", owner="Session")
             obj = self._obj_cache.get(ck)
             if obj is not None:
                 self._obj_cache.move_to_end(ck)
@@ -592,6 +606,7 @@ class Session:
             return None
         key = (ref, tuple(meta.chunks), meta.dtype, meta.codec)
         with self._cache_lock:
+            note_read(self, "_chunk_cache", owner="Session")
             hit = self._chunk_cache.get(key)
             if hit is not None:
                 self._chunk_cache.move_to_end(key)
@@ -600,10 +615,13 @@ class Session:
         chunk = decode_chunk(blob, tuple(meta.chunks), meta.dtype,
                              meta.codec, writable=False)
         with self._cache_lock:
+            note_write(self, "_fetch_count", owner="Session")
             self._fetch_count += 1
             winner = self._chunk_cache.get(key)
             if winner is not None:  # lost a decode race: share the winner
                 return winner
+            note_write(self, "_chunk_cache", owner="Session")
+            note_write(self, "_chunk_cache_nbytes", owner="Session")
             self._chunk_cache[key] = chunk
             self._chunk_cache_nbytes += chunk.nbytes
             while (self._chunk_cache_nbytes > self.cache_bytes
@@ -772,6 +790,7 @@ class Transaction(Session):
         ref = content_hash(blob)
         self.repo.store.put(f"chunks/{ref}", blob, if_not_exists=True)
         key = _chunk_key(tuple(cid))
+        note_write(self, "_staged_chunks", owner="Transaction")
         self._staged_chunks.setdefault(array_path, {})[key] = ref
         # a decoded stage of the same chunk earlier in this transaction is
         # now superseded — drop it, or the deferred commit-time encode
@@ -788,6 +807,7 @@ class Transaction(Session):
         Re-staging the same chunk object is idempotent, so in-place
         read-modify-write cycles (the append hot path) never re-encode.
         """
+        note_write(self, "_staged_arrays", owner="Transaction")
         self._staged_arrays.setdefault(array_path, {})[
             _chunk_key(tuple(cid))
         ] = chunk
@@ -911,12 +931,12 @@ class Transaction(Session):
         parallel = self.encode_pool is not None or self.encode_workers > 1
         if parallel and len(jobs) > 1:
             if self.encode_pool is not None:
-                pool, transient = self.encode_pool, None
+                pool, transient = wrap_pool(self.encode_pool), None
             else:
                 from concurrent.futures import ThreadPoolExecutor
 
                 transient = ThreadPoolExecutor(max_workers=self.encode_workers)
-                pool = transient
+                pool = wrap_pool(transient)
             try:
                 pending = list(jobs)
                 futures = [
@@ -931,6 +951,8 @@ class Transaction(Session):
                     transient.shutdown()
         else:
             encoded = [encode(j) for j in jobs]
+        note_write(self, "_staged_chunks", owner="Transaction")
+        note_write(self, "_staged_arrays", owner="Transaction")
         for path, key, ref, stats in encoded:
             self._staged_chunks.setdefault(path, {})[key] = ref
             if stats is not None:

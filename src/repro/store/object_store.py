@@ -15,13 +15,25 @@ import os
 import tempfile
 from typing import Iterator, Optional
 
+from repro.analysis.dynamic.runtime import (atomic_read, atomic_update,
+                                            schedule_point)
+
 
 class ObjectStore:
-    """Key/value blob store.  Keys are ``/``-separated paths."""
+    """Key/value blob store.  Keys are ``/``-separated paths.
+
+    Under the concurrency sanitizer (``REPRO_TSAN=1``) every put /
+    successful CAS is a release and every get / failed CAS an acquire on
+    the key — the happens-before edges that make the lock-free branch-ref
+    commit and catalog document loops race-clean by construction.
+    """
 
     def __init__(self, root: str):
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
+
+    def _tsan_key(self, key: str) -> str:
+        return f"{self.root}:{key}"
 
     # -- internals ---------------------------------------------------------
     def _path(self, key: str) -> str:
@@ -51,6 +63,7 @@ class ObjectStore:
             # commit.  (A cloud store would issue the equivalent touch.)
             try:
                 os.utime(path)
+                atomic_update(self._tsan_key(key))
                 return False
             except FileNotFoundError:
                 pass  # deleted between exists() and utime(): write below
@@ -63,10 +76,12 @@ class ObjectStore:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        atomic_update(self._tsan_key(key))
         return True
 
     def get(self, key: str) -> bytes:
         path = self._path(key)
+        atomic_read(self._tsan_key(key))
         try:
             with open(path, "rb") as f:
                 return f.read()
@@ -93,6 +108,7 @@ class ObjectStore:
             os.unlink(self._path(key))
         except FileNotFoundError:
             pass
+        atomic_update(self._tsan_key(key))
 
     def list(self, prefix: str = "") -> Iterator[str]:
         base = self.root
@@ -120,6 +136,23 @@ class ObjectStore:
         snapshot id to the next in a single rename guarded by a lock file.
         Returns False (no change) when the precondition fails.
         """
+        # sanitizer hooks fire *outside* the lock-file window below, so a
+        # schedule-explorer yield can never park a thread while it holds
+        # the O_EXCL lock (which would turn scheduling into spurious
+        # contention for every other CAS attempt); the entry point lets
+        # the explorer land a competitor inside this caller's
+        # read-modify-write window
+        schedule_point(f"store cas {self._tsan_key(key)}")
+        swapped = self._cas_locked(key, expected, new)
+        if swapped:
+            atomic_update(self._tsan_key(key))
+        else:
+            atomic_read(self._tsan_key(key))
+        return swapped
+
+    def _cas_locked(
+        self, key: str, expected: Optional[bytes], new: bytes
+    ) -> bool:
         path = self._path(key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         lock = path + ".lock"

@@ -1,0 +1,45 @@
+"""Near-miss negatives for the interprocedural pass: the
+"caller holds the lock for me" idiom — every path to the helper's
+mutation holds the guard, so nothing may be flagged."""
+
+import threading
+
+_BUF = []
+_B_LOCK = threading.Lock()
+
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._data = {}
+
+    def fill(self, key, value):
+        with self._lock:
+            self._data[key] = value
+
+    def _wipe(self):
+        self._data.clear()  # every caller holds self._lock
+
+    def reset(self):
+        with self._lock:
+            self._wipe()
+
+    def _step2(self):
+        self._data.pop("tmp", None)  # two private hops from the lock
+
+    def _step1(self):
+        self._step2()
+
+    def drain(self):
+        with self._lock:
+            self._step1()
+
+
+def _flush_all():
+    _BUF.clear()
+
+
+def flush():
+    with _B_LOCK:
+        _BUF.append(None)
+        _flush_all()

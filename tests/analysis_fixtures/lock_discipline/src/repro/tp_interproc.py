@@ -1,0 +1,46 @@
+"""True positives for the interprocedural lock-discipline pass: an
+unlocked caller reaches a guarded mutation through a private helper —
+flagged at the call site, where the fix belongs."""
+
+import threading
+
+_TABLE = {}
+_T_LOCK = threading.Lock()
+
+
+class Cache2:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}
+
+    def flush(self):
+        with self._lock:
+            self._items.clear()  # establishes the guard
+
+    def _purge(self):
+        self._items.clear()  # callers are expected to hold the lock
+
+    def trim(self):
+        with self._lock:
+            self._purge()  # OK: call site holds the guard
+
+    def evict_all(self):
+        self._purge()  # FINDING: unlocked call reaches a guarded mutation
+
+
+def store(key, value):
+    with _T_LOCK:
+        _TABLE[key] = value
+
+
+def _drop_all():
+    _TABLE.clear()
+
+
+def locked_reset():
+    with _T_LOCK:
+        _drop_all()  # OK
+
+
+def forget_all():
+    _drop_all()  # FINDING: module helper mutates _TABLE without _T_LOCK

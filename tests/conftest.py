@@ -4,6 +4,38 @@ The static-analysis fixture corpus under ``analysis_fixtures/`` contains
 deliberately broken mini-projects (including a fake ``tests/test_kernels.py``
 the kernel-contract checker parses).  They are inputs to
 ``tests/test_analysis.py``, never test modules themselves.
+
+Sanitizer mode: with ``REPRO_TSAN=1`` in the environment the
+instrumented runtime traces the whole suite and a session-scoped gate
+fails the run if any data race was detected anywhere.  Set
+``REPRO_TSAN_REPORT=<path>`` to also write the race/lockset report JSON
+(the CI sanitizer lane uploads it as an artifact).
 """
 
+import os
+
+import pytest
+
 collect_ignore = ["analysis_fixtures"]
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _tsan_race_gate():
+    """With REPRO_TSAN=1, assert the whole suite ran race-free.
+
+    Explorer runs and seeded-race fixtures use ``rt.scoped()``, so their
+    intentional races never reach the suite-wide detector this gate
+    reads."""
+    yield
+    if os.environ.get("REPRO_TSAN") != "1":
+        return
+    from repro.analysis.dynamic import rt
+
+    report = os.environ.get("REPRO_TSAN_REPORT")
+    if report:
+        rt.write_report(report)
+    races = rt.races()
+    assert not races, (
+        f"REPRO_TSAN: {len(races)} data race(s) detected during the "
+        "suite:\n\n" + "\n\n".join(r.render() for r in races)
+    )

@@ -60,7 +60,11 @@ CORPUS = {
         [("src/repro/tp.py", "Cache.register"),
          ("src/repro/tp.py", "Counter.reset"),
          ("src/repro/tp.py", "forget"),
-         ("src/repro/tp.py", "swap_ab")],
+         ("src/repro/tp.py", "swap_ab"),
+         # interprocedural: unlocked callers reaching guarded mutations
+         # through private helpers are flagged at the call site
+         ("src/repro/tp_interproc.py", "Cache2.evict_all"),
+         ("src/repro/tp_interproc.py", "forget_all")],
         [("src/repro/suppressed.py", "Tally.reset_unsafe")],
     ),
     "determinism": (
