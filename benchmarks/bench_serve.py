@@ -1,0 +1,267 @@
+"""Archive HTTP service: bitwise fidelity, coalescing, cache behavior,
+throughput.
+
+Three claims are gated here (the PR-8 acceptance gates), all
+machine-independent by construction:
+
+* **Bitwise fidelity** — every product body served over HTTP is
+  bitwise-identical to encoding the same in-process computation
+  (``product_bitwise_vs_inprocess``).
+* **Coalescing** — N concurrent identical requests run exactly one
+  computation per *unique* request: ``computations == unique_requests``
+  (``computations_equal_unique``), and the served-without-computing
+  fraction ``coalesce_ratio`` is a deterministic function of the
+  workload shape (the product cache fronts the single-flight, so
+  repeats never recompute regardless of timing).
+* **Chunk cache** — a two-pass fetch over the planner's CAS refs hits
+  the shared hot-chunk cache on the second pass
+  (``chunk_cache_hit_ratio``) and reads each blob from the store once
+  (``chunk_fetches_total``).
+
+Requests/s and latency percentiles are recorded for context but never
+gated (CI timing is noise).
+
+Runnable standalone::
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import statistics
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List
+
+if __package__:
+    from .common import Record
+else:  # executed as a script: put the repo root on sys.path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import Record
+
+from repro.catalog import Catalog
+from repro.catalog.federation import federated_mosaic
+from repro.etl import generate_raw_archive, ingest
+from repro.radar.grid import cappi_from_session, column_max_from_session
+from repro.radar.qpe import qpe_from_session
+from repro.radar.qvp import qvp_from_session
+from repro.serve.http import ArchiveServer, ArchiveService, encode_product
+from repro.store import ObjectStore, Repository
+
+SITES = ["KVNX", "KTLX"]
+VCP = "VCP-212"
+
+_CACHE: Dict[str, Catalog] = {}
+
+
+def serve_archive(tag: str, *, n_scans: int, n_az: int, n_gates: int,
+                  n_sweeps: int, time_chunk: int) -> Catalog:
+    """Two single-site repositories under one catalog (module-cached)."""
+    if tag in _CACHE:
+        return _CACHE[tag]
+    base = Path(tempfile.mkdtemp(prefix=f"repro-bench-serve-{tag}-"))
+    catalog = Catalog.create(str(base / "catalog"))
+    for i, site in enumerate(SITES):
+        raw = ObjectStore(str(base / f"raw-{site}"))
+        generate_raw_archive(raw, site_id=site, n_scans=n_scans, n_az=n_az,
+                             n_gates=n_gates, n_sweeps=n_sweeps, seed=11 + i)
+        repo = Repository.create(str(base / f"store-{site}"))
+        ingest(raw, repo, batch_size=8, time_chunk=time_chunk,
+               catalog=catalog, repo_id=site)
+    _CACHE[tag] = catalog
+    return _CACHE[tag]
+
+
+def _get(host: str, port: int, path: str) -> bytes:
+    conn = http.client.HTTPConnection(host, port, timeout=60)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        body = resp.read()
+        if resp.status != 200:
+            raise RuntimeError(f"GET {path} -> {resp.status}: {body!r}")
+        return body
+    finally:
+        conn.close()
+
+
+def run(*, quick: bool = False) -> List[Record]:
+    if quick:
+        catalog = serve_archive("quick", n_scans=4, n_az=48, n_gates=300,
+                                n_sweeps=2, time_chunk=2)
+        ny = nx = 48
+        load_threads, load_reqs = 4, 20
+    else:
+        catalog = serve_archive("default", n_scans=8, n_az=180,
+                                n_gates=500, n_sweeps=3, time_chunk=2)
+        ny = nx = 96
+        load_threads, load_reqs = 8, 40
+
+    # -- gate 1: served bodies == in-process encodings, bitwise --------
+    session = catalog.open_session(SITES[0], read_workers=1)
+    try:
+        expected = {
+            "qvp": encode_product(qvp_from_session(
+                session, vcp=VCP, sweep=0, moment="DBZH",
+                quality_moment=None)),
+            "qpe": encode_product(qpe_from_session(
+                session, vcp=VCP, sweep=0, moment="DBZH")),
+            "cappi": encode_product(cappi_from_session(
+                session, vcp=VCP, moment="DBZH", altitude_m=2000.0,
+                ny=ny, nx=nx)),
+            "column_max": encode_product(column_max_from_session(
+                session, vcp=VCP, moment="DBZH", ny=ny, nx=nx)),
+        }
+    finally:
+        session.close()
+    expected["mosaic"] = encode_product(federated_mosaic(
+        catalog, moment="DBZH", product="column_max", ny=ny, nx=nx))
+
+    paths = {
+        "qvp": f"/products/qvp?repo={SITES[0]}&vcp={VCP}&sweep=0",
+        "qpe": f"/products/qpe?repo={SITES[0]}&vcp={VCP}&sweep=0",
+        "cappi": f"/products/cappi?repo={SITES[0]}&vcp={VCP}"
+                 f"&ny={ny}&nx={nx}",
+        "column_max": f"/products/column_max?repo={SITES[0]}&vcp={VCP}"
+                      f"&ny={ny}&nx={nx}",
+        "mosaic": f"/products/mosaic?ny={ny}&nx={nx}",
+    }
+    with ArchiveService(catalog) as service, \
+            ArchiveServer(service) as server:
+        host, port = server.address
+        for kind, path in paths.items():
+            body = _get(host, port, path)
+            if body != expected[kind]:
+                raise AssertionError(
+                    f"served {kind} body differs from the in-process "
+                    "encoding (bitwise contract broken)")
+
+    # -- gate 2: N concurrent identical requests, one computation ------
+    # fresh service so the flight/cache counters start at zero
+    fanout = 6
+    unique = [paths["qvp"], paths["qpe"], paths["column_max"]]
+    with ArchiveService(catalog) as service, \
+            ArchiveServer(service, workers=fanout) as server:
+        host, port = server.address
+        barrier = threading.Barrier(fanout)
+        errors: List[BaseException] = []
+
+        def storm():
+            try:
+                for path in unique:
+                    barrier.wait()
+                    _get(host, port, path)
+            except BaseException as exc:  # surfaced below
+                errors.append(exc)
+
+        threads = [threading.Thread(target=storm) for _ in range(fanout)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        stats = service.stats()
+        flight = stats["product_flight"]
+        total_requests = fanout * len(unique)
+        if flight["computations"] != len(unique):
+            raise AssertionError(
+                f"{flight['computations']} computations for "
+                f"{len(unique)} unique requests across {total_requests} "
+                "calls: coalescing broken")
+        # flight coalescing + the cache fronting it serve everything
+        # else; the split is timing-dependent, the sum is not
+        served_free = total_requests - flight["computations"]
+        coalesce_ratio = served_free / total_requests
+
+        # -- gate 3: two-pass chunk fetch over the planner's refs ------
+        qdoc = json.loads(_get(host, port, "/query?moment=DBZH&refs=1"))
+        refs = [(s["repo"], r) for s in qdoc["scans"]
+                for r in s["chunk_refs"]][:8]
+        assert refs, "query returned no chunk refs"
+        for _pass in range(2):
+            for repo_id, ref in refs:
+                _get(host, port, f"/chunks/{ref}?repo={repo_id}")
+        cstats = service.stats()
+        chunk_fetches = cstats["chunk_flight"]["computations"]
+        cc = cstats["chunk_cache"]
+        hit_ratio = cc["hits"] / (cc["hits"] + cc["misses"])
+        if chunk_fetches != len(refs):
+            raise AssertionError(
+                f"{chunk_fetches} store fetches for {len(refs)} unique "
+                "refs over two passes: hot-chunk cache broken")
+
+        # -- throughput / latency (context only, never gated) ----------
+        lat_lock = threading.Lock()
+        latencies: List[float] = []
+
+        def load(worker: int):
+            conn = http.client.HTTPConnection(host, port, timeout=60)
+            mine: List[float] = []
+            try:
+                for i in range(load_reqs):
+                    path = unique[(worker + i) % len(unique)]
+                    t0 = time.perf_counter()
+                    conn.request("GET", path)
+                    resp = conn.getresponse()
+                    resp.read()
+                    mine.append(time.perf_counter() - t0)
+                    if resp.status != 200:
+                        raise RuntimeError(f"GET {path} -> {resp.status}")
+            finally:
+                conn.close()
+            with lat_lock:
+                latencies.extend(mine)
+
+        t0 = time.perf_counter()
+        workers = [threading.Thread(target=load, args=(w,))
+                   for w in range(load_threads)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join()
+        wall = time.perf_counter() - t0
+        n_load = load_threads * load_reqs
+        lat_ms = sorted(1e3 * x for x in latencies)
+        p50 = statistics.median(lat_ms)
+        p99 = lat_ms[min(len(lat_ms) - 1, int(0.99 * len(lat_ms)))]
+
+    return [
+        Record("serve", "product_bitwise_vs_inprocess", 1.0, "bool",
+               {"kinds": len(paths)}),
+        Record("serve", "computations_equal_unique", 1.0, "bool",
+               {"unique": len(unique), "requests": total_requests}),
+        Record("serve", "coalesce_ratio", coalesce_ratio, "frac",
+               {"fanout": fanout}),
+        Record("serve", "chunk_cache_hit_ratio", hit_ratio, "frac",
+               {"passes": 2}),
+        Record("serve", "chunk_fetches_total", chunk_fetches, "chunks",
+               {"refs": len(refs)}),
+        Record("serve", "requests_per_s", n_load / wall, "req/s",
+               {"threads": load_threads, "keepalive": 1}),
+        Record("serve", "latency_p50_ms", p50, "ms"),
+        Record("serve", "latency_p99_ms", p99, "ms"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small-archive configuration for CI smoke runs")
+    args = ap.parse_args()
+    # run() raises on any gate violation (bitwise divergence, duplicate
+    # computation, cold cache), so reaching here means all green
+    records = run(quick=args.quick)
+    print("bench,name,value,unit")
+    for r in records:
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main()

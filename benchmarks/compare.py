@@ -19,7 +19,7 @@ change), regenerate and commit it::
 
     PYTHONPATH=src python -m benchmarks.run --quick \
         --json benchmarks/BENCH_BASELINE.json \
-        --only ingest,transactional,timeseries,catalog,compaction,grid
+        --only ingest,transactional,timeseries,catalog,compaction,grid,serve
 """
 
 from __future__ import annotations
@@ -64,6 +64,11 @@ GATED: List[Tuple[str, str, str]] = [
     ("grid", "chunks_fetched_pruned", "lower"),
     ("grid", "chunks_fetched_blind", "lower"),
     ("grid", "window_pruning_ratio", "higher"),
+    ("serve", "product_bitwise_vs_inprocess", "higher"),
+    ("serve", "computations_equal_unique", "higher"),
+    ("serve", "coalesce_ratio", "higher"),
+    ("serve", "chunk_cache_hit_ratio", "higher"),
+    ("serve", "chunk_fetches_total", "lower"),
 ]
 
 

@@ -21,7 +21,7 @@ import sys
 import time
 
 BENCHES = ["ingest", "qvp", "qpe", "timeseries", "transactional",
-           "catalog", "compaction", "grid", "kernels", "roofline"]
+           "catalog", "compaction", "grid", "kernels", "roofline", "serve"]
 
 
 def main() -> None:

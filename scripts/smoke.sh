@@ -35,7 +35,7 @@ if [[ "${SMOKE_SKIP_BENCH:-0}" == "1" ]]; then
 else
   # each bench is a regression gate: a failed assertion or a nonzero exit
   # fails the smoke run (set -e applies inside the loop body)
-  for bench in ingest transactional timeseries catalog compaction grid; do
+  for bench in ingest transactional timeseries catalog compaction grid serve; do
     echo "== ${bench} benchmark (quick) =="
     python "benchmarks/bench_${bench}.py" --quick
   done

@@ -3,10 +3,13 @@ propagate.
 
 Two sub-checks under the ``exception-safety`` rule id:
 
-* **Leaked pools / pool-backed sessions.**  A local bound to a
-  ``ThreadPoolExecutor(...)`` or to a session factory called with
-  ``read_workers=`` (the sessions that lazily own a reader pool) must be
-  released — ``close``/``shutdown``/``abort`` inside a ``try``/
+* **Leaked pools / pool-backed sessions / servers / sockets.**  A local
+  bound to a ``ThreadPoolExecutor(...)``, to a session factory called
+  with ``read_workers=`` (the sessions that lazily own a reader pool),
+  to an ``http.server``/``socketserver`` server (which holds a listening
+  socket and, for the serve layer's pooled variant, a handler pool), or
+  to a ``socket.socket``/``create_connection`` must be released —
+  ``close``/``shutdown``/``abort``/``server_close`` inside a ``try``/
   ``finally``, or a ``with`` block.  A value that *escapes* the function
   (returned, yielded, stored on an object, passed to another call) is
   the caller's to manage and is exempt.
@@ -25,10 +28,15 @@ from ..core import Finding, Project, checker, dotted_name, qualnames
 
 RULE = "exception-safety"
 
-_RELEASES = {"close", "shutdown", "abort"}
+_RELEASES = {"close", "shutdown", "abort", "server_close"}
 _POOL_FACTORIES = {"ThreadPoolExecutor", "ProcessPoolExecutor"}
 _SESSION_FACTORIES = {"writable_session", "readonly_session",
                       "open_session", "Session", "Transaction"}
+# every stdlib server class holds a listening socket (and the serve
+# layer's ArchiveServer additionally owns its handler pool)
+_SERVER_FACTORIES = {"HTTPServer", "ThreadingHTTPServer", "TCPServer",
+                     "UDPServer", "ThreadingTCPServer", "ArchiveServer"}
+_SOCKET_FACTORIES = {"create_connection", "create_server"}
 
 
 def _creation_kind(node: ast.AST) -> Optional[str]:
@@ -43,6 +51,10 @@ def _creation_kind(node: ast.AST) -> Optional[str]:
     if last in _SESSION_FACTORIES and any(
             kw.arg == "read_workers" for kw in node.keywords):
         return "pool-backed session"
+    if last in _SERVER_FACTORIES or last.endswith("HTTPServer"):
+        return "listening server"
+    if last in _SOCKET_FACTORIES or d == "socket.socket":
+        return "socket"
     return None
 
 

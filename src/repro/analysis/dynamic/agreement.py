@@ -4,8 +4,8 @@ The static ``lock-discipline`` pass *infers* guards ("``Session._own_pool``
 is guarded by ``Session._cache_lock``"); the dynamic sanitizer *observes*
 locksets (the intersection of locks actually held across every traced
 access to the attribute).  This module joins the two over
-``src/repro/store``: every guard the static pass infers must be
-**confirmed** by the dynamic run —
+``src/repro/store`` and ``src/repro/serve``: every guard the static
+pass infers must be **confirmed** by the dynamic run —
 
 * ``confirmed`` — the attribute was exercised and the inferred lock was
   held on every access,
@@ -31,9 +31,10 @@ import numpy as np
 
 from .runtime import rt
 
-# agreement scope: the transactional store, where both the static pass
-# and the instrumentation are densest
-_SCOPE = "src/repro/store"
+# agreement scope: the transactional store (where both the static pass
+# and the instrumentation are densest) plus the serve layer's scheduling
+# substrate and service state (PR 8)
+_SCOPE = ("src/repro/store", "src/repro/serve")
 
 
 def _exercise_store() -> None:
@@ -75,6 +76,44 @@ def _exercise_store() -> None:
         shutil.rmtree(root, ignore_errors=True)
 
 
+def _exercise_serve() -> None:
+    """Drive every serve surface whose guard the static pass infers:
+    ``SingleFlight``'s coalescing map and counters (two concurrent
+    requests on one key), ``ByteBudgetCache``'s entries/bytes/hit
+    counters (hit, miss, eviction, drain), and the archive service's
+    per-tenant session table."""
+    from repro.serve.http import ArchiveService
+    from repro.serve.scheduling import ByteBudgetCache, SingleFlight
+
+    flight = SingleFlight()
+    barrier = threading.Barrier(2)
+
+    def request() -> None:
+        barrier.wait()
+        flight.do("product:qvp", lambda: b"payload")
+
+    threads = [threading.Thread(target=request, name=f"agree-sf{i}")
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    flight.stats()
+
+    cache = ByteBudgetCache(8)
+    cache.put("a", b"aaaa", 4)
+    cache.get("a")              # hit
+    cache.get("missing")        # miss
+    cache.put("b", b"bbbbbb", 6)  # evicts "a" (byte budget)
+    cache.stats()
+    cache.pop_all()
+
+    service = ArchiveService(catalog=None)
+    service._sessions_for("tenant-a")
+    service.stats()
+    service.close()
+
+
 def agreement_report(repo_root: str = ".") -> Dict[str, Any]:
     """Run the static inference and the dynamic workload; join them.
 
@@ -94,6 +133,7 @@ def agreement_report(repo_root: str = ".") -> Dict[str, Any]:
 
     with rt.scoped() as scope:
         _exercise_store()
+        _exercise_serve()
         det = scope.detector
         observed = {
             key: {

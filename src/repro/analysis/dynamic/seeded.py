@@ -1,8 +1,9 @@
-"""Seeded-race corpus: revert-style miniatures of the three PR 6 bugs.
+"""Seeded-race corpus: revert-style miniatures of known concurrency bugs.
 
 Each case pairs a **buggy** scenario — the pre-fix shape of a real bug
-the static ``lock-discipline`` pass caught in PR 6 — with its **fixed**
-counterpart, structured exactly like the live code:
+(the three the static ``lock-discipline`` pass caught in PR 6, plus the
+PR 8 serve-substrate coalescing race) — with its **fixed** counterpart,
+structured exactly like the live code:
 
 * ``session-close-pool-leak`` — ``Session.close()`` doing an *unlocked*
   check-then-clear of the reader-pool reference while a concurrent first
@@ -16,7 +17,12 @@ counterpart, structured exactly like the live code:
   this one is found as an *invariant violation*, not a race),
 * ``compact-retry-tx-leak`` — ``compact()``'s conflict-retry ``continue``
   skipping the attempt's transaction release (pre-fix: a concurrent
-  append forcing a CAS conflict leaks the transaction's resources).
+  append forcing a CAS conflict leaks the transaction's resources),
+* ``serve-coalesce-duplicate-compute`` — the serve substrate's
+  ``SingleFlight`` probing its coalescing map *outside* the lock before
+  electing a leader (pre-fix: two concurrent identical requests both
+  compute — ``computations > unique requests``, the PR 8 invariant —
+  and the unlocked probe is a data race against the locked insert).
 
 The schedule explorer must find every buggy case deterministically and
 pass every fixed one; ``scripts/lint.py --dynamic`` runs this as a
@@ -300,6 +306,89 @@ def _compact_scenario(buggy: bool) -> Scenario:
     )
 
 
+# -- case 4: SingleFlight leader election vs coalescing probe ----------------
+
+class _MiniFlight:
+    """The request-coalescing map of
+    :class:`repro.serve.scheduling.SingleFlight`: the first caller for a
+    key becomes the *leader* and computes; concurrent callers coalesce
+    onto its in-flight slot.  The whole point is ``computations ==
+    unique keys`` — the PR 8 acceptance invariant."""
+
+    def __init__(self) -> None:
+        self._lock = new_lock("_MiniFlight._lock")
+        self._inflight: Dict[str, dict] = {}
+        self.computations = 0
+
+    def _compute(self, key: str, flight: dict, fn) -> object:
+        # the completed slot stays in the map — modelling the response
+        # cache fronting the live SingleFlight, so a later request for
+        # the same key coalesces instead of recomputing
+        value = fn()
+        with self._lock:
+            note_write(self, "computations", owner="_MiniFlight")
+            self.computations += 1
+            flight["value"] = value
+            flight["done"] = True
+        return value
+
+    def do_buggy(self, key: str, fn) -> object:
+        # pre-fix shape: the membership probe runs *outside* the lock, so
+        # two first requests can both observe "nothing in flight" and
+        # both elect themselves leader — duplicate computation, and the
+        # unlocked probe races the locked insert (no happens-before edge)
+        note_read(self, "_inflight", owner="_MiniFlight")
+        flight = self._inflight.get(key)
+        if flight is None:
+            flight = {"done": False, "value": None}
+            with self._lock:
+                note_write(self, "_inflight", owner="_MiniFlight")
+                self._inflight[key] = flight
+            return self._compute(key, flight, fn)
+        return None    # coalesced: a real waiter would block on the slot
+
+    def do_fixed(self, key: str, fn) -> object:
+        # PR 8 shape: probe and insert are one atomic step under the
+        # lock, so exactly one caller is ever elected leader per key
+        with self._lock:
+            note_read(self, "_inflight", owner="_MiniFlight")
+            flight = self._inflight.get(key)
+            if flight is None:
+                flight = {"done": False, "value": None}
+                note_write(self, "_inflight", owner="_MiniFlight")
+                self._inflight[key] = flight
+                leader = True
+            else:
+                leader = False
+        if leader:
+            return self._compute(key, flight, fn)
+        return None
+
+
+def _coalesce_scenario(buggy: bool) -> Scenario:
+    def setup() -> _MiniFlight:
+        return _MiniFlight()
+
+    def requester(flight: _MiniFlight) -> None:
+        (flight.do_buggy if buggy else flight.do_fixed)(
+            "product:qvp", lambda: 42)
+
+    def check(flight: _MiniFlight) -> None:
+        assert flight.computations == 1, (
+            f"coalescing broke: 2 identical concurrent requests ran "
+            f"{flight.computations} computations (expected 1 — "
+            f"computations must equal unique requests)"
+        )
+
+    return Scenario(
+        name="serve-coalesce-duplicate-compute"
+             + ("" if buggy else "-fixed"),
+        setup=setup,
+        threads=[("req-a", requester), ("req-b", requester)],
+        check=check,
+    )
+
+
 # -- registry ---------------------------------------------------------------
 
 @dataclass
@@ -335,6 +424,14 @@ CASES: Dict[str, SeededCase] = {
                         "transaction release (PR 6 fix #3)",
             buggy=lambda: _compact_scenario(buggy=True),
             fixed=lambda: _compact_scenario(buggy=False),
+        ),
+        SeededCase(
+            name="serve-coalesce-duplicate-compute",
+            description="SingleFlight leader election probing the "
+                        "coalescing map outside the lock (PR 8 serve "
+                        "substrate)",
+            buggy=lambda: _coalesce_scenario(buggy=True),
+            fixed=lambda: _coalesce_scenario(buggy=False),
         ),
     ]
 }

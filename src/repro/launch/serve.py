@@ -33,6 +33,9 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="bound the engine batch size; requests are "
+                         "planned into FIFO batches (default: one batch)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -50,9 +53,21 @@ def main() -> None:
     if args.ckpt:
         from repro.train import (AdamWConfig, CheckpointManager,
                                  train_state_specs)
-        repo = Repository.open(ObjectStore(args.ckpt))
+        try:
+            repo = Repository.open(ObjectStore(args.ckpt))
+            repo.branch_head("main")  # probe: open() itself is lazy
+        except Exception as exc:
+            raise SystemExit(
+                f"--ckpt {args.ckpt!r} is not an archive repository "
+                f"({type(exc).__name__}: {exc})") from None
         mgr = CheckpointManager(repo)
         step = mgr.latest_step()
+        if step is None:
+            raise SystemExit(
+                f"--ckpt {args.ckpt!r} has no checkpoint arrays (no "
+                "ckpt/step-* groups on its branch) — point --ckpt at a "
+                "repository written by training with checkpointing "
+                "enabled, or drop --ckpt for random init")
         print(f"loading checkpoint step {step}")
         # params live under 'params/...' inside the TrainState layout
         full = mgr.restore(train_state_specs(cfg, AdamWConfig(), pcfg),
@@ -73,7 +88,7 @@ def main() -> None:
         for _ in range(args.requests)
     ]
     t0 = time.time()
-    outs = eng.generate(reqs, seed=1)
+    outs = eng.generate(reqs, seed=1, max_batch=args.max_batch)
     dt = time.time() - t0
     total_new = sum(int(np.asarray(o.tokens).shape[-1]) for o in outs)
     print(f"{len(outs)} completions, {total_new} tokens in {dt:.2f}s "

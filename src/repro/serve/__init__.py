@@ -1,3 +1,11 @@
-from .engine import Completion, Engine, Request, decode, prefill, sample
+"""Serving layer: the LM engine and the archive HTTP service
+(:mod:`repro.serve.http`), both on the :mod:`repro.serve.scheduling`
+request-scheduling substrate."""
 
-__all__ = ["Completion", "Engine", "Request", "decode", "prefill", "sample"]
+from .engine import Completion, Engine, Request, decode, prefill, sample
+from .scheduling import ByteBudgetCache, SingleFlight, plan_batches
+
+__all__ = [
+    "Completion", "Engine", "Request", "decode", "prefill", "sample",
+    "ByteBudgetCache", "SingleFlight", "plan_batches",
+]

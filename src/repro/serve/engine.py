@@ -27,6 +27,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig, ParallelConfig
 from ..models import model as M
+from .scheduling import plan_batches
 
 Params = Any
 
@@ -120,8 +121,31 @@ class Engine:
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
         self._decode = jax.jit(_decode, donate_argnums=donate)
 
-    def generate(self, requests: List[Request], seed: int = 0
-                 ) -> List[Completion]:
+    def generate(self, requests: List[Request], seed: int = 0,
+                 max_batch: Optional[int] = None) -> List[Completion]:
+        """Serve ``requests``, preserving submission order.
+
+        Batch planning rides the serve-layer scheduling substrate:
+        :func:`repro.serve.scheduling.plan_batches` splits the FIFO
+        request list into aligned batches of at most ``max_batch`` slots
+        (``None`` — the default, and the pre-existing behavior — pads
+        everything into one batch).  Each batch derives its sampling key
+        from ``seed`` plus its batch index, so results are deterministic
+        in (requests, seed, max_batch).
+        """
+        if not requests:
+            return []
+        out: List[Optional[Completion]] = [None] * len(requests)
+        for bi, batch in enumerate(plan_batches(len(requests), max_batch)):
+            idxs = list(batch)
+            comps = self._generate_batch(
+                [requests[i] for i in idxs], seed + bi)
+            for i, comp in zip(idxs, comps):
+                out[i] = comp
+        return [c for c in out if c is not None]
+
+    def _generate_batch(self, requests: List[Request],
+                        seed: int) -> List[Completion]:
         cfg = self.cfg
         B = len(requests)
         if cfg.n_codebooks > 1:

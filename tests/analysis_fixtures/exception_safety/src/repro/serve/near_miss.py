@@ -1,0 +1,39 @@
+"""Near-miss negatives for the serve tree: every server/socket
+ownership pattern that is fine."""
+
+import socket
+from concurrent.futures import ThreadPoolExecutor
+from http.server import ThreadingHTTPServer
+
+
+def finally_server(handler):
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    try:
+        httpd.handle_request()
+    finally:
+        httpd.server_close()
+
+
+def with_socket(host, port):
+    with socket.create_connection((host, port)) as conn:
+        conn.sendall(b"GET / HTTP/1.0\r\n\r\n")
+        return conn.recv(4096)
+
+
+def server_escapes(handler):
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+    return httpd  # caller-managed: ownership escapes
+
+
+class Owner:
+    def __init__(self, handler):
+        # stored on the object: release is the owner's close(), not the
+        # constructor's job
+        self.httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)
+        self.pool = ThreadPoolExecutor(max_workers=2)
+
+    def close(self):
+        try:
+            self.httpd.server_close()
+        finally:
+            self.pool.shutdown(wait=True)

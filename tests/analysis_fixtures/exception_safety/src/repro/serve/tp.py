@@ -1,0 +1,24 @@
+"""True positives for the serve tree: leaked servers, sockets and
+handler pools (every path must release the listening socket)."""
+
+import socket
+from concurrent.futures import ThreadPoolExecutor
+from http.server import ThreadingHTTPServer
+
+
+def leak_server(handler):
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), handler)  # FINDING
+    httpd.handle_request()
+
+
+def leak_socket(host, port):
+    conn = socket.create_connection((host, port))  # FINDING
+    conn.sendall(b"GET / HTTP/1.0\r\n\r\n")
+    return conn.recv(4096)
+
+
+def leak_handler_pool(conns):
+    pool = ThreadPoolExecutor(max_workers=4)  # FINDING: error path leaks
+    for conn in conns:
+        pool.submit(conn.handle)
+    pool.shutdown(wait=True)  # not in a finally: exceptions skip it

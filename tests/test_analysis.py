@@ -95,7 +95,10 @@ CORPUS = {
         "exception_safety", ProjectConfig(),
         [("src/repro/tp.py", "leak_pool"),
          ("src/repro/tp.py", "leak_session"),
-         ("src/repro/tp.py", "swallow")],
+         ("src/repro/tp.py", "swallow"),
+         ("src/repro/serve/tp.py", "leak_server"),
+         ("src/repro/serve/tp.py", "leak_socket"),
+         ("src/repro/serve/tp.py", "leak_handler_pool")],
         [("src/repro/suppressed.py", "long_lived")],
     ),
 }

@@ -117,6 +117,46 @@ def test_engine_mixed_length_batch(lm):
     assert np.asarray(outs[1].tokens).shape[-1] == 2
 
 
+def test_engine_max_batch_splits_and_stitches(lm):
+    """``max_batch`` plans FIFO batches (batch ``i`` seeded ``seed+i``)
+    and stitches completions back in submission order."""
+    cfg, params = lm
+    eng = Engine(cfg, PCFG, params, max_len=64)
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32) + i,
+                    max_new_tokens=4, temperature=1.0)
+            for i in range(4)]
+    split = eng.generate(reqs, seed=5, max_batch=2)
+    manual = (eng.generate(reqs[:2], seed=5)
+              + eng.generate(reqs[2:], seed=6))
+    assert len(split) == 4
+    for got, want in zip(split, manual):
+        np.testing.assert_array_equal(np.asarray(got.tokens),
+                                      np.asarray(want.tokens))
+        assert got.finished == want.finished
+
+
+def test_serve_cli_rejects_ckpt_without_checkpoints(tmp_path, monkeypatch):
+    from repro.launch import serve as serve_cli
+    from repro.store import Repository
+
+    Repository.create(str(tmp_path / "repo"))
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--arch", "radar-lm-100m", "--reduced",
+        "--ckpt", str(tmp_path / "repo")])
+    with pytest.raises(SystemExit, match="no checkpoint arrays"):
+        serve_cli.main()
+
+
+def test_serve_cli_rejects_non_repository_ckpt(tmp_path, monkeypatch):
+    from repro.launch import serve as serve_cli
+
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--arch", "radar-lm-100m", "--reduced",
+        "--ckpt", str(tmp_path / "not-a-repo")])
+    with pytest.raises(SystemExit, match="not an archive repository"):
+        serve_cli.main()
+
+
 def test_engine_multicodebook_arch():
     cfg = get_config("musicgen-large").reduced()
     params = M.init_params(cfg, jax.random.key(3))
