@@ -19,7 +19,7 @@ change), regenerate and commit it::
 
     PYTHONPATH=src python -m benchmarks.run --quick \
         --json benchmarks/BENCH_BASELINE.json \
-        --only ingest,transactional,timeseries,catalog,compaction,grid,serve
+        --only ingest,transactional,timeseries,catalog,compaction,grid,serve,remote_read
 """
 
 from __future__ import annotations
@@ -69,6 +69,13 @@ GATED: List[Tuple[str, str, str]] = [
     ("serve", "coalesce_ratio", "higher"),
     ("serve", "chunk_cache_hit_ratio", "higher"),
     ("serve", "chunk_fetches_total", "lower"),
+    ("remote_read", "qvp_bitwise", "higher"),
+    ("remote_read", "mosaic_bitwise", "higher"),
+    ("remote_read", "qvp_remote_gets", "lower"),
+    ("remote_read", "qvp_coalesce_keys_per_get", "higher"),
+    ("remote_read", "qvp_chunk_fetches", "lower"),
+    ("remote_read", "qvp_prefetch_hit_ratio", "higher"),
+    ("remote_read", "mosaic_remote_gets", "lower"),
 ]
 
 

@@ -21,7 +21,8 @@ import sys
 import time
 
 BENCHES = ["ingest", "qvp", "qpe", "timeseries", "transactional",
-           "catalog", "compaction", "grid", "kernels", "roofline", "serve"]
+           "catalog", "compaction", "grid", "kernels", "roofline", "serve",
+           "remote_read"]
 
 
 def main() -> None:

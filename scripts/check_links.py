@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's markdown documentation.
+
+    python scripts/check_links.py README.md docs/*.md
+
+Every markdown link or image whose target is *relative* (no scheme, not
+an in-page ``#anchor``) must resolve to a real file or directory in the
+tree, relative to the document that contains it.  External ``http(s)``
+/ ``mailto`` targets are out of scope on purpose: the docs lane must
+stay hermetic — no network, no flakes.  Exit 1 lists every broken link
+with its file and line so the failure is actionable from the CI log.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images: [text](target) / ![alt](target); reference-style
+# definitions: "[label]: target".  Markdown allows a title after the
+# target ("(path \"title\")"), so the target is the first whitespace-free
+# run.
+_INLINE = re.compile(r"!?\[[^\]]*\]\(\s*(?P<target>[^)\s]+)[^)]*\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(?P<target>\S+)", re.MULTILINE)
+_SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+# fenced code blocks are not prose — a "[i](x)" inside example output is
+# not a link
+_FENCE = re.compile(r"^(```|~~~)")
+
+
+def iter_links(text: str):
+    """Yield ``(line_number, target)`` for every link target in ``text``,
+    skipping fenced code blocks."""
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for pat in (_INLINE, _REFDEF):
+            for m in pat.finditer(line):
+                yield lineno, m.group("target")
+
+
+def check_file(doc: Path, root: Path) -> list:
+    """Return ``(doc, line, target, reason)`` tuples for every broken
+    relative link in ``doc``."""
+    broken = []
+    text = doc.read_text(encoding="utf-8")
+    for lineno, target in iter_links(text):
+        if _SCHEME.match(target) or target.startswith("#"):
+            continue                     # external / in-page anchor
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        resolved = (doc.parent / path_part).resolve()
+        try:
+            resolved.relative_to(root)
+        except ValueError:
+            broken.append((doc, lineno, target, "escapes the repository"))
+            continue
+        if not resolved.exists():
+            broken.append((doc, lineno, target, "no such file"))
+    return broken
+
+
+def main(argv) -> int:
+    """Check every named markdown file; exit 1 if any relative link is
+    broken."""
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    root = Path(__file__).resolve().parent.parent
+    docs = [Path(a) for a in argv]
+    missing = [d for d in docs if not d.exists()]
+    if missing:
+        for d in missing:
+            print(f"check_links: document not found: {d}", file=sys.stderr)
+        return 1
+
+    broken = []
+    n_links = 0
+    for doc in docs:
+        hits = check_file(doc, root)
+        n_links += sum(1 for _ in iter_links(doc.read_text(encoding="utf-8")))
+        broken.extend(hits)
+
+    for doc, lineno, target, reason in broken:
+        print(f"{doc}:{lineno}: broken link `{target}` ({reason})")
+    if broken:
+        print(f"\nFAIL: {len(broken)} broken link(s) across "
+              f"{len(docs)} document(s).", file=sys.stderr)
+        return 1
+    print(f"check_links: {len(docs)} document(s), {n_links} link target(s), "
+          "all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

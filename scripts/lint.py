@@ -4,7 +4,8 @@
     PYTHONPATH=src python scripts/lint.py [--json OUT.json]
 
 Runs every registered checker (lock-discipline, kernel-contract,
-determinism, dependency-policy, exception-safety) over the tree and
+determinism, dependency-policy, exception-safety, doc-coverage) over
+the tree and
 exits 1 on any finding not in the committed baseline
 (``scripts/lint_baseline.json``).  Suppressed findings (same-line
 ``# repro: ignore[rule]`` comments) and expired baseline entries are

@@ -35,10 +35,15 @@ if [[ "${SMOKE_SKIP_BENCH:-0}" == "1" ]]; then
 else
   # each bench is a regression gate: a failed assertion or a nonzero exit
   # fails the smoke run (set -e applies inside the loop body)
-  for bench in ingest transactional timeseries catalog compaction grid serve; do
+  for bench in ingest transactional timeseries catalog compaction grid serve remote_read; do
     echo "== ${bench} benchmark (quick) =="
     python "benchmarks/bench_${bench}.py" --quick
   done
+
+  # the end-to-end remote-archive walkthrough must stay runnable: it is
+  # the docs' worked example (docs/ARCHITECTURE.md links it)
+  echo "== examples/remote_archive.py =="
+  python examples/remote_archive.py
 fi
 
 echo "== smoke OK =="

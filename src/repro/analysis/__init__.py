@@ -29,6 +29,9 @@ This package machine-checks them on every push:
 ``exception-safety``
     Pools and pool-backed sessions release via ``try``/``finally`` or
     context managers; no handler swallows ``ConflictError``.
+``doc-coverage``
+    Every public module-level class/function under ``src/repro`` has a
+    docstring whose first line is a one-sentence summary.
 
 Entry point: ``python scripts/lint.py`` (see its ``--help``).  Suppress a
 finding in place with a same-line ``# repro: ignore[rule]`` comment, or

@@ -3,6 +3,7 @@
 from . import (  # noqa: F401
     dependency_policy,
     determinism,
+    doc_coverage,
     exception_safety,
     kernel_contract,
     lock_discipline,

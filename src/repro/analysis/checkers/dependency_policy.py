@@ -68,6 +68,7 @@ def iter_imports(tree: ast.AST) -> Iterator[Tuple[int, str]]:
 
 @checker(RULE)
 def check(project: Project) -> Iterator[Finding]:
+    """Flag unguarded imports outside the required-dependency policy."""
     cfg = project.config
     stdlib = set(sys.stdlib_module_names)
     allowed = stdlib | set(cfg.required_third_party) | set(cfg.self_packages)

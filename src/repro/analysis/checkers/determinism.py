@@ -89,6 +89,7 @@ def _outer_functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
 
 @checker(RULE)
 def check(project: Project) -> Iterator[Finding]:
+    """Flag nondeterminism sources reachable from the hash-feeding seeds."""
     cfg = project.config
     # unit = one outer function (nested defs are analyzed as part of it,
     # since they execute on its behalf)

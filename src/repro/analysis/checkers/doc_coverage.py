@@ -1,0 +1,82 @@
+"""Doc-coverage checker: the public API documents itself.
+
+Every *public module-level* class and function under ``src/repro`` (name
+not underscore-prefixed, in a module whose own basename is public —
+``__init__.py`` counts as public) must carry a docstring whose first
+line is a complete one-line sentence: non-empty and ending in terminal
+punctuation (``.``, ``?``, ``!`` or ``:``).  That first line is what
+``help()``, API indexes and the architecture docs surface — a missing or
+trailing-off summary is a defect like any other finding.
+
+Methods and nested definitions are out of scope on purpose: the
+module-level surface is the import surface, and gating every helper
+method would drown the signal.  Deliberate exceptions are suppressed in
+place with ``# repro: ignore[doc-coverage]`` on the ``def``/``class``
+line; the committed baseline stays empty.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..core import Finding, Project, checker
+
+RULE = "doc-coverage"
+
+# sentence-terminal punctuation accepted at the end of a summary line
+# (``:`` covers summaries that introduce an indented continuation)
+_TERMINAL = (".", "?", "!", ":")
+
+_DEF_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+
+
+def _is_public_module(rel: str) -> bool:
+    base = rel.rsplit("/", 1)[-1]
+    return base == "__init__.py" or not base.startswith("_")
+
+
+def summary_line_defect(doc: str) -> str:
+    """Why ``doc``'s first line fails as a one-sentence summary, or ``""``.
+
+    The docstring is taken as written: a leading blank line means the
+    summary is not on the first line, which both PEP 257 tooling and this
+    repo's docs rendering treat as missing.
+    """
+    lines = doc.splitlines() or [""]
+    first = lines[0].strip()
+    if not first:
+        return "docstring does not start with a summary line"
+    if not first.endswith(_TERMINAL):
+        return ("docstring summary line does not end in terminal "
+                "punctuation (. ? ! :)")
+    return ""
+
+
+@checker(RULE)
+def check(project: Project) -> Iterator[Finding]:
+    """Flag public module-level defs with missing or malformed docstrings."""
+    for mod in project.iter_src():
+        if not _is_public_module(mod.rel):
+            continue
+        for node in mod.tree.body:
+            if not isinstance(node, _DEF_NODES):
+                continue
+            if node.name.startswith("_"):
+                continue
+            kind = "class" if isinstance(node, ast.ClassDef) else "function"
+            doc = ast.get_docstring(node, clean=False)
+            if doc is None:
+                yield Finding(
+                    rule=RULE, path=mod.rel, line=node.lineno,
+                    symbol=node.name,
+                    message=f"public {kind} `{node.name}` has no docstring",
+                )
+                continue
+            defect = summary_line_defect(doc)
+            if defect:
+                yield Finding(
+                    rule=RULE, path=mod.rel, line=node.lineno,
+                    symbol=node.name,
+                    message=(f"public {kind} `{node.name}`: {defect}"),
+                )

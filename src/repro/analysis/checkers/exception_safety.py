@@ -177,6 +177,7 @@ def _swallows_conflict(handler: ast.ExceptHandler) -> bool:
 
 @checker(RULE)
 def check(project: Project) -> Iterator[Finding]:
+    """Flag resource acquisitions that can leak on an exception path."""
     for mod in project.iter_src():
         qn = qualnames(mod.tree)
         fns: List[ast.FunctionDef] = [

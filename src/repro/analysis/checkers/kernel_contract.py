@@ -115,6 +115,7 @@ def _scan_kernel_body(fn: ast.FunctionDef, rel: str,
 
 @checker(RULE)
 def check(project: Project) -> Iterator[Finding]:
+    """Flag Pallas kernels missing their oracle or interpret-mode test."""
     cfg = project.config
     ref_mod = project.module(cfg.kernels_ref)
     oracles: Set[str] = set()

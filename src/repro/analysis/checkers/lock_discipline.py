@@ -547,6 +547,7 @@ def _outer_functions(
 
 @checker(RULE)
 def check(project: Project) -> Iterator[Finding]:
+    """Flag guarded-attribute mutations outside their inferred lock."""
     for mod in project.iter_src():
         scan = _ModuleScan(mod)
         if not (scan.module_locks or any(scan.class_locks.values())):
@@ -562,7 +563,9 @@ def check(project: Project) -> Iterator[Finding]:
 
 
 def inferred_guards(project: Project) -> Dict[str, Dict[str, object]]:
-    """Every name this pass statically infers a guard for, normalized to
+    """Statically inferred guard map for the agreement gate.
+
+    Every name this pass statically infers a guard for, normalized to
     the dynamic sanitizer's naming so the agreement report can join the
     two: ``"Session._own_pool" -> {"module": ..., "locks":
     ["Session._cache_lock"]}``.

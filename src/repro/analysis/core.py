@@ -50,7 +50,9 @@ _SUPPRESS_RE = re.compile(
 
 @dataclass(frozen=True)
 class Finding:
-    """One defect: ``rule`` names the checker, ``symbol`` the enclosing
+    """One defect reported by a checker.
+
+    ``rule`` names the checker, ``symbol`` the enclosing
     function/class (qualified, best effort), ``message`` the stable
     human-readable statement of what is wrong."""
 
@@ -163,13 +165,16 @@ class ProjectConfig:
 
 @dataclass
 class AnalysisResult:
+    """Findings of one analysis run, split by suppression state."""
     findings: List[Finding] = field(default_factory=list)
     suppressed: List[Finding] = field(default_factory=list)
     rules: List[str] = field(default_factory=list)
 
 
 class Project:
-    """A parsed source tree: every ``*.py`` under ``config.src_root``
+    """A parsed source tree, AST-only (never imported).
+
+    Every ``*.py`` under ``config.src_root``
     plus the extra files the config names (e.g. the kernel test)."""
 
     def __init__(self, root, config: Optional[ProjectConfig] = None):
@@ -325,6 +330,7 @@ def diff_baseline(
 
 
 def findings_to_baseline_doc(findings: Sequence[Finding]) -> Dict[str, Any]:
+    """Serialize findings as a baseline document (line-independent)."""
     entries = sorted(
         ({k: v for k, v in f.to_doc().items() if k != "line"}
          for f in findings),
@@ -341,6 +347,7 @@ def to_json_doc(
     known: Sequence[Finding],
     expired: Sequence[Dict[str, Any]],
 ) -> Dict[str, Any]:
+    """The machine-readable report document CI uploads as an artifact."""
     new_fps = {f.fingerprint for f in new}
     return {
         "version": REPORT_VERSION,
@@ -366,6 +373,7 @@ def render_human(
     known: Sequence[Finding],
     expired: Sequence[Dict[str, Any]],
 ) -> str:
+    """Render a run's findings as the human-readable report text."""
     lines: List[str] = []
     if new:
         lines.append(f"{len(new)} new finding(s):")

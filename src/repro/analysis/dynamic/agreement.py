@@ -42,9 +42,11 @@ def _exercise_store() -> None:
     pool build (``_own_pool``), manifest/stat object cache
     (``_obj_cache``), chunk cache + byte budget + fetch counter
     (``_chunk_cache`` / ``_chunk_cache_nbytes`` / ``_fetch_count``),
+    the prefetch pipeline (``_inflight`` / ``_prefetch_hot`` /
+    ``_prefetch_hits``), the simulated-latency backend's counters,
     ``cache_stats`` reads, and ``close`` — including two concurrent
     readers so the locksets are observed under real contention."""
-    from repro.store import Repository
+    from repro.store import ObjectStore, Repository, SimulatedLatencyStore
 
     root = tempfile.mkdtemp(prefix="repro-tsan-agree-")
     try:
@@ -54,9 +56,13 @@ def _exercise_store() -> None:
                         chunks=(4,)).write_full(np.arange(8, dtype="float32"))
         tx.commit("seed")
 
-        s = repo.readonly_session(read_workers=2)
+        # reopen over the simulated-latency backend (sleepless) so its
+        # request counters and the prefetch pipeline are both observed
+        sim = SimulatedLatencyStore(ObjectStore(f"{root}/repo"), sleep=False)
+        s = Repository.open(sim).readonly_session(read_workers=2)
         try:
             s.reader_pool()
+            s.prefetch(["x"], wait=True)    # _inflight / _prefetch_hot
 
             def read() -> None:
                 np.testing.assert_array_equal(
@@ -69,7 +75,9 @@ def _exercise_store() -> None:
             for t in threads:
                 t.join()
             s.array("x").read()     # warm-cache hit path
-            s.cache_stats()
+            s.cache_stats()         # includes prefetch-hit counters
+            sim.stats()
+            sim.reset_stats()
         finally:
             s.close()
     finally:

@@ -40,6 +40,7 @@ VC = Dict[int, int]
 
 
 def vc_join(into: VC, other: Optional[VC]) -> None:
+    """In-place element-wise max of vector clock ``other`` into ``into``."""
     if not other:
         return
     for t, c in other.items():
@@ -48,6 +49,7 @@ def vc_join(into: VC, other: Optional[VC]) -> None:
 
 
 def vc_copy(vc: VC) -> VC:
+    """Defensive copy of a vector clock."""
     return dict(vc)
 
 
@@ -122,7 +124,9 @@ class _ThreadState:
 
 
 class RaceDetector:
-    """Global event sink.  Thread-safe behind one internal mutex (the
+    """Global event sink.
+
+    Thread-safe behind one internal mutex (the
     mutex orders detector bookkeeping only — it contributes no
     happens-before edges to the program under test)."""
 

@@ -128,7 +128,9 @@ rt = Runtime()
 # -- traced locks -----------------------------------------------------------
 
 class TracedLock:
-    """Drop-in ``threading.Lock`` that reports acquire/release to the
+    """Traced drop-in replacement for ``threading.Lock``.
+
+    Reports acquire/release to the
     detector and, under an active schedule explorer, becomes a
     *cooperative* lock (manual owner state, scheduler-arbitrated) so the
     explorer fully controls interleaving."""
@@ -182,6 +184,7 @@ class TracedLock:
 
 
 class TracedRLock(TracedLock):
+    """Reentrant variant of :class:`TracedLock`."""
     _reentrant = True
 
     def __init__(self, name: str) -> None:
@@ -214,7 +217,9 @@ class TracedRLock(TracedLock):
 
 
 def new_lock(name: str):
-    """A mutex for ``name`` — plain ``threading.Lock`` when tracing is
+    """Lock factory for a named guard.
+
+    A mutex for ``name`` — plain ``threading.Lock`` when tracing is
     off (zero cost), a :class:`TracedLock` when on.  The name should be
     the guard's identity as the static ``lock-discipline`` pass sees it,
     e.g. ``"Session._cache_lock"`` — the agreement report joins on it."""
@@ -224,6 +229,7 @@ def new_lock(name: str):
 
 
 def new_rlock(name: str):
+    """Reentrant counterpart of :func:`new_lock`."""
     if not rt.enabled:
         return threading.RLock()
     return TracedRLock(name)
@@ -232,8 +238,10 @@ def new_rlock(name: str):
 # -- traced pools -----------------------------------------------------------
 
 class TracedFuture(Future):
-    """A real ``concurrent.futures.Future`` (so ``as_completed`` / ``wait``
-    keep working) that applies the task-end -> result() join edge."""
+    """Future subclass applying the task-end -> ``result()`` join edge.
+
+    A real ``concurrent.futures.Future``, so ``as_completed`` / ``wait``
+    keep working."""
 
     def __init__(self) -> None:
         super().__init__()
@@ -265,8 +273,10 @@ class TracedFuture(Future):
 
 
 class TracedPool:
-    """Wrapper around an executor adding fork/join edges (and, under an
-    active explorer, scheduler registration for the worker threads)."""
+    """Executor wrapper adding fork/join edges.
+
+    Under an active explorer it also registers the worker threads with
+    the scheduler."""
 
     def __init__(self, inner) -> None:
         self._inner = inner
@@ -335,8 +345,9 @@ class TracedPool:
 
 
 def wrap_pool(pool):
-    """Route an executor's ``submit``/``map`` through the tracing layer;
-    returns ``pool`` untouched when tracing is off."""
+    """Route an executor's ``submit``/``map`` through the tracing layer.
+
+    Returns ``pool`` untouched when tracing is off."""
     if not rt.enabled or isinstance(pool, TracedPool):
         return pool
     return TracedPool(pool)
@@ -356,7 +367,9 @@ def _obj_loc(obj, attr: str) -> str:
 
 
 def note_read(obj, attr: str, owner: str = "") -> None:
-    """Record a read of shared state ``obj.attr``.  ``owner`` is the
+    """Record a read of shared state ``obj.attr``.
+
+    ``owner`` is the
     class-level aggregation key the agreement report joins on, e.g.
     ``"Session"`` — pass the class that *defines* the attribute (a
     ``Transaction`` is still ``"Session"`` for ``_chunk_cache``)."""
@@ -372,6 +385,7 @@ def note_read(obj, attr: str, owner: str = "") -> None:
 
 
 def note_write(obj, attr: str, owner: str = "") -> None:
+    """Record a write of shared state ``obj.attr``."""
     if not rt.enabled:
         return
     sch = rt.scheduler
@@ -386,7 +400,9 @@ def note_write(obj, attr: str, owner: str = "") -> None:
 # -- object-store atomic hooks ----------------------------------------------
 
 def schedule_point(desc: str) -> None:
-    """A pure scheduling decision point (no detector event) — placed at
+    """A pure scheduling decision point (no detector event).
+
+    Placed at
     the *entry* of read-modify-write primitives so the explorer can
     interleave a competitor between a caller's read and its swap."""
     if not rt.enabled:

@@ -163,7 +163,9 @@ def compact_vs_append() -> Scenario:
 
 
 def close_vs_first_read() -> Scenario:
-    """``Session.close()`` races the first reader-pool build — the live
+    """``Session.close()`` races the first reader-pool build.
+
+    The live
     code's locked pool swap must leave no unordered access (the pre-fix
     shape of this is the ``session-close-pool-leak`` seeded case)."""
 
@@ -193,8 +195,10 @@ def close_vs_first_read() -> Scenario:
 
 
 def catalog_register_cas_retry() -> Scenario:
-    """Two ``register_repository`` upserts merge through the catalog
-    document CAS loop; neither registration may be lost."""
+    """Two ``register_repository`` upserts race through the CAS loop.
+
+    Both merge through the catalog document compare-and-swap; neither
+    registration may be lost."""
 
     def setup():
         from repro.catalog import Catalog
@@ -247,7 +251,9 @@ CORPUS: Dict[str, Callable[[], Scenario]] = {
 
 def sweep(names: Optional[List[str]] = None, *, depth: int = 6,
           max_schedules: int = 24) -> Dict[str, Optional[RunResult]]:
-    """Explore each live scenario; a non-None value is a real defect in
+    """Explore each live scenario under the schedule explorer.
+
+    A non-None value is a real defect in
     the live tree (its ``schedule`` replays it)."""
     out: Dict[str, Optional[RunResult]] = {}
     for name in (names or sorted(CORPUS)):

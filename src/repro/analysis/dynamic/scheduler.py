@@ -85,6 +85,7 @@ class Scenario:
 
 @dataclass
 class RunResult:
+    """Outcome of one explored schedule (replayable token string)."""
     scenario: str
     schedule: str                              # replayable token string
     choices: List[Tuple[str, Tuple[str, ...]]] = field(default_factory=list)
@@ -460,7 +461,9 @@ def find_defect(
     seeds: Sequence[int] = (0, 1, 2, 3),
     explorer: Optional[Explorer] = None,
 ) -> Optional[RunResult]:
-    """Deterministic defect search: exhaustive DFS over the first
+    """Deterministic defect search over schedules.
+
+    Exhaustive DFS over the first
     ``depth`` scheduling decisions (bounded by ``max_schedules``), then
     seeded-random schedules.  Returns the first failing
     :class:`RunResult` (its ``schedule`` replays the bug) or None."""
@@ -499,8 +502,10 @@ def verify_clean(
     seeds: Sequence[int] = (0, 1),
     explorer: Optional[Explorer] = None,
 ) -> Optional[RunResult]:
-    """Like :func:`find_defect` with a smaller budget — the green-path
-    sweep ``scripts/lint.py --dynamic`` runs over the live scenarios."""
+    """Green-path verification with a smaller search budget.
+
+    Like :func:`find_defect`; this is the sweep ``scripts/lint.py
+    --dynamic`` runs over the live scenarios."""
     return find_defect(make_scenario, depth=depth,
                        max_schedules=max_schedules, seeds=seeds,
                        explorer=explorer)

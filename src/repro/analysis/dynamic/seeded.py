@@ -393,6 +393,7 @@ def _coalesce_scenario(buggy: bool) -> Scenario:
 
 @dataclass
 class SeededCase:
+    """One seeded defect: a buggy scenario plus its fixed counterpart."""
     name: str
     description: str
     buggy: Callable[[], Scenario]
@@ -438,7 +439,9 @@ CASES: Dict[str, SeededCase] = {
 
 
 def run_self_check() -> Dict[str, Dict[str, object]]:
-    """Explore every case both ways.  A healthy sanitizer finds each
+    """Explore every case both ways.
+
+    A healthy sanitizer finds each
     buggy variant (with a replayable schedule) and passes each fixed
     one; anything else is reported as a self-check failure."""
     out: Dict[str, Dict[str, object]] = {}

@@ -465,6 +465,10 @@ class Catalog:
     def open_session(self, repo_id: str, *,
                      entry: Optional[CatalogEntry] = None, **session_kw):
         entry = entry if entry is not None else self.entry(repo_id)
+        # the entry's recorded head doubles as a snapshot hint: when it is
+        # still current the repository opens in one coalesced round trip
+        if entry.snapshot_id and "snapshot_id" not in session_kw:
+            session_kw.setdefault("snapshot_hint", entry.snapshot_id)
         return self.open_repository(repo_id, entry=entry).readonly_session(
             branch=entry.branch, **session_kw
         )

@@ -39,7 +39,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..store.zarrlite import ScanStats
+from ..store.zarrlite import ScanStats, _stats_prune_cid
 
 # ---------------------------------------------------------------------------
 # Predicate expressions
@@ -48,38 +48,45 @@ from ..store.zarrlite import ScanStats
 
 @dataclass(frozen=True)
 class TimeBetween:
+    """Predicate: scan time within ``[t0, t1)``."""
     t0: float
     t1: float
 
 
 @dataclass(frozen=True)
 class Moment:
+    """Predicate: the scan carries one of ``names``."""
     names: Tuple[str, ...]
 
 
 @dataclass(frozen=True)
 class Elevation:
+    """Predicate: sweep elevation within ``tol`` degrees of ``deg``."""
     deg: float
     tol: float = 0.25
 
 
 @dataclass(frozen=True)
 class Sweep:
+    """Predicate: restrict to sweep ``index``."""
     index: int
 
 
 @dataclass(frozen=True)
 class Vcp:
+    """Predicate: restrict to volume coverage pattern ``name``."""
     name: str
 
 
 @dataclass(frozen=True)
 class Site:
+    """Predicate: restrict to the given site ids."""
     ids: Tuple[str, ...]
 
 
 @dataclass(frozen=True)
 class Box:
+    """Predicate: site location inside a lat/lon box."""
     lat_min: float
     lat_max: float
     lon_min: float
@@ -88,11 +95,13 @@ class Box:
 
 @dataclass(frozen=True)
 class ValueGt:
+    """Predicate: keep chunks that may contain values > ``threshold``."""
     threshold: float
 
 
 @dataclass(frozen=True)
 class ValueLt:
+    """Predicate: keep chunks that may contain values < ``threshold``."""
     threshold: float
 
 
@@ -184,6 +193,7 @@ class Target:
 
 @dataclass
 class QueryPlan:
+    """A planned query: targets plus the pushed-down value/time filters."""
     targets: List[Target]
     time_window: Optional[Tuple[float, float]] = None
     value_gt: Optional[float] = None
@@ -314,10 +324,13 @@ def resolve_time_window(session, time_path: str,
     workflows) pass ``allow_mask=False`` and get a clear error instead
     of silently processing out-of-window scans.
     """
-    t = session.array(time_path).read()
-    n = int(t.size)
+    arr = session.array(time_path)
     if window is None:
-        return 0, n, None
+        # no predicate on time: the covering slice is the whole axis,
+        # known from array metadata alone — no chunk read, no round trip
+        return 0, int(arr.meta.shape[0]), None
+    t = arr.read()
+    n = int(t.size)
     sel = (t >= window[0]) & (t <= window[1])
     idx = np.nonzero(sel)[0]
     if idx.size == 0:
@@ -347,6 +360,7 @@ class TargetScan:
 
 @dataclass
 class QueryResult:
+    """Executed query output: matching scans plus read statistics."""
     scans: List[TargetScan] = field(default_factory=list)
 
     @property
@@ -400,23 +414,69 @@ def execute_target(session, target: Target, plan_: QueryPlan,
     return TargetScan(target, (i0, i1), coords, values, res.stats)
 
 
+def prefetch_plan(session, targets: List[Target],
+                  windows: Dict[str, Tuple[int, int, Optional[np.ndarray]]],
+                  plan_: QueryPlan, *, prune: bool = True):
+    """Issue a plan's chunk list as one asynchronous prefetch.
+
+    This is the planner → prefetcher handoff: after the time windows are
+    resolved, the exact chunk set every target's scan will read is known
+    *before* any scan starts, so it can stream in (batched, shard-
+    coalesced) while earlier targets compute.  With ``prune`` the
+    sidecar-pruned chunks are excluded — the prefetcher fetches precisely
+    what the scans would, keeping the gated fetch accounting identical;
+    the blind baseline (``prune=False``) prefetches every chunk of every
+    target array, matching its read-everything semantics.  Returns the
+    :class:`~repro.store.PrefetchReport` (unawaited — demand reads
+    synchronize on in-flight chunks).
+    """
+    items = []
+    session._prefetch_manifests(
+        [t.array_path for t in targets], stats=prune)
+    for target in targets:
+        if not session.has_array(target.array_path):
+            continue
+        if not prune:
+            items.append(target.array_path)  # blind scans read every chunk
+            continue
+        i0, i1, _ = windows[target.time_path]
+        if i1 <= i0:
+            continue
+        arr = session.array(target.array_path)
+        sels = [slice(i0, i1)] + [slice(None) for _ in arr.shape[1:]]
+        cids = [
+            cid for cid in arr.meta.grid.chunks_for_selection(sels)
+            if not _stats_prune_cid(session, target.array_path, cid,
+                                    plan_.value_gt, plan_.value_lt)
+        ]
+        items.append((target.array_path, cids))
+    return session.prefetch(items, wait=False)
+
+
 def run_repo_targets(session, targets: List[Target], plan_: QueryPlan,
                      *, prune: bool = True) -> List[TargetScan]:
-    """Execute one repository's targets on an open session, resolving
-    each VCP's time window exactly once.  The single inner loop shared by
+    """Execute one repository's targets on an open session.
+
+    Each VCP's time window is resolved exactly once.  The single inner loop shared by
     :func:`execute` and :func:`repro.catalog.federation.federated_scan`
-    (so sequential and federated results cannot diverge)."""
+    (so sequential and federated results cannot diverge).
+
+    On read-only sessions the loop is fronted by the prefetch handoff:
+    every time axis is warmed in one batched round trip, windows resolve
+    against cache, and :func:`prefetch_plan` streams the scans' chunk
+    list in the background.
+    """
     windows: Dict[str, Tuple[int, int, Optional[np.ndarray]]] = {}
-    out = []
-    for target in targets:
-        tb = windows.get(target.time_path)
-        if tb is None:
-            tb = resolve_time_window(session, target.time_path,
-                                     plan_.time_window)
-            windows[target.time_path] = tb
-        out.append(execute_target(session, target, plan_, prune=prune,
-                                  time_bounds=tb))
-    return out
+    time_paths = list(dict.fromkeys(t.time_path for t in targets))
+    session.prefetch(time_paths)  # one round trip for every time axis
+    for tp in time_paths:
+        windows[tp] = resolve_time_window(session, tp, plan_.time_window)
+    prefetch_plan(session, targets, windows, plan_, prune=prune)
+    return [
+        execute_target(session, target, plan_, prune=prune,
+                       time_bounds=windows[target.time_path])
+        for target in targets
+    ]
 
 
 def execute(catalog, plan_: QueryPlan, *, prune: bool = True,
@@ -446,7 +506,9 @@ def execute(catalog, plan_: QueryPlan, *, prune: bool = True,
 
 def query(catalog, *predicates, repos: Optional[Sequence[str]] = None,
           prune: bool = True, read_workers: int = 1) -> QueryResult:
-    """Plan + execute in one call (single-threaded; see
-    :func:`repro.catalog.federation.federated_scan` for the fan-out)."""
+    """Plan + execute in one call.
+
+    Single-threaded; see
+    :func:`repro.catalog.federation.federated_scan` for the fan-out."""
     return execute(catalog, plan(catalog, *predicates, repos=repos),
                    prune=prune, read_workers=read_workers)

@@ -36,6 +36,7 @@ EXTRA_ARCHS: Dict[str, ModelConfig] = {radar_lm_100m.name: radar_lm_100m}
 
 
 def get_any_config(name: str) -> ModelConfig:
+    """Look up a config across production and extra architectures."""
     if name in ARCHS:
         return ARCHS[name]
     if name in EXTRA_ARCHS:
@@ -45,6 +46,7 @@ def get_any_config(name: str) -> ModelConfig:
 
 
 def get_config(name: str) -> ModelConfig:
+    """Look up a production architecture config by name."""
     if name not in ARCHS:
         raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
     return ARCHS[name]

@@ -15,6 +15,7 @@ from typing import Dict, Optional, Tuple
 
 @dataclass(frozen=True)
 class MoEConfig:
+    """Mixture-of-experts block hyperparameters."""
     n_experts: int                  # routed experts
     top_k: int
     d_ff_expert: int
@@ -29,6 +30,7 @@ class MoEConfig:
 
 @dataclass(frozen=True)
 class MLAConfig:
+    """Multi-head latent attention hyperparameters."""
     kv_lora_rank: int = 512
     qk_rope_head_dim: int = 64
     qk_nope_head_dim: int = 128
@@ -37,6 +39,7 @@ class MLAConfig:
 
 @dataclass(frozen=True)
 class SSMConfig:
+    """Mamba-2 state-space block hyperparameters."""
     d_state: int = 64               # N
     head_dim: int = 64              # P
     expand: int = 2                 # d_inner = expand * d_model
@@ -47,6 +50,7 @@ class SSMConfig:
 
 @dataclass(frozen=True)
 class XLSTMConfig:
+    """xLSTM block hyperparameters."""
     slstm_every: int = 8            # every 8th block is sLSTM (7:1 ratio)
     mlstm_proj_factor: float = 1.5
     slstm_proj_factor: float = 4.0 / 3.0
@@ -56,6 +60,7 @@ class XLSTMConfig:
 
 @dataclass(frozen=True)
 class ModelConfig:
+    """Top-level architecture configuration for one model family."""
     name: str
     family: str                     # dense|moe|ssm|hybrid|vlm|audio
     n_layers: int
@@ -136,6 +141,7 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class ShapeConfig:
+    """One workload shape point: sequence length, batch, and kind."""
     name: str
     seq_len: int
     global_batch: int

@@ -116,6 +116,7 @@ VCPS: Dict[str, VCPDef] = {
 
 @dataclass(frozen=True)
 class RadarSite:
+    """A radar site's identity and geographic location."""
     site_id: str
     latitude: float
     longitude: float
@@ -143,10 +144,12 @@ SITES: Dict[str, RadarSite] = {
 
 
 def sweep_group_name(i: int) -> str:
+    """Canonical FM301 group name for sweep index ``i``."""
     return f"sweep_{i}"
 
 
 def sweep_attrs(vcp: VCPDef, sweep_idx: int) -> Dict[str, object]:
+    """FM301 attribute document for one sweep of ``vcp``."""
     return {
         "sweep_number": sweep_idx,
         "fixed_angle": vcp.elevations[sweep_idx],

@@ -28,6 +28,7 @@ DBZ_MIN, DBZ_MAX = -32.0, 64.0
 
 @dataclass(frozen=True)
 class TokenizerSpec:
+    """Reflectivity-to-token quantization spec (dBZ bins plus specials)."""
     vocab_size: int = 256            # dBZ bins + specials
     n_special: int = 2               # 0 = PAD, 1 = BOS
 

@@ -34,6 +34,7 @@ Params = Any
 # ---------------------------------------------------------------------------
 
 def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
+    """Symmetric per-tensor int8 quantization."""
     xf = x.astype(jnp.float32)
     scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
     return {"q": jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8),
@@ -41,10 +42,12 @@ def quantize_int8(x: jax.Array) -> Dict[str, jax.Array]:
 
 
 def dequantize_int8(enc: Dict[str, jax.Array]) -> jax.Array:
+    """Inverse of :func:`quantize_int8`."""
     return enc["q"].astype(jnp.float32) * enc["scale"]
 
 
 def encode(x: jax.Array, codec: str):
+    """Compress an array with the named gradient codec."""
     if codec == "int8":
         return quantize_int8(x)
     if codec == "bf16":
@@ -55,6 +58,7 @@ def encode(x: jax.Array, codec: str):
 
 
 def decode(enc, codec: str) -> jax.Array:
+    """Invert :func:`encode` back to a dense array."""
     if codec == "int8":
         return dequantize_int8(enc)
     return jnp.asarray(enc, jnp.float32) if codec == "bf16" else enc
@@ -65,6 +69,7 @@ def decode(enc, codec: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def init_error_feedback(params: Params) -> Params:
+    """Zero error-feedback residuals shaped like ``params``."""
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
@@ -118,7 +123,9 @@ def compressed_psum(x: jax.Array, axis_name: str, codec: str = "int8"):
 
 def make_crosspod_grad_transform(mesh, codec: str = "int8",
                                  mean: bool = True):
-    """A ``grad_transform`` for ``make_train_step``: compress-decompress at
+    """A ``grad_transform`` for ``make_train_step``.
+
+    Compress-decompress at
     the pod boundary.  Under GSPMD the re-quantized values are what the
     pod-axis all-reduce transports; the decode happens after."""
     if "pod" not in mesh.axis_names or codec == "none":

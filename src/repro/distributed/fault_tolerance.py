@@ -97,6 +97,7 @@ class StragglerDetector:
 
 @dataclass(frozen=True)
 class MeshPlan:
+    """A device-mesh layout, possibly degraded by dropped hosts."""
     shape: Tuple[int, ...]
     axes: Tuple[str, ...]
     n_devices: int
@@ -148,6 +149,7 @@ def plan_elastic_mesh(
 
 @dataclass
 class RecoveryAction:
+    """One planned response to a host failure."""
     kind: str                   # "none" | "evict" | "restart" | "rescale"
     hosts: Tuple[str, ...] = ()
     mesh: Optional[MeshPlan] = None

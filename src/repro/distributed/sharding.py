@@ -166,7 +166,9 @@ _CACHE_DIMS = {
 
 
 def cache_shardings(mesh: Mesh, cache_specs: Any) -> Any:
-    """Serving caches (grouped layout: leaves carry a leading stacked-reps
+    """Shardings for the serving caches.
+
+    Grouped layout (leaves carry a leading stacked-reps
     dim): batch over the data axes; sequence over ``model`` — the
     flash-decode layout.  For B=1 long-context cells the sequence dim
     takes the data axes as well."""
@@ -208,6 +210,7 @@ def cache_shardings(mesh: Mesh, cache_specs: Any) -> Any:
 
 
 def replicated(mesh: Mesh, tree: Any) -> Any:
+    """Fully replicated shardings for every leaf of ``tree``."""
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
 
 

@@ -37,6 +37,7 @@ def beam_height_m(range_m: np.ndarray, elev_deg: float, alt_m: float = 0.0):
 
 @dataclass
 class Cell:
+    """One synthetic storm cell (position, motion, intensity, extent)."""
     x0: float          # initial position east, m
     y0: float          # initial position north, m
     vx: float          # advection, m/s

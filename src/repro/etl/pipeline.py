@@ -90,6 +90,7 @@ def generate_raw_archive(
 
 @dataclass
 class IngestReport:
+    """Counts, snapshot ids and stage timings from one ingest run."""
     n_files: int = 0
     n_volumes: int = 0
     n_commits: int = 0

@@ -95,6 +95,7 @@ def flash_attention_pallas(
     bk: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    """Pallas flash-attention forward kernel (GQA, optional causal)."""
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     group = Hq // Hkv

@@ -64,6 +64,7 @@ def grid_map_pallas(
     bc: int = 1024,
     interpret: bool = False,
 ) -> jax.Array:
+    """Pallas gather-accumulate kernel mapping polar gates to grid cells."""
     T, G = field.shape
     C, k = gate_idx.shape
     if T == 0 or C == 0:

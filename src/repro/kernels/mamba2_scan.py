@@ -81,6 +81,7 @@ def mamba2_scan_pallas(
     cs: int = 128,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
+    """Pallas chunked Mamba-2 selective-scan kernel."""
     Bsz, Lseq, H, P = x.shape
     N = Bmat.shape[-1]
     cs = min(cs, Lseq)

@@ -45,6 +45,7 @@ def qvp_reduce(
     min_valid_fraction: float = 0.1,
     mode: str = "auto",
 ) -> jax.Array:
+    """Quality-masked azimuthal QVP reduction (kernel or reference)."""
     use_kernel, interpret = _resolve(mode)
     if not use_kernel:
         return ref.qvp_reduce(field, quality, quality_min=quality_min,
@@ -66,6 +67,7 @@ def grid_map(
     bc: int = 1024,
     mode: str = "auto",
 ) -> jax.Array:
+    """Polar-to-grid gather-accumulate (kernel or reference)."""
     use_kernel, interpret = _resolve(mode)
     if not use_kernel:
         return ref.grid_map(field, gate_idx, weights)
@@ -83,6 +85,7 @@ def zr_accum(
     dbz_max: float = 53.0,
     mode: str = "auto",
 ) -> jax.Array:
+    """Z–R rainfall accumulation (kernel or reference)."""
     use_kernel, interpret = _resolve(mode)
     if not use_kernel:
         return ref.zr_accum(dbz, dt_s, a=a, b=b, dbz_min=dbz_min,
@@ -100,6 +103,7 @@ def flash_attention(
     scale: Optional[float] = None,
     mode: str = "auto",
 ) -> jax.Array:
+    """Flash attention (kernel or reference)."""
     use_kernel, interpret = _resolve(mode)
     if not use_kernel:
         return ref.flash_attention(q, k, v, causal=causal, scale=scale)
@@ -117,6 +121,7 @@ def mamba2_scan(
     h0: Optional[jax.Array] = None,
     mode: str = "auto",
 ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 selective scan (kernel or reference)."""
     use_kernel, interpret = _resolve(mode)
     if not use_kernel or h0 is not None:
         # the kernel path assumes zero initial state (training/prefill);

@@ -50,6 +50,7 @@ def qvp_reduce_pallas(
     br: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
+    """Pallas QVP reduction kernel (quality-masked azimuthal mean)."""
     T, A, R = field.shape
     bt = min(bt, T)
     br = min(br, R)

@@ -54,6 +54,7 @@ def zr_accum_pallas(
     br: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
+    """Pallas Z–R accumulation kernel."""
     T, A, R = dbz.shape
     bt, ba, br = min(bt, T), min(ba, A), min(br, R)
     Tp, Ap, Rp = (-(-T // bt) * bt, -(-A // ba) * ba, -(-R // br) * br)

@@ -229,6 +229,7 @@ class CostTerms:
 
 
 def cost_from_compiled(compiled, n_devices: int) -> CostTerms:
+    """Extract cost terms from a compiled XLA executable."""
     ca = compiled.cost_analysis()
     txt = compiled.as_text()
     per = collective_bytes_from_text(txt)
@@ -375,8 +376,9 @@ def probed_cost(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
                 shape: ShapeConfig, *, ocfg: Optional[AdamWConfig] = None,
                 attn_bytes_impl: str = "blocked",
                 ) -> Tuple[CostTerms, Dict[str, CostTerms]]:
-    """Reassembled global cost for a train/prefill cell; returns
-    (total, per-part breakdown).
+    """Reassembled global cost for a train/prefill cell.
+
+    Returns (total, per-part breakdown).
 
     ``attn_bytes_impl`` selects the byte model for attention in the memory
     probe: ``"blocked"`` (the pure-jnp runtime — f32 score blocks hit HBM)

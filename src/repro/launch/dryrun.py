@@ -71,6 +71,7 @@ def run_cell(arch: str, shape: str, *, meshes=("pod", "multipod"),
              do_cost: bool = True, scan_layers: bool = True,
              n_microbatches: int = 0, attn_impl: str = None,
              kernel_bytes: bool = False) -> dict:
+    """Build, lower and cost one (arch, shape) cell across meshes."""
     out = {"arch": arch, "shape": shape, "status": "ok", "meshes": {},
            "attn_impl": attn_impl, "kernel_bytes": kernel_bytes}
     kind = SHAPES[shape].kind
@@ -137,6 +138,7 @@ def run_cell(arch: str, shape: str, *, meshes=("pod", "multipod"),
 
 
 def main() -> None:
+    """CLI entry point; see the module docstring."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -25,6 +25,7 @@ from repro.store.object_store import ObjectStore
 
 
 def main() -> None:
+    """CLI entry point; see the module docstring."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="radar-lm-100m")
     ap.add_argument("--ckpt", default=None)

@@ -35,6 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 @dataclass
 class CellProgram:
+    """A built cell: the jitted step plus its static metadata."""
     name: str
     kind: str
     fn: Callable                     # jit-able python callable
@@ -73,6 +74,7 @@ def build_cell(
     ocfg: Optional[AdamWConfig] = None,
     attn_impl: Optional[str] = None,
 ) -> CellProgram:
+    """Assemble the training-step program for one (arch, shape) cell."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     kind = shape.kind
@@ -95,7 +97,9 @@ def build_cell(
 
 def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh,
                       *, residual_budget_gib: float = 4.0) -> int:
-    """Smallest power-of-two microbatch count keeping the per-device
+    """Pick the cell's microbatch count.
+
+    The smallest power-of-two count keeping the per-device
     remat-stored residual stack under budget (B/n must stay divisible by
     the data-parallel degree so the batch dim shards)."""
     from .mesh import fsdp_axes
@@ -216,6 +220,7 @@ def _build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh,
 # ---------------------------------------------------------------------------
 
 def lower_cell(prog: CellProgram, mesh):
+    """Lower a cell's jitted step for ``mesh`` without executing it."""
     jitted = jax.jit(
         prog.fn,
         in_shardings=prog.in_shardings,

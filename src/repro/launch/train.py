@@ -43,6 +43,7 @@ from repro.train import (AdamWConfig, CheckpointManager, TrainState,
 
 
 def main() -> None:
+    """CLI entry point; see the module docstring."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="radar-lm-100m")
     ap.add_argument("--steps", type=int, default=100)

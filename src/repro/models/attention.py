@@ -180,6 +180,7 @@ def _kernel_proxy_core(q, k, v, *, scale: float, kv_len=None) -> jax.Array:
 
 def attention_core(q, k, v, *, causal: bool, scale: Optional[float] = None,
                    impl: str = "blocked", kv_len=None) -> jax.Array:
+    """Masked scaled-dot-product attention over projected q/k/v."""
     scale = scale if scale is not None else 1.0 / (q.shape[-1] ** 0.5)
     if impl == "kernel_proxy":
         return _kernel_proxy_core(q, k, v, scale=scale, kv_len=kv_len)
@@ -206,6 +207,7 @@ def attention_core(q, k, v, *, causal: bool, scale: Optional[float] = None,
 # ---------------------------------------------------------------------------
 
 def init_attn(cfg: ModelConfig, key, dtype) -> Params:
+    """Parameters for one GQA attention block."""
     D, Hq, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     kq, kk, kv, ko = jax.random.split(key, 4)
     p = {
@@ -222,6 +224,7 @@ def init_attn(cfg: ModelConfig, key, dtype) -> Params:
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    """Zeroed KV cache for incremental decoding."""
     Hkv, dh = cfg.n_kv_heads, cfg.head_dim
     return {
         "k": jnp.zeros((batch, Hkv, max_len, dh), dtype=dtype),
@@ -239,6 +242,7 @@ def apply_attn(
     cache_index: Optional[jax.Array] = None,   # scalar: tokens already cached
     impl: str = "blocked",
 ) -> Tuple[jax.Array, Optional[Params]]:
+    """One GQA attention block, optionally through the KV cache."""
     B, S, D = x.shape
     Hq, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,de->bse", x, p["wq"])
@@ -280,6 +284,7 @@ def apply_attn(
 # ---------------------------------------------------------------------------
 
 def init_mla(cfg: ModelConfig, key, dtype) -> Params:
+    """Parameters for one multi-head latent attention block."""
     m: MLAConfig = cfg.mla
     D, H = cfg.d_model, cfg.n_heads
     qd = m.qk_nope_head_dim + m.qk_rope_head_dim
@@ -294,6 +299,7 @@ def init_mla(cfg: ModelConfig, key, dtype) -> Params:
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    """Zeroed latent cache for MLA decoding."""
     m: MLAConfig = cfg.mla
     # the whole point: cache rank+rope per token, shared across heads
     return {
@@ -312,6 +318,7 @@ def apply_mla(
     cache_index: Optional[jax.Array] = None,
     impl: str = "blocked",
 ) -> Tuple[jax.Array, Optional[Params]]:
+    """One MLA block, optionally through the latent cache."""
     m: MLAConfig = cfg.mla
     B, S, D = x.shape
     H = cfg.n_heads

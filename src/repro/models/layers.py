@@ -23,11 +23,13 @@ Params = Dict[str, jax.Array]
 # ---------------------------------------------------------------------------
 
 def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    """Initialize a dense kernel of shape ``(d_in, d_out)``."""
     scale = (2.0 / (d_in + d_out)) ** 0.5
     return scale * jax.random.normal(key, (d_in, d_out), dtype=dtype)
 
 
 def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    """Initialize an embedding table of shape ``(vocab, d)``."""
     return jax.random.normal(key, (vocab, d), dtype=dtype)
 
 
@@ -36,6 +38,7 @@ def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def init_norm(cfg: ModelConfig, d: int, dtype) -> Params:
+    """Parameters for one normalization site."""
     p = {"scale": jnp.ones((d,), dtype=dtype)}
     if cfg.norm == "layernorm":
         p["bias"] = jnp.zeros((d,), dtype=dtype)
@@ -43,6 +46,7 @@ def init_norm(cfg: ModelConfig, d: int, dtype) -> Params:
 
 
 def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Apply the configured normalization."""
     xf = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
         mu = jnp.mean(xf, axis=-1, keepdims=True)
@@ -118,6 +122,7 @@ def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
 # ---------------------------------------------------------------------------
 
 def init_mlp(cfg: ModelConfig, key, d: int, d_ff: int, dtype) -> Params:
+    """Parameters for one (gated) MLP block."""
     k1, k2, k3 = jax.random.split(key, 3)
     if cfg.mlp == "swiglu":
         return {
@@ -134,6 +139,7 @@ def init_mlp(cfg: ModelConfig, key, d: int, d_ff: int, dtype) -> Params:
 
 
 def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """One MLP block forward pass."""
     if cfg.mlp == "swiglu":
         g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
         u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
@@ -148,6 +154,7 @@ def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def init_embeddings(cfg: ModelConfig, key, dtype) -> Params:
+    """Token embedding and output-head parameters."""
     ks = jax.random.split(key, cfg.n_codebooks + 1)
     if cfg.n_codebooks > 1:
         emb = jnp.stack([
@@ -185,7 +192,9 @@ def embed_tokens(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
 
 
 def constrain(x: jax.Array, *axes) -> jax.Array:
-    """`with_sharding_constraint` against the ambient mesh, silently
+    """`with_sharding_constraint` against the ambient mesh.
+
+    Silently
     dropping (a) axes the mesh does not have and (b) axes whose size does
     not divide the dimension (no padded shards; no-op on unmeshed runs)."""
     mesh = get_abstract_mesh()

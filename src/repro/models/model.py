@@ -31,6 +31,7 @@ Params = Dict[str, Any]
 # ---------------------------------------------------------------------------
 
 def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    """Initialize the full parameter tree for ``cfg``."""
     groups = layer_groups(cfg)
     k_emb, k_groups, k_shared = jax.random.split(key, 3)
     params: Params = {
@@ -55,6 +56,7 @@ def param_specs(cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 
 def count_params(cfg: ModelConfig) -> int:
+    """Analytic parameter count for ``cfg`` (no allocation)."""
     import math
     specs = param_specs(cfg)
     return sum(math.prod(l.shape) for l in jax.tree.leaves(specs))
@@ -164,6 +166,7 @@ def loss_fn(
     attn_impl: str = "blocked",
     slstm_cost_proxy: bool = False,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token cross-entropy over one batch."""
     logits, aux = forward(cfg, pcfg, params, batch, attn_impl=attn_impl,
                           slstm_cost_proxy=slstm_cost_proxy)
     targets = batch["targets"]
@@ -232,7 +235,9 @@ def decode_step(
     *,
     attn_impl: str = "blocked",
 ) -> Tuple[jax.Array, List[List[Params]]]:
-    """S new tokens (S=1 decode, S>1 chunked prefill) across the whole
+    """Decode S new tokens through the whole stack.
+
+    S new tokens (S=1 decode, S>1 chunked prefill) across the whole
     stack with cache updates; layers scanned per group
     (``pcfg.scan_layers=False`` unrolls — the costing path)."""
     compute_dtype = jnp.dtype(pcfg.compute_dtype)

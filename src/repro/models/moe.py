@@ -35,6 +35,7 @@ Params = Dict[str, jax.Array]
 
 
 def init_moe(cfg: ModelConfig, key, dtype) -> Params:
+    """Parameters for one mixture-of-experts block."""
     m: MoEConfig = cfg.moe
     D, E, F = cfg.d_model, m.n_experts, m.d_ff_expert
     kr, kg, ku, kd, ks = jax.random.split(key, 5)

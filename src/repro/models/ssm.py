@@ -30,6 +30,7 @@ def _dims(cfg: ModelConfig):
 
 
 def init_mamba2(cfg: ModelConfig, key, dtype) -> Params:
+    """Parameters for one Mamba-2 block."""
     s, d_inner, H = _dims(cfg)
     N = s.d_state
     k1, k2, k3, k4, k5 = jax.random.split(key, 5)
@@ -123,6 +124,7 @@ def apply_mamba2(
     state: Optional[Params] = None,   # decode: {"ssm": (B,H,P,N), "conv": ...}
     impl: str = "chunked",
 ) -> Tuple[jax.Array, Optional[Params]]:
+    """One Mamba-2 block, optionally carrying decode state."""
     s, d_inner, H = _dims(cfg)
     N, P = s.d_state, s.head_dim
     B, S, D = x.shape
@@ -164,6 +166,7 @@ def apply_mamba2(
 
 
 def init_mamba2_state(cfg: ModelConfig, batch: int) -> Params:
+    """Zeroed Mamba-2 decode state."""
     s, d_inner, H = _dims(cfg)
     return {
         "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),

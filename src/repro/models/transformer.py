@@ -29,6 +29,7 @@ Params = Dict[str, Any]
 
 @dataclass(frozen=True)
 class LayerSpec:
+    """Which mixer/FFN pair one layer instantiates."""
     mixer: str                    # attn|mla|mamba2|mlstm|slstm|shared_attn
     ffn: str = "dense"            # dense|moe|none
     d_ff: int = 0                 # 0 -> cfg.d_ff

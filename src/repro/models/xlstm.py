@@ -44,6 +44,7 @@ def _mlstm_dims(cfg: ModelConfig):
 
 
 def init_mlstm(cfg: ModelConfig, key, dtype) -> Params:
+    """Parameters for one mLSTM block."""
     x, d_inner, H, dh = _mlstm_dims(cfg)
     k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
     scale = (1.0 / dh) ** 0.5
@@ -129,6 +130,7 @@ def apply_mlstm(
     *,
     state: Optional[Params] = None,
 ) -> Tuple[jax.Array, Optional[Params]]:
+    """One mLSTM block, optionally carrying recurrent state."""
     xcfg, d_inner, H, dh = _mlstm_dims(cfg)
     B, S, D = x.shape
     up = jnp.einsum("bsd,de->bse", x, p["w_up"])
@@ -177,6 +179,7 @@ def apply_mlstm(
 
 
 def init_mlstm_state(cfg: ModelConfig, batch: int) -> Params:
+    """Zeroed mLSTM recurrent state."""
     xcfg, d_inner, H, dh = _mlstm_dims(cfg)
     return {
         "C": jnp.zeros((batch, H, dh, dh + 1), jnp.float32),
@@ -189,6 +192,7 @@ def init_mlstm_state(cfg: ModelConfig, batch: int) -> Params:
 # ---------------------------------------------------------------------------
 
 def init_slstm(cfg: ModelConfig, key, dtype) -> Params:
+    """Parameters for one sLSTM block."""
     x: XLSTMConfig = cfg.xlstm
     D, H = cfg.d_model, cfg.n_heads
     dh = D // H
@@ -228,7 +232,9 @@ def apply_slstm(
     state: Optional[Params] = None,
     cost_proxy: bool = False,
 ) -> Tuple[jax.Array, Optional[Params]]:
-    """sLSTM layer.  ``cost_proxy=True`` replaces the sequential scan with a
+    """sLSTM layer.
+
+    ``cost_proxy=True`` replaces the sequential scan with a
     cost-equivalent dense computation (same matmul shapes × S) used ONLY by
     the dry-run FLOP coster — never for real outputs."""
     D, H = cfg.d_model, cfg.n_heads
@@ -266,6 +272,7 @@ def apply_slstm(
 
 
 def init_slstm_state(cfg: ModelConfig, batch: int) -> Params:
+    """Zeroed sLSTM recurrent state."""
     D, H = cfg.d_model, cfg.n_heads
     dh = D // H
     z = jnp.zeros((batch, H, dh), jnp.float32)

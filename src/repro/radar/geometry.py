@@ -83,7 +83,9 @@ def gate_latlon(site_lat: float, site_lon: float, az_deg, range_m,
 
 
 def reach_box_deg(site_lat: float, reach_m: float):
-    """Half-extents ``(dlat, dlon)`` in degrees of a lat/lon box
+    """Degree half-extents of a site's reach box.
+
+    Half-extents ``(dlat, dlon)`` in degrees of a lat/lon box
     containing every point within ``reach_m`` ground distance of a site
     (the cos-lat metres-per-degree factor is floored so polar sites stay
     finite).  Shared by the catalog's coverage bbox and the gridding

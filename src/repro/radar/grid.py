@@ -181,11 +181,13 @@ _MAPPING_STATS = {"hits": 0, "misses": 0}
 
 
 def mapping_cache_stats() -> Dict[str, int]:
+    """Counters of the process-wide mapping cache."""
     with _MAPPING_LOCK:
         return dict(_MAPPING_STATS, entries=len(_MAPPING_CACHE))
 
 
 def clear_mapping_cache() -> None:
+    """Drop every cached polar-to-grid mapping."""
     with _MAPPING_LOCK:
         _MAPPING_CACHE.clear()
         _MAPPING_STATS.update(hits=0, misses=0)
@@ -382,6 +384,11 @@ def _sweep_geometry(session: Session, vcp: str, sweeps: Sequence[int]
     """Shared (azimuth, range) + per-sweep fixed angles; uniform geometry
     across the used sweeps is required (true for NEXRAD VCPs — each cut
     scans the same radials/gates)."""
+    # all sweeps' geometry arrays in one coalesced round trip — the per-
+    # sweep loop below then reads from cache instead of serial GETs
+    session.prefetch(
+        [f"{vcp}/sweep_{si}/{a}" for si in sweeps
+         for a in ("azimuth", "range")])
     az = rng = None
     elevs: List[float] = []
     for si in sweeps:
@@ -495,6 +502,9 @@ def grid_sweep_from_session(
                             method=method)
     tsl = as_time_slice(time_slice)
     fetches0 = session.cache_stats()["chunk_fetches"]
+    # cross-array prefetch: time axis + data block stream in together
+    session.prefetch([(f"{vcp}/time", (tsl,)),
+                      (f"{vcp}/sweep_{sweep}/{moment}", (tsl,))], wait=False)
     times = session.array(f"{vcp}/time")[tsl]
     block = session.array(f"{vcp}/sweep_{sweep}/{moment}")[tsl]
     out = np.asarray(ops.grid_map(
@@ -522,7 +532,9 @@ def cappi_from_session(
     ny: int = 240,
     nx: int = 240,
 ) -> GridProduct:
-    """Constant-altitude PPI: each cell samples the sweep whose beam is
+    """Constant-altitude PPI off the store.
+
+    Each cell samples the sweep whose beam is
     closest (in height, MSL) to ``altitude_m`` at that cell's range.
 
     One fused gather over the sweep-stacked block: per-cell sweep choice
@@ -540,6 +552,12 @@ def cappi_from_session(
 
     tsl = as_time_slice(time_slice)
     fetches0 = session.cache_stats()["chunk_fetches"]
+    # the per-sweep loop below is serial — prefetch every sweep's block
+    # (plus the time axis) up front so later sweeps ride earlier batches
+    session.prefetch(
+        [(f"{vcp}/time", (tsl,))]
+        + [(f"{vcp}/sweep_{si}/{moment}", (tsl,)) for si in sweeps],
+        wait=False)
     times = session.array(f"{vcp}/time")[tsl]
     blocks = [session.array(f"{vcp}/sweep_{si}/{moment}")[tsl]
               for si in sweeps]
@@ -568,7 +586,9 @@ def column_max_from_session(
     ny: int = 240,
     nx: int = 240,
 ) -> GridProduct:
-    """Column maximum: per cell, the max over all sweeps' regrids (the
+    """Column-maximum composite off the store.
+
+    Per cell, the max over all sweeps' regrids (the
     classic composite-reflectivity product)."""
     site_lat, site_lon, _ = _site_from_root(session)
     sweeps = list(sweeps) if sweeps is not None else \
@@ -579,6 +599,12 @@ def column_max_from_session(
 
     tsl = as_time_slice(time_slice)
     fetches0 = session.cache_stats()["chunk_fetches"]
+    # the regrid loop is serial per sweep: readahead for all sweeps at
+    # once overlaps sweep i's gather with sweep i+1's fetches
+    session.prefetch(
+        [(f"{vcp}/time", (tsl,))]
+        + [(f"{vcp}/sweep_{si}/{moment}", (tsl,)) for si in sweeps],
+        wait=False)
     times = session.array(f"{vcp}/time")[tsl]
     per_sweep = []
     for si, e in zip(sweeps, elevs):
@@ -604,6 +630,7 @@ def column_max_from_session(
 
 
 def product_path(product: GridProduct, name: Optional[str] = None) -> str:
+    """Store path a grid product is written under."""
     return f"{PRODUCTS_GROUP}/{name or f'{product.product}_{product.moment}'}"
 
 
@@ -669,8 +696,9 @@ def write_grid_product(
 
 
 def read_grid_product(session: Session, name: str) -> GridProduct:
-    """Re-open a written product as a :class:`GridProduct` (lazy arrays
-    materialized)."""
+    """Re-open a written product as a :class:`GridProduct`.
+
+    Lazy arrays are materialized."""
     base = f"{PRODUCTS_GROUP}/{name}"
     attrs = session.group_attrs(base)
     g = attrs["grid"]

@@ -20,6 +20,7 @@ from ._selection import TimeSliceLike, as_time_slice
 
 @dataclass
 class QPEResult:
+    """Accumulated rainfall map plus its polar axes."""
     accum_mm: np.ndarray         # (azimuth, range)
     total_hours: float
     n_scans: int
@@ -50,7 +51,9 @@ def qpe_from_session(
     b: float = 1.6,
     mode: str = "auto",
 ) -> QPEResult:
-    """Accumulate Z–R precipitation off the store.  ``time_slice``
+    """Accumulate Z–R precipitation off the store.
+
+    ``time_slice``
     accepts a slice or a planner-produced ``(i0, i1)`` index pair."""
     time_slice = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"

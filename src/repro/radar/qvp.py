@@ -22,6 +22,7 @@ from ._selection import TimeSliceLike, as_time_slice
 
 @dataclass
 class QVPResult:
+    """A quasi-vertical profile: (time, height) matrix plus axes."""
     profile: np.ndarray          # (time, range) azimuthal means
     times: np.ndarray            # (time,) epoch seconds
     height_m: np.ndarray         # (range,) beam height AGL
@@ -51,6 +52,15 @@ def qvp_from_session(
     """
     time_slice = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
+    # every array the profile needs, one asynchronous prefetch plan:
+    # time + field + quality + range stream in batched while the first
+    # demand read below waits only on its own chunks
+    items = [(f"{vcp}/time", (time_slice,)),
+             (f"{base}/{moment}", (time_slice,)),
+             f"{base}/range"]
+    if quality_moment is not None:
+        items.append((f"{base}/{quality_moment}", (time_slice,)))
+    session.prefetch(items, wait=False)
     field_arr = session.array(f"{base}/{moment}")
     times = session.array(f"{vcp}/time")[time_slice]
     field = field_arr[time_slice]                     # chunk-aligned read
@@ -78,7 +88,9 @@ def qvp_from_volumes(
     quality_moment: Optional[str] = "RHOHV",
     quality_min: float = 0.85,
 ) -> QVPResult:
-    """File-based baseline: the Py-ART-style workflow the paper compares
+    """File-based QVP baseline.
+
+    The Py-ART-style workflow the paper compares
     against.  Each decoded volume is processed scan-by-scan with plain
     numpy — including all the moments that were decoded just to be thrown
     away, as happens with real Level-II files."""

@@ -19,6 +19,7 @@ from ._selection import TimeSliceLike, as_time_slice
 
 @dataclass
 class PointSeries:
+    """A single-gate time series plus the gate indices it tracks."""
     values: np.ndarray           # (time,)
     times: np.ndarray            # (time,)
     az_idx: int
@@ -54,6 +55,38 @@ def _az_window_runs(center: int, halfwidth: int, n: int
     return [(lo, n), (0, lo + width - n)]
 
 
+def iter_time_blocks(
+    session: Session,
+    paths: List[str],
+    *,
+    n_time: int,
+    block: int,
+    start: int = 0,
+):
+    """Readahead iterator over leading-axis (time) windows.
+
+    Yields ``(i0, i1)`` half-open index windows of at most ``block`` rows
+    covering ``[start, n_time)``.  Window 0 is prefetched synchronously
+    (one coalesced round trip for all ``paths``); before each window is
+    yielded, the *next* window's chunks are prefetched asynchronously, so
+    a consumer reading ``session.array(p)[i0:i1]`` inside the loop
+    overlaps its compute with the following window's fetches — the
+    streaming pattern mosaic/animation products use over remote stores.
+    """
+    if block <= 0:
+        raise ValueError("block must be positive")
+    windows = [(i, min(i + block, n_time))
+               for i in range(start, n_time, block)]
+    if windows:
+        session.prefetch(
+            [(p, (slice(*windows[0]),)) for p in paths])
+    for k, (i0, i1) in enumerate(windows):
+        if k + 1 < len(windows):
+            nxt = slice(*windows[k + 1])
+            session.prefetch([(p, (nxt,)) for p in paths], wait=False)
+        yield i0, i1
+
+
 def point_series_from_session(
     session: Session,
     *,
@@ -72,13 +105,21 @@ def point_series_from_session(
     """
     tsl = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
+    # geometry first (one batched round trip — the gate choice needs it),
+    # then the gate windows + time axis prefetch while we compute
+    session.prefetch([f"{base}/azimuth", f"{base}/range"])
     azimuth = session.array(f"{base}/azimuth").read()
     rng = session.array(f"{base}/range").read()
     ai, ri = _nearest_gate(az_deg, range_m, azimuth, rng)
     r0, r1 = max(0, ri - halfwidth), min(len(rng), ri + halfwidth + 1)
+    runs = _az_window_runs(ai, halfwidth, len(azimuth))
     arr = session.array(f"{base}/{moment}")
-    parts = [arr[tsl, a0:a1, r0:r1]
-             for a0, a1 in _az_window_runs(ai, halfwidth, len(azimuth))]
+    session.prefetch(
+        [(f"{vcp}/time", (tsl,))]
+        + [(f"{base}/{moment}", (tsl, slice(a0, a1), slice(r0, r1)))
+           for a0, a1 in runs],
+        wait=False)
+    parts = [arr[tsl, a0:a1, r0:r1] for a0, a1 in runs]
     block = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=1)
     values = np.nanmedian(block.reshape(block.shape[0], -1), axis=1)
     times = session.array(f"{vcp}/time")[tsl]

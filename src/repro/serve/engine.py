@@ -74,6 +74,7 @@ def _last_pos(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
 
 
 def sample(logits: jax.Array, key, *, temperature: float = 0.0) -> jax.Array:
+    """Greedy or temperature sampling from final-position logits."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
@@ -85,6 +86,7 @@ def sample(logits: jax.Array, key, *, temperature: float = 0.0) -> jax.Array:
 
 @dataclass
 class Request:
+    """One generation request."""
     prompt: np.ndarray               # (S,) i32 or (K, S) for audio archs
     max_new_tokens: int = 32
     temperature: float = 0.0
@@ -93,13 +95,16 @@ class Request:
 
 @dataclass
 class Completion:
+    """One finished generation."""
     tokens: np.ndarray               # generated ids, (T,) or (K, T)
     prompt_len: int
     finished: str                    # "eos" | "length"
 
 
 class Engine:
-    """Aligned-batch serving: pad prompts to a shared length, prefill once,
+    """Aligned-batch serving engine.
+
+    Pad prompts to a shared length, prefill once,
     decode in lockstep; per-slot EOS masking."""
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, params: Params,

@@ -391,27 +391,59 @@ class ArchiveService:
         return refs
 
     # -- chunks ----------------------------------------------------------
-    def chunk(self, ref: str, repo_id: str,
-              tenant: str = "public") -> bytes:
-        """Raw encoded chunk bytes for a CAS ref, via the shared
-        hot-chunk cache and single-flight (N concurrent misses on one
-        ref hit the store once)."""
-        cached = self._chunk_cache.get(ref)
-        if cached is not None:
-            return cached
+    def chunks(self, refs: Sequence[str], repo_id: str,
+               tenant: str = "public") -> Dict[str, bytes]:
+        """Raw encoded chunk bytes for several CAS refs at once.
 
-        def fetch() -> bytes:
-            blob = self._chunk_cache.get(ref)
-            if blob is None:
+        Cache hits are served from the shared hot-chunk cache; all misses
+        ride **one** coalesced :meth:`~repro.store.Session.get_blobs`
+        round trip against the backend, under a single-flight keyed by
+        the miss set (N concurrent identical requests hit the store
+        once).  Any unknown ref fails the whole request with a 404.
+        """
+        refs = list(dict.fromkeys(refs))
+        out: Dict[str, bytes] = {}
+        missing = []
+        for ref in refs:
+            cached = self._chunk_cache.get(ref)
+            if cached is not None:
+                out[ref] = cached
+            else:
+                missing.append(ref)
+        if not missing:
+            return out
+
+        def fetch() -> Dict[str, bytes]:
+            got: Dict[str, bytes] = {}
+            need = []
+            for ref in missing:
+                blob = self._chunk_cache.get(ref)
+                if blob is None:
+                    need.append(ref)
+                else:
+                    got[ref] = blob
+            if need:
                 session = self.session(tenant, repo_id)
                 try:
-                    blob = bytes(session.get_blob(ref))
-                except KeyError:
-                    raise ApiError(404, f"unknown chunk {ref!r}") from None
-                self._chunk_cache.put(ref, blob, len(blob))
-            return blob
+                    fetched = session.get_blobs(need)
+                except KeyError as exc:
+                    raise ApiError(
+                        404, f"unknown chunk {exc.args[0]!r}") from None
+                for ref in need:
+                    blob = bytes(fetched[ref])
+                    self._chunk_cache.put(ref, blob, len(blob))
+                    got[ref] = blob
+            return got
 
-        return self._chunk_flight.do(("chunk", ref), fetch)
+        out.update(self._chunk_flight.do(
+            ("chunks", tuple(missing)), fetch))
+        return out
+
+    def chunk(self, ref: str, repo_id: str,
+              tenant: str = "public") -> bytes:
+        """Raw encoded chunk bytes for one CAS ref — the single-ref case
+        of :meth:`chunks`, sharing its cache and coalesced fetch path."""
+        return self.chunks((ref,), repo_id, tenant)[ref]
 
     # -- products --------------------------------------------------------
     def product(self, kind: str, params: Dict[str, List[str]],
@@ -567,7 +599,9 @@ _TENANT_OK = frozenset(
 
 
 def create_app(service: ArchiveService):
-    """Bind routing to a service: returns the ``BaseHTTPRequestHandler``
+    """Bind routing to a service.
+
+    Returns the ``BaseHTTPRequestHandler``
     subclass an ``http.server`` server dispatches to.  All archive logic
     stays on the service; the handler only parses, routes, and speaks
     HTTP (ETags, ``304``, status codes)."""
@@ -655,9 +689,21 @@ def create_app(service: ArchiveService):
                 self._send_json(service.stats())
             elif len(parts) == 2 and parts[0] == "chunks":
                 repo = _require(_one(params, "repo"), "repo")
-                blob = service.chunk(parts[1], repo, tenant)
-                self._send(200, blob, "application/octet-stream",
-                           etag=parts[1])
+                if "," in parts[1]:
+                    # batched form: /chunks/<ref>,<ref>,... — one framed
+                    # body, all misses fetched in one coalesced GET
+                    refs = [r for r in parts[1].split(",") if r]
+                    got = service.chunks(refs, repo, tenant)
+                    body = encode_payload(
+                        {"chunks": refs},
+                        {ref: np.frombuffer(got[ref], dtype=np.uint8)
+                         for ref in refs})
+                    self._send(200, body, "application/octet-stream",
+                               etag=content_hash(body))
+                else:
+                    blob = service.chunk(parts[1], repo, tenant)
+                    self._send(200, blob, "application/octet-stream",
+                               etag=parts[1])
             elif len(parts) == 2 and parts[0] == "products":
                 body = service.product(parts[1], params, tenant)
                 self._send(200, body, "application/octet-stream",
@@ -692,7 +738,9 @@ class _PooledHTTPServer(HTTPServer):
 
 
 class ArchiveServer:
-    """A running archive server: bounded worker pool, ephemeral port by
+    """A running archive server.
+
+    Bounded worker pool, ephemeral port by
     default, clean two-phase shutdown (stop accepting, drain workers)."""
 
     def __init__(self, service: ArchiveService, *, host: str = "127.0.0.1",

@@ -205,7 +205,9 @@ class ByteBudgetCache:
 
 def plan_batches(n_requests: int,
                  max_batch: Optional[int] = None) -> List[Sequence[int]]:
-    """Deterministic FIFO batch plan: request indices ``0..n-1`` split
+    """Deterministic FIFO batch plan.
+
+    Request indices ``0..n-1`` split
     into contiguous runs of at most ``max_batch`` (one run when
     ``max_batch`` is ``None`` or non-positive).  Order is preserved, so
     stitched results line up with the submitted request list."""

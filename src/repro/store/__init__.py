@@ -31,7 +31,8 @@ from .icechunk import (
     Session,
     Transaction,
 )
-from .object_store import ObjectStore
+from .icechunk import PrefetchReport
+from .object_store import Backend, ObjectStore, SimulatedLatencyStore
 from .zarrlite import Array, ArrayMeta, ScanResult, ScanStats
 
 __all__ = [
@@ -50,8 +51,11 @@ __all__ = [
     "MANIFEST_FORMAT",
     "MANIFEST_SHARD_CHUNKS",
     "NotFound",
+    "Backend",
     "ObjectStore",
+    "PrefetchReport",
     "Repository",
+    "SimulatedLatencyStore",
     "Session",
     "Transaction",
     "UnknownCodecError",

@@ -20,10 +20,12 @@ from .codecs import get_codec
 
 
 def compress(raw: bytes, codec: Optional[str] = None) -> bytes:
+    """Compress raw bytes with the named (or default) codec."""
     return get_codec(codec).encode(raw)
 
 
 def decompress(blob: bytes, codec: Optional[str] = None) -> bytes:
+    """Invert :func:`compress`."""
     return get_codec(codec).decode(blob)
 
 
@@ -94,8 +96,9 @@ def plan_time_chunks(
     itemsize: int,
     target_bytes: int,
 ) -> Tuple[int, ...]:
-    """Analysis-optimized leading-axis (time) chunk length under a byte
-    budget.
+    """Analysis-optimized leading-axis (time) chunk length.
+
+    Chosen under a byte budget.
 
     Append-heavy ingest leaves an archive with many short time chunks;
     this plans the tall replacement the compaction pass rewrites them
@@ -124,7 +127,9 @@ def plan_time_chunks(
 
 
 def normalize_selection(selection, ndim: int) -> list:
-    """Canonical per-axis selector list: None → all, scalar → 1-tuple,
+    """Canonical per-axis selector list.
+
+    None → all, scalar → 1-tuple,
     short tuples padded with full slices.  The one normalization shared
     by every scan/where entry point, so backends cannot drift."""
     if selection is None:
@@ -229,6 +234,7 @@ def decode_chunk(
     *,
     writable: bool = True,
 ) -> np.ndarray:
+    """Decode a stored blob back into an ndarray of ``shape``/``dtype``."""
     raw = decompress(blob, codec)
     arr = np.frombuffer(raw, dtype=dtype).reshape(shape)
     if writable:

@@ -56,6 +56,7 @@ _DEFAULT: Optional[str] = None
 
 
 def register_codec(codec: Codec, *, overwrite: bool = False) -> Codec:
+    """Register a codec implementation under its name."""
     if codec.name in _REGISTRY and not overwrite:
         raise ValueError(f"codec {codec.name!r} already registered")
     _REGISTRY[codec.name] = codec
@@ -74,6 +75,7 @@ def get_codec(name: Optional[str] = None) -> Codec:
 
 
 def available_codecs() -> Tuple[str, ...]:
+    """Names of every registered codec."""
     return tuple(sorted(_REGISTRY))
 
 
@@ -91,6 +93,7 @@ def default_codec() -> str:
 
 
 def set_default_codec(name: str) -> None:
+    """Set the codec new arrays default to."""
     global _DEFAULT
     get_codec(name)  # validate before committing
     _DEFAULT = name

@@ -99,6 +99,7 @@ COMPACTION_PROFILE_NAMES = sorted(PROFILES)
 def resolve_profile(
     profile: Union[str, CompactionProfile]
 ) -> CompactionProfile:
+    """Coerce a profile name or instance to a :class:`CompactionProfile`."""
     if isinstance(profile, CompactionProfile):
         return profile
     try:
@@ -122,6 +123,7 @@ class CompactionJob:
 
 @dataclass
 class ArrayCompaction:
+    """Per-array before/after chunk layout of one compaction."""
     path: str
     reason: str
     chunks_before: Tuple[int, ...]
@@ -132,6 +134,7 @@ class ArrayCompaction:
 
 @dataclass
 class CompactionReport:
+    """Summary of one compaction run."""
     profile: str
     snapshot_id: str         # new head (committed) or the unchanged head
     committed: bool          # False: archive already in profile (no-op)
@@ -216,8 +219,9 @@ def compact(
     read_workers: int = 1,
     message: Optional[str] = None,
 ) -> CompactionReport:
-    """Rewrite a branch head into the profile's chunk layout (see module
-    docstring for the guarantees).
+    """Rewrite a branch head into the profile's chunk layout.
+
+    See the module docstring for the guarantees.
 
     ``paths`` restricts the pass to the named arrays; ``read_workers``
     fans both the source reads and the commit-time re-encodes out over a

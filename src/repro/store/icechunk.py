@@ -50,17 +50,20 @@ run against any :class:`~repro.store.object_store.ObjectStore`:
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.analysis.dynamic.runtime import (new_lock, note_read, note_write,
                                             wrap_pool)
 
 from .chunks import (chunk_stats_summary, content_hash, decode_chunk,
-                     encode_chunk)
+                     encode_chunk, normalize_selection)
 from .codecs import get_codec, json_dumps, json_loads
 from .object_store import ObjectStore
 from .zarrlite import Array, ArrayMeta, _chunk_key
@@ -71,6 +74,7 @@ class ConflictError(RuntimeError):
 
 
 class NotFound(KeyError):
+    """Missing key/array/snapshot lookup (a ``KeyError``)."""
     pass
 
 
@@ -114,6 +118,47 @@ GC_GRACE_SECONDS = 3600.0
 DEFAULT_CACHE_BYTES = 128 << 20
 # manifest-shard/manifest-object LRU entries per session
 _OBJ_CACHE_ENTRIES = 1024
+# chunk payloads per coalesced GET batch: per-shard groups are packed into
+# batches of at most this many keys, so one slow giant batch never
+# serializes the whole prefetch plan behind a single round trip
+PREFETCH_BATCH_KEYS = 16
+# how long a demand read waits for an in-flight prefetch of the same chunk
+# before falling back to a direct fetch (a safety net, not a code path the
+# healthy pipeline ever takes)
+_INFLIGHT_WAIT_S = 15.0
+
+
+@dataclass
+class PrefetchReport:
+    """Outcome of one :meth:`Session.prefetch` plan.
+
+    ``planned`` counts the distinct committed chunk payloads the plan
+    covered; each is then ``cached`` (already resident), ``inflight``
+    (another plan is fetching it), ``deferred`` (the byte-budget
+    admission policy left it to demand paging), or ``scheduled`` into
+    one of ``batches`` coalesced GET batches.  All counts are
+    deterministic for a given session state — they are what the remote
+    read tests and benchmarks assert on.
+    """
+
+    planned: int = 0
+    scheduled: int = 0
+    cached: int = 0
+    inflight: int = 0
+    deferred: int = 0
+    batches: int = 0
+    _jobs: List[Any] = field(default_factory=list, repr=False)
+
+    def wait(self) -> "PrefetchReport":
+        """Block until every scheduled fetch batch has landed.
+
+        Re-raises the first batch failure; an unawaited report's
+        failures are absorbed by the demand-read fallback instead.
+        """
+        jobs, self._jobs = self._jobs, []
+        for job in jobs:
+            job.result()
+        return self
 
 
 def _shard_index(chunk_key: str) -> int:
@@ -134,6 +179,7 @@ def _entry_shard_hashes(entry) -> List[str]:
 
 @dataclass
 class CommitInfo:
+    """One commit's metadata: snapshot id, parent, message."""
     snapshot_id: str
     parent_id: Optional[str]
     message: str
@@ -158,14 +204,18 @@ class Repository:
         return self.manifest_format >= 3
 
     # -- creation ------------------------------------------------------
+    @staticmethod
+    def _coerce_store(store_or_path):
+        """Accept any :class:`~repro.store.object_store.Backend` as-is;
+        strings/paths open a local :class:`ObjectStore` rooted there."""
+        if isinstance(store_or_path, (str, os.PathLike)):
+            return ObjectStore(store_or_path)
+        return store_or_path
+
     @classmethod
     def create(cls, store_or_path, *, branch: str = "main",
                manifest_format: int = MANIFEST_FORMAT) -> "Repository":
-        store = (
-            store_or_path
-            if isinstance(store_or_path, ObjectStore)
-            else ObjectStore(store_or_path)
-        )
+        store = cls._coerce_store(store_or_path)
         repo = cls(store, manifest_format=manifest_format)
         empty = {
             "parent": None,
@@ -184,12 +234,8 @@ class Repository:
     @classmethod
     def open(cls, store_or_path, *,
              manifest_format: int = MANIFEST_FORMAT) -> "Repository":
-        store = (
-            store_or_path
-            if isinstance(store_or_path, ObjectStore)
-            else ObjectStore(store_or_path)
-        )
-        return cls(store, manifest_format=manifest_format)
+        return cls(cls._coerce_store(store_or_path),
+                   manifest_format=manifest_format)
 
     # -- refs ------------------------------------------------------------
     @staticmethod
@@ -282,16 +328,49 @@ class Repository:
             sid = doc.get("parent")
 
     # -- sessions ----------------------------------------------------------
+    def _open_branch_with_hint(
+        self, branch: str, hint: str
+    ) -> Tuple[str, Optional[Dict[str, Any]]]:
+        """Resolve a branch head speculatively: fetch the ref *and* the
+        hinted snapshot document in one coalesced round trip.
+
+        When the hint still names the head (the common case — catalogs
+        refresh their recorded head on every commit), opening a session
+        costs one GET instead of two serial ones.  A stale or vanished
+        hint degrades to the plain two-step open, never to an error.
+        """
+        ref_key = self._ref_key(branch)
+        snap_key = f"snapshots/{hint}.json"
+        try:
+            got = self.store.get_many([ref_key, snap_key])
+        except KeyError:
+            # hinted snapshot expired (gc) or branch missing: serial path,
+            # which reports the missing branch with the usual NotFound
+            return self.branch_head(branch), None
+        sid = _loads(got[ref_key])["snapshot"]
+        if sid == hint:
+            return sid, _loads(got[snap_key])
+        return sid, None  # branch moved past the hint; re-fetch the head doc
+
     def readonly_session(
         self, *, branch: str = "main", snapshot_id: Optional[str] = None,
         tag: Optional[str] = None,
         cache_bytes: int = DEFAULT_CACHE_BYTES,
         read_workers: int = 1,
+        snapshot_hint: Optional[str] = None,
     ) -> "Session":
+        doc: Optional[Dict[str, Any]] = None
         if snapshot_id is None:
-            snapshot_id = self.tag_head(tag) if tag else self.branch_head(branch)
+            if tag:
+                snapshot_id = self.tag_head(tag)
+            elif snapshot_hint:
+                snapshot_id, doc = self._open_branch_with_hint(
+                    branch, snapshot_hint)
+            else:
+                snapshot_id = self.branch_head(branch)
         return Session(self, snapshot_id, writable=False,
-                       cache_bytes=cache_bytes, read_workers=read_workers)
+                       cache_bytes=cache_bytes, read_workers=read_workers,
+                       doc=doc)
 
     def writable_session(self, branch: str = "main",
                          **session_kw) -> "Transaction":
@@ -409,11 +488,14 @@ class Session:
 
     def __init__(self, repo: Repository, snapshot_id: str, *, writable: bool,
                  cache_bytes: int = DEFAULT_CACHE_BYTES,
-                 read_workers: int = 1):
+                 read_workers: int = 1,
+                 doc: Optional[Dict[str, Any]] = None):
         self.repo = repo
         self.snapshot_id = snapshot_id
         self.writable = writable
-        self._doc = repo._read_snapshot(snapshot_id)
+        # ``doc`` lets an opener that already holds the snapshot document
+        # (the hinted coalesced open) skip the round trip re-fetching it
+        self._doc = doc if doc is not None else repo._read_snapshot(snapshot_id)
         self._manifest_cache: Dict[str, Dict[str, str]] = {}
         self.cache_bytes = int(cache_bytes)
         self.read_workers = max(1, int(read_workers))
@@ -430,6 +512,15 @@ class Session:
         # chunk payloads actually fetched+decoded (cache misses) — the
         # "chunks read" accounting fragmentation benchmarks compare
         self._fetch_count = 0
+        # cache keys a prefetch batch is currently fetching; the Event is
+        # set when the batch lands so demand readers can wait instead of
+        # issuing a duplicate GET
+        self._inflight: Dict[Tuple, threading.Event] = {}
+        # prefetched-but-not-yet-read cache keys: shielded from demand
+        # eviction until first use, so a large demand burst cannot flush
+        # the plan it is about to consume
+        self._prefetch_hot: set = set()
+        self._prefetch_hits = 0
 
     # -- caches / concurrency ------------------------------------------
     def reader_pool(self):
@@ -464,17 +555,37 @@ class Session:
         if pool is not None:
             pool.shutdown(wait=False)
 
+    def __enter__(self) -> "Session":
+        """Context-manager entry: the session itself."""
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Release the reader pool on scope exit; exceptions propagate.
+
+        On a :class:`Transaction` this never commits — an uncommitted
+        ``with`` block simply abandons its staged state.
+        """
+        self.close()
+
     def cache_stats(self) -> Dict[str, int]:
+        """Point-in-time cache/prefetch counters (all under one lock, so
+        the snapshot is internally consistent)."""
         with self._cache_lock:
             note_read(self, "_chunk_cache", owner="Session")
             note_read(self, "_chunk_cache_nbytes", owner="Session")
             note_read(self, "_obj_cache", owner="Session")
             note_read(self, "_fetch_count", owner="Session")
+            note_read(self, "_inflight", owner="Session")
+            note_read(self, "_prefetch_hot", owner="Session")
+            note_read(self, "_prefetch_hits", owner="Session")
             return {
                 "chunk_entries": len(self._chunk_cache),
                 "chunk_bytes": self._chunk_cache_nbytes,
                 "manifest_entries": len(self._obj_cache),
                 "chunk_fetches": self._fetch_count,
+                "prefetch_hits": self._prefetch_hits,
+                "prefetch_hot": len(self._prefetch_hot),
+                "prefetch_inflight": len(self._inflight),
             }
 
     def _obj_cache_put(self, mh: str, obj: Dict[str, str]) -> None:
@@ -590,7 +701,237 @@ class Session:
         return self._manifest_obj(entry[si]).get(key)
 
     def get_blob(self, ref: str) -> bytes:
+        """Raw chunk payload for one content hash (single GET)."""
         return self.repo.store.get(f"chunks/{ref}")
+
+    def get_blobs(self, refs: Sequence[str]) -> Dict[str, bytes]:
+        """Raw chunk payloads for several content hashes in **one**
+        coalesced round trip.
+
+        Duplicate refs fetch once; backends without :meth:`get_many`
+        degrade to per-key GETs.  This is the batch primitive the
+        prefetcher and the serve layer's ``/chunks`` endpoint share.
+        """
+        uniq = list(dict.fromkeys(refs))
+        keys = [f"chunks/{r}" for r in uniq]
+        get_many = getattr(self.repo.store, "get_many", None)
+        if get_many is None:
+            got = {k: self.repo.store.get(k) for k in keys}
+        else:
+            got = get_many(keys)
+        return {r: got[f"chunks/{r}"] for r in uniq}
+
+    def _prefetch_manifests(self, array_paths: Sequence[str], *,
+                            stats: bool = False) -> int:
+        """Warm the manifest-object cache for ``array_paths`` in one
+        batched round trip; returns the number of objects fetched.
+
+        With ``stats=True`` the arrays' stat sidecars ride in the same
+        batch, so a planner about to prune pays no extra RTTs.
+        """
+        wanted: "OrderedDict[str, str]" = OrderedDict()  # cache key -> obj key
+        for path in dict.fromkeys(array_paths):
+            entry = self._doc["manifests"].get(path)
+            if isinstance(entry, str):  # v1: one flat map
+                wanted[entry] = f"manifests/{entry}.json"
+            elif entry:
+                for sh in entry:
+                    if sh:
+                        wanted[sh] = f"manifests/{sh}.json"
+            if stats:
+                for sh in self._doc.get("stats", {}).get(path) or []:
+                    if sh:
+                        wanted[f"stats:{sh}"] = f"stats/{sh}.json"
+        with self._cache_lock:
+            note_read(self, "_obj_cache", owner="Session")
+            missing = [(ck, ok) for ck, ok in wanted.items()
+                       if ck not in self._obj_cache]
+        if not missing:
+            return 0
+        get_many = getattr(self.repo.store, "get_many", None)
+        if get_many is None:
+            got = {ok: self.repo.store.get(ok) for _, ok in missing}
+        else:
+            got = get_many([ok for _, ok in missing])
+        for ck, ok in missing:
+            self._obj_cache_put(ck, _loads(got[ok]))
+        return len(missing)
+
+    @staticmethod
+    def _selection_slices(meta: ArrayMeta, selection) -> List[slice]:
+        """Selection normalized to per-axis unit-step slices (ints become
+        length-1 slices), the form :meth:`ChunkGrid.chunks_for_selection`
+        accepts."""
+        sels = normalize_selection(selection, len(meta.shape))
+        slices = []
+        for ax, s in enumerate(sels):
+            if isinstance(s, slice):
+                slices.append(s)
+            else:
+                i = int(s)
+                if i < 0:
+                    i += meta.shape[ax]
+                slices.append(slice(i, i + 1))
+        return slices
+
+    def prefetch(self, items, *, wait: bool = True) -> PrefetchReport:
+        """Issue a prefetch plan: fetch the chunks a set of upcoming reads
+        will need, batched per manifest shard and coalesced into
+        :data:`PREFETCH_BATCH_KEYS`-sized GET groups.
+
+        ``items`` is an iterable of array paths (whole array),
+        ``(array_path, selection)`` pairs (the chunks intersecting the
+        selection — exactly the set a demand read of that selection would
+        fetch, so chunk-fetch accounting is unchanged), or
+        ``(array_path, [cid, ...])`` pairs with an explicit **list** of
+        chunk ids (how :meth:`Array.scan` prefetches only the chunks that
+        survive stat pruning).  Manifest shards for every named array are
+        warmed first in one batched round trip.
+
+        Admission is planned against the decoded-chunk cache budget:
+        chunks whose estimated decoded size would overflow ``cache_bytes``
+        are *deferred* to demand paging rather than fetched and dropped.
+        Writable sessions skip prefetching entirely (staged chunks shadow
+        committed ones).  With ``wait=False`` the returned report's
+        batches run on the reader pool in the background; call
+        :meth:`PrefetchReport.wait` (or just start reading — demand reads
+        wait on in-flight chunks) to synchronize.
+        """
+        report = PrefetchReport()
+        if self.writable:
+            return report
+        norm: List[Tuple[str, Any]] = []
+        for item in items:
+            if isinstance(item, str):
+                norm.append((item, None))
+            else:
+                path, sel = item
+                norm.append((path, sel))
+        if not norm:
+            return report
+        self._prefetch_manifests([p for p, _ in norm])
+        # resolve the plan: unique cache keys, grouped by manifest shard
+        plan: "OrderedDict[Tuple, Tuple[str, int]]" = OrderedDict()
+        est_bytes: Dict[Tuple, int] = {}
+        for path, sel in norm:
+            doc = self._doc["arrays"].get(path)
+            if doc is None:
+                continue
+            meta = ArrayMeta.from_doc(doc)
+            grid = meta.grid
+            if sel is None:
+                cids = list(grid.chunk_ids())
+            elif isinstance(sel, list):  # explicit chunk-id list
+                cids = [tuple(int(c) for c in cid) for cid in sel]
+            else:
+                cids = list(grid.chunks_for_selection(
+                    self._selection_slices(meta, sel)))
+            est = int(np.prod(meta.chunks)) * np.dtype(meta.dtype).itemsize
+            for cid in cids:
+                ref = self.chunk_ref(path, cid)
+                if ref is None:
+                    continue
+                key = (ref, tuple(meta.chunks), meta.dtype, meta.codec)
+                if key in plan:
+                    continue
+                plan[key] = (path, _shard_index(_chunk_key(tuple(cid))))
+                est_bytes[key] = est
+        report.planned = len(plan)
+        if not plan:
+            return report
+        # admission + in-flight marking happen atomically, *before* any
+        # batch is submitted: a demand read racing the plan either sees
+        # the cached chunk or an in-flight marker it can wait on
+        groups: "OrderedDict[Tuple[str, int], List[Tuple]]" = OrderedDict()
+        with self._cache_lock:
+            note_read(self, "_chunk_cache", owner="Session")
+            note_read(self, "_chunk_cache_nbytes", owner="Session")
+            note_read(self, "_inflight", owner="Session")
+            projected = self._chunk_cache_nbytes
+            for key, group in plan.items():
+                if key in self._chunk_cache:
+                    report.cached += 1
+                    continue
+                if key in self._inflight:
+                    report.inflight += 1
+                    continue
+                if projected + est_bytes[key] > self.cache_bytes:
+                    report.deferred += 1
+                    continue
+                projected += est_bytes[key]
+                note_write(self, "_inflight", owner="Session")
+                self._inflight[key] = threading.Event()
+                groups.setdefault(group, []).append(key)
+                report.scheduled += 1
+        batches: List[List[Tuple]] = []
+        for keys in groups.values():
+            for i in range(0, len(keys), PREFETCH_BATCH_KEYS):
+                batches.append(keys[i:i + PREFETCH_BATCH_KEYS])
+        report.batches = len(batches)
+        pool = self.reader_pool()
+        if pool is None:
+            for batch in batches:
+                self._fetch_group(batch)
+        else:
+            for batch in batches:
+                report._jobs.append(pool.submit(self._fetch_group, batch))
+            if wait:
+                report.wait()
+        return report
+
+    def _fetch_group(self, keys: Sequence[Tuple]) -> None:
+        """Fetch one coalesced batch: a single ``get_many`` round trip,
+        decode, admit each chunk, then release the in-flight markers
+        (always — waiters must never hang on a failed batch)."""
+        try:
+            blobs = self.get_blobs([k[0] for k in keys])
+            for key in keys:
+                chunk = decode_chunk(blobs[key[0]], key[1], key[2], key[3],
+                                     writable=False)
+                self._admit_prefetched(key, chunk)
+        finally:
+            with self._cache_lock:
+                note_write(self, "_inflight", owner="Session")
+                for key in keys:
+                    ev = self._inflight.pop(key, None)
+                    if ev is not None:
+                        ev.set()
+
+    def _admit_prefetched(self, key: Tuple, chunk) -> None:
+        """Byte-budget admission for a prefetched chunk: insert and mark
+        *hot* (shielded from demand eviction until first read), or drop it
+        if the cache is full — speculation never evicts resident data."""
+        with self._cache_lock:
+            note_write(self, "_fetch_count", owner="Session")
+            self._fetch_count += 1
+            note_read(self, "_chunk_cache", owner="Session")
+            if key in self._chunk_cache:
+                return
+            note_read(self, "_chunk_cache_nbytes", owner="Session")
+            if self._chunk_cache_nbytes + chunk.nbytes > self.cache_bytes:
+                return
+            note_write(self, "_chunk_cache", owner="Session")
+            note_write(self, "_chunk_cache_nbytes", owner="Session")
+            self._chunk_cache[key] = chunk
+            self._chunk_cache_nbytes += chunk.nbytes
+            note_write(self, "_prefetch_hot", owner="Session")
+            self._prefetch_hot.add(key)
+
+    def _cache_lookup(self, key: Tuple) -> Optional[Any]:
+        """Locked chunk-cache probe; the first demand hit on a prefetched
+        chunk consumes its *hot* marker and counts a prefetch hit."""
+        with self._cache_lock:
+            note_read(self, "_chunk_cache", owner="Session")
+            hit = self._chunk_cache.get(key)
+            if hit is not None:
+                self._chunk_cache.move_to_end(key)
+                note_read(self, "_prefetch_hot", owner="Session")
+                if key in self._prefetch_hot:
+                    note_write(self, "_prefetch_hot", owner="Session")
+                    self._prefetch_hot.discard(key)
+                    note_write(self, "_prefetch_hits", owner="Session")
+                    self._prefetch_hits += 1
+            return hit
 
     def decoded_chunk(self, array_path: str, cid,
                       meta: ArrayMeta) -> Optional[Any]:
@@ -599,18 +940,28 @@ class Session:
         Returns None when the chunk was never written (caller substitutes
         fill value).  The cache key is the chunk's content hash plus its
         decode parameters, so identical payloads shared by several arrays
-        decode once.
+        decode once.  A miss on a chunk an active prefetch batch is
+        already fetching waits for that batch instead of issuing a
+        duplicate GET (with a timed fallback to a direct fetch, so a
+        failed batch degrades to the old per-chunk path).
         """
         ref = self.chunk_ref(array_path, cid)
         if ref is None:
             return None
         key = (ref, tuple(meta.chunks), meta.dtype, meta.codec)
+        hit = self._cache_lookup(key)
+        if hit is not None:
+            return hit
         with self._cache_lock:
-            note_read(self, "_chunk_cache", owner="Session")
-            hit = self._chunk_cache.get(key)
+            note_read(self, "_inflight", owner="Session")
+            ev = self._inflight.get(key)
+        if ev is not None:
+            ev.wait(_INFLIGHT_WAIT_S)
+            hit = self._cache_lookup(key)
             if hit is not None:
-                self._chunk_cache.move_to_end(key)
                 return hit
+            # batch failed, timed out, or admission dropped the chunk:
+            # fall through to a direct (possibly duplicate) fetch
         blob = self.get_blob(ref)
         chunk = decode_chunk(blob, tuple(meta.chunks), meta.dtype,
                              meta.codec, writable=False)
@@ -626,7 +977,17 @@ class Session:
             self._chunk_cache_nbytes += chunk.nbytes
             while (self._chunk_cache_nbytes > self.cache_bytes
                    and self._chunk_cache):
-                _, old = self._chunk_cache.popitem(last=False)
+                note_read(self, "_prefetch_hot", owner="Session")
+                victim = None
+                for k in self._chunk_cache:  # LRU order, skip hot entries
+                    if k not in self._prefetch_hot:
+                        victim = k
+                        break
+                if victim is None:  # everything is hot: evict LRU anyway
+                    victim = next(iter(self._chunk_cache))
+                    note_write(self, "_prefetch_hot", owner="Session")
+                    self._prefetch_hot.discard(victim)
+                old = self._chunk_cache.pop(victim)
                 self._chunk_cache_nbytes -= old.nbytes
         return chunk
 

@@ -1,31 +1,119 @@
-"""Filesystem-backed object store with the minimal cloud-object-store contract.
+"""Pluggable object-store backends with the minimal cloud-store contract.
 
-The paper persists Radar DataTree archives to S3-compatible object storage.
-This module provides the same API surface the transactional layer needs —
-immutable puts, reads, listing, and *conditional atomic swaps* (the
-compare-and-set primitive modern object stores expose, e.g. GCS generation
-preconditions / S3 conditional writes) — backed by a local directory so the
-whole framework runs offline.  A real deployment swaps this class for a GCS
-or S3 client with the identical five methods.
+The paper persists Radar DataTree archives to S3-compatible object
+storage.  This module defines the :class:`Backend` protocol — the exact
+API surface the transactional layer needs (immutable puts, reads,
+batched reads, listing, last-modified times, and *conditional atomic
+swaps*, the compare-and-set primitive modern object stores expose, e.g.
+GCS generation preconditions / S3 conditional writes) — plus two
+implementations:
+
+* :class:`ObjectStore` — a local directory, so the whole framework runs
+  offline.  A real deployment swaps in a GCS or S3 client with the same
+  methods.
+* :class:`SimulatedLatencyStore` — a deterministic latency/throughput
+  model wrapped around any backend: every request pays a fixed
+  round-trip time plus ``bytes / bandwidth``.  It is what the remote
+  read benchmarks and tests run against, so prefetching and GET
+  coalescing are exercised in CI without a network.
+
+**Backend contract** (every implementation must honor all four):
+
+1. *Atomic puts.*  ``put`` either lands the complete object or nothing —
+   readers never observe a torn object.  The local backend writes a temp
+   file and renames; cloud stores give this for free.
+2. *Conditional swap.*  ``compare_and_swap`` atomically replaces a small
+   mutable object only when its current content equals ``expected``
+   (``None`` = "create only if absent").  It is the single mutable
+   primitive in the design; branch refs and the catalog document are the
+   only users.
+3. *Last-modified times.*  ``mtime`` reports the object's LastModified;
+   ``put(if_not_exists=True)`` on an existing key must *refresh* it.
+   The gc grace window keys off mtime to protect write-ahead objects
+   staged by in-flight commits (see :meth:`ObjectStore.put`).
+4. *Sanitizer hook placement.*  Under ``REPRO_TSAN=1`` a backend
+   publishes per-key happens-before edges: ``atomic_update(key)`` after
+   every put / delete / successful CAS, ``atomic_read(key)`` on every
+   get / failed CAS.  The hooks must fire *outside* any internal
+   critical section (the local CAS lock-file window), and a
+   ``schedule_point`` must precede the CAS so the deterministic
+   explorer can land a competitor inside the read-modify-write window.
+   Wrapper backends that delegate to an inner store inherit its hooks.
 """
 
 from __future__ import annotations
 
 import os
 import tempfile
-from typing import Iterator, Optional
+import time
+from typing import Dict, Iterator, Optional, Protocol, Sequence
 
 from repro.analysis.dynamic.runtime import (atomic_read, atomic_update,
+                                            new_lock, note_read, note_write,
                                             schedule_point)
 
 
+class Backend(Protocol):
+    """Structural protocol for object-store backends.
+
+    See the module docstring for the four-point contract (atomic puts,
+    conditional swap, mtime semantics, sanitizer hook placement) every
+    implementation must honor.  The transactional layer
+    (:class:`repro.store.Repository`) is written against exactly these
+    methods and nothing else.
+    """
+
+    def put(self, key: str, data: bytes, *,
+            if_not_exists: bool = False) -> bool:
+        """Atomically write ``data`` under ``key``; True if created."""
+        ...
+
+    def get(self, key: str) -> bytes:
+        """Return the object's bytes; raise ``KeyError`` when absent."""
+        ...
+
+    def get_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Fetch several objects in one batched request.
+
+        Returns ``{key: bytes}`` in input order.  A backend may amortize
+        round trips over the batch (one pipelined request instead of
+        ``len(keys)`` sequential GETs) — the prefetch plan's coalesced
+        fetches rely on this.  Raises ``KeyError`` on the first missing
+        key.
+        """
+        ...
+
+    def exists(self, key: str) -> bool:
+        """Whether the key currently resolves to an object."""
+        ...
+
+    def mtime(self, key: str) -> float:
+        """LastModified (epoch seconds); ``KeyError`` when absent."""
+        ...
+
+    def delete(self, key: str) -> None:
+        """Remove the object; deleting a missing key is a no-op."""
+        ...
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        """Yield every key starting with ``prefix``."""
+        ...
+
+    def compare_and_swap(self, key: str, expected: Optional[bytes],
+                         new: bytes) -> bool:
+        """Atomically replace ``key`` iff its content equals ``expected``."""
+        ...
+
+
 class ObjectStore:
-    """Key/value blob store.  Keys are ``/``-separated paths.
+    """Filesystem-backed :class:`Backend`.  Keys are ``/``-separated paths.
 
     Under the concurrency sanitizer (``REPRO_TSAN=1``) every put /
     successful CAS is a release and every get / failed CAS an acquire on
     the key — the happens-before edges that make the lock-free branch-ref
-    commit and catalog document loops race-clean by construction.
+    commit and catalog document loops race-clean by construction.  Per
+    the backend contract, these hooks fire outside the CAS lock-file
+    window.
     """
 
     def __init__(self, root: str):
@@ -80,6 +168,7 @@ class ObjectStore:
         return True
 
     def get(self, key: str) -> bytes:
+        """Read one object (an acquire on the key under the sanitizer)."""
         path = self._path(key)
         atomic_read(self._tsan_key(key))
         try:
@@ -88,7 +177,17 @@ class ObjectStore:
         except FileNotFoundError:
             raise KeyError(key) from None
 
+    def get_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Fetch several objects; the local backend just loops ``get``.
+
+        Local disk has no round trip to amortize, so there is nothing to
+        coalesce — the method exists so callers can write one batched
+        fetch path that a latency-bearing backend accelerates.
+        """
+        return {key: self.get(key) for key in keys}
+
     def exists(self, key: str) -> bool:
+        """Whether the key currently resolves to an object."""
         return os.path.exists(self._path(key))
 
     def mtime(self, key: str) -> float:
@@ -104,6 +203,7 @@ class ObjectStore:
             raise KeyError(key) from None
 
     def delete(self, key: str) -> None:
+        """Remove the object; deleting a missing key is a no-op."""
         try:
             os.unlink(self._path(key))
         except FileNotFoundError:
@@ -111,6 +211,7 @@ class ObjectStore:
         atomic_update(self._tsan_key(key))
 
     def list(self, prefix: str = "") -> Iterator[str]:
+        """Yield every key starting with ``prefix`` (temp files skipped)."""
         base = self.root
         start = os.path.join(base, prefix) if prefix else base
         if not os.path.isdir(start):
@@ -178,3 +279,178 @@ class ObjectStore:
         finally:
             os.close(fd)
             os.unlink(lock)
+
+
+class SimulatedLatencyStore:
+    """Deterministic latency/throughput model over any :class:`Backend`.
+
+    Every request against the inner store is charged a fixed round-trip
+    time plus ``bytes / bandwidth`` — the two-parameter cost model that
+    separates S3-class stores from local disk.  The cost is *pure
+    arithmetic over the request* (no wall-clock reads, no randomness),
+    so the accumulated :meth:`stats` are bit-identical across machines
+    and runs — they are what the remote-read benchmark gates.  With
+    ``sleep=True`` (the default) each charge is also slept, so
+    wall-clock measurements against this store behave like a real
+    high-latency backend; tests that only assert on request counts pass
+    ``sleep=False`` and stay instant.
+
+    A batched :meth:`get_many` pays **one** round trip for the whole
+    batch (a pipelined connection) plus bandwidth for the total payload
+    — which is exactly why the read path coalesces GETs into per-shard
+    batches instead of issuing one request per chunk.
+
+    Correctness semantics (atomicity, CAS, mtime refresh) and sanitizer
+    hook placement are entirely the inner backend's — this wrapper adds
+    accounting and delay, never behavior, per the backend contract's
+    wrapper clause.
+    """
+
+    #: metadata requests (exists/mtime/list/delete/CAS) pay the round
+    #: trip but carry no accounted payload
+    def __init__(self, inner: Backend, *, rtt_s: float = 0.05,
+                 bandwidth_bps: float = 200e6, sleep: bool = True):
+        self.inner = inner
+        self.rtt_s = float(rtt_s)
+        self.bandwidth_bps = float(bandwidth_bps)
+        self.sleep = bool(sleep)
+        self._stats_lock = new_lock("SimulatedLatencyStore._stats_lock")
+        self._get_requests = 0      # read round trips (get + get_many calls)
+        self._keys_fetched = 0      # objects returned by those round trips
+        self._bytes_fetched = 0
+        self._put_requests = 0
+        self._meta_requests = 0     # exists/mtime/list/delete/CAS round trips
+        self._simulated_s = 0.0     # virtual seconds charged (deterministic)
+
+    @property
+    def root(self) -> str:
+        """The inner backend's root (path-based callers see through us)."""
+        return self.inner.root
+
+    # -- cost model --------------------------------------------------------
+    def _charge(self, nbytes: int, *, reads: int = 0, keys: int = 0,
+                puts: int = 0, metas: int = 0) -> None:
+        """Account one request and (optionally) sleep its simulated cost."""
+        cost = self.rtt_s + (nbytes / self.bandwidth_bps
+                             if self.bandwidth_bps > 0 else 0.0)
+        with self._stats_lock:
+            note_write(self, "_get_requests", owner="SimulatedLatencyStore")
+            note_write(self, "_keys_fetched", owner="SimulatedLatencyStore")
+            note_write(self, "_bytes_fetched", owner="SimulatedLatencyStore")
+            note_write(self, "_put_requests", owner="SimulatedLatencyStore")
+            note_write(self, "_meta_requests", owner="SimulatedLatencyStore")
+            note_write(self, "_simulated_s", owner="SimulatedLatencyStore")
+            self._get_requests += reads
+            self._keys_fetched += keys
+            self._bytes_fetched += nbytes if reads else 0
+            self._put_requests += puts
+            self._meta_requests += metas
+            self._simulated_s += cost
+        if self.sleep and cost > 0.0:
+            time.sleep(cost)
+
+    def stats(self) -> Dict[str, float]:
+        """Deterministic request accounting since construction.
+
+        ``coalesce_keys_per_get`` is the average number of objects each
+        read round trip returned — 1.0 means no batching; higher means
+        the prefetch plan's per-shard coalescing is working.
+        """
+        with self._stats_lock:
+            note_read(self, "_get_requests", owner="SimulatedLatencyStore")
+            note_read(self, "_keys_fetched", owner="SimulatedLatencyStore")
+            note_read(self, "_bytes_fetched", owner="SimulatedLatencyStore")
+            note_read(self, "_put_requests", owner="SimulatedLatencyStore")
+            note_read(self, "_meta_requests", owner="SimulatedLatencyStore")
+            note_read(self, "_simulated_s", owner="SimulatedLatencyStore")
+            gets = self._get_requests
+            return {
+                "get_requests": gets,
+                "keys_fetched": self._keys_fetched,
+                "bytes_fetched": self._bytes_fetched,
+                "put_requests": self._put_requests,
+                "meta_requests": self._meta_requests,
+                "simulated_s": self._simulated_s,
+                "coalesce_keys_per_get": (
+                    self._keys_fetched / gets if gets else 0.0),
+            }
+
+    def reset_stats(self) -> None:
+        """Zero the request counters (the virtual clock restarts too)."""
+        with self._stats_lock:
+            note_write(self, "_get_requests", owner="SimulatedLatencyStore")
+            note_write(self, "_keys_fetched", owner="SimulatedLatencyStore")
+            note_write(self, "_bytes_fetched", owner="SimulatedLatencyStore")
+            note_write(self, "_put_requests", owner="SimulatedLatencyStore")
+            note_write(self, "_meta_requests", owner="SimulatedLatencyStore")
+            note_write(self, "_simulated_s", owner="SimulatedLatencyStore")
+            self._get_requests = 0
+            self._keys_fetched = 0
+            self._bytes_fetched = 0
+            self._put_requests = 0
+            self._meta_requests = 0
+            self._simulated_s = 0.0
+
+    # -- Backend API (delegate + charge) -----------------------------------
+    def put(self, key: str, data: bytes, *, if_not_exists: bool = False) -> bool:
+        """Inner put, charged one round trip plus upload bandwidth."""
+        created = self.inner.put(key, data, if_not_exists=if_not_exists)
+        self._charge(len(data), puts=1)
+        return created
+
+    def get(self, key: str) -> bytes:
+        """Inner get, charged one round trip plus download bandwidth."""
+        data = self.inner.get(key)
+        self._charge(len(data), reads=1, keys=1)
+        return data
+
+    def get_many(self, keys: Sequence[str]) -> Dict[str, bytes]:
+        """Batched inner fetch: one round trip for the whole batch.
+
+        This is the coalescing payoff — ``n`` chunks cost ``1 x RTT +
+        total_bytes / bandwidth`` instead of ``n x RTT``.
+        """
+        if not keys:
+            return {}
+        out = self.inner.get_many(keys)
+        self._charge(sum(len(v) for v in out.values()),
+                     reads=1, keys=len(out))
+        return out
+
+    def exists(self, key: str) -> bool:
+        """Inner exists, charged one metadata round trip."""
+        found = self.inner.exists(key)
+        self._charge(0, metas=1)
+        return found
+
+    def mtime(self, key: str) -> float:
+        """Inner mtime, charged one metadata round trip."""
+        t = self.inner.mtime(key)
+        self._charge(0, metas=1)
+        return t
+
+    def delete(self, key: str) -> None:
+        """Inner delete, charged one metadata round trip."""
+        self.inner.delete(key)
+        self._charge(0, metas=1)
+
+    def list(self, prefix: str = "") -> Iterator[str]:
+        """Inner listing, charged one metadata round trip per call.
+
+        Real stores page LIST responses; one charge per call models the
+        common single-page case and keeps the count deterministic.
+        """
+        self._charge(0, metas=1)
+        return self.inner.list(prefix)
+
+    def compare_and_swap(self, key: str, expected: Optional[bytes],
+                         new: bytes) -> bool:
+        """Inner CAS, charged one metadata round trip.
+
+        Atomicity and sanitizer hook placement are the inner backend's;
+        the charge lands after the swap so the delay never widens the
+        inner critical section.
+        """
+        swapped = self.inner.compare_and_swap(key, expected, new)
+        self._charge(0, metas=1)
+        return swapped

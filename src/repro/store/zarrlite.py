@@ -24,6 +24,7 @@ from .codecs import default_codec
 
 @dataclass
 class ArrayMeta:
+    """Array metadata: shape, dtype, chunk grid, fill and codec."""
     shape: Tuple[int, ...]
     dtype: str
     chunks: Tuple[int, ...]
@@ -107,6 +108,12 @@ def _stats_prune(st, value_gt: Optional[float],
     return False
 
 
+def _stats_prune_cid(session, path: str, cid, value_gt, value_lt) -> bool:
+    """Whether one chunk's stat sidecar proves it cannot match."""
+    st = session.chunk_stats(path, cid)
+    return st is not None and _stats_prune(st, value_gt, value_lt)
+
+
 class Array:
     """Lazy chunked array bound to a snapshot (read) or transaction (write)."""
 
@@ -178,6 +185,13 @@ class Array:
 
         cids = list(grid.chunks_for_selection(sels))
         pool = self._session.reader_pool() if len(cids) > 1 else None
+        if len(cids) > 1:
+            # coalesce the multi-chunk read into batched GETs up front —
+            # with a pool the batches overlap the fills below (which wait
+            # on in-flight chunks instead of re-fetching); without one the
+            # fills run against a warm cache.  Writable sessions no-op
+            # (staged chunks shadow committed ones).
+            self._session.prefetch([(self.path, cids)], wait=pool is None)
         if pool is None:
             for cid in cids:
                 fill_from(cid)
@@ -258,6 +272,20 @@ class Array:
             return ("unwritten" if unwritten else "read"), (coords, chunk[loc])
 
         pool = session.reader_pool() if len(cids) > 1 else None
+        if len(cids) > 1 and not session.writable:
+            # batch the manifest + stat-sidecar round trips, then prefetch
+            # only the chunks pruning cannot skip — so coalescing changes
+            # GET counts, never the gated pruning fetch accounting
+            session._prefetch_manifests([self.path], stats=prune)
+            if prune:
+                survivors = [
+                    cid for cid in cids
+                    if not _stats_prune_cid(session, self.path, cid,
+                                            value_gt, value_lt)
+                ]
+            else:
+                survivors = cids
+            session.prefetch([(self.path, survivors)], wait=pool is None)
         if pool is None:
             outcomes = [scan_chunk(cid) for cid in cids]
         else:

@@ -30,6 +30,7 @@ Params = Any
 
 def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
                     final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    """Cosine decay schedule with linear warmup."""
     def lr(step):
         step = step.astype(jnp.float32)
         warm = peak_lr * step / jnp.maximum(1.0, warmup_steps)
@@ -42,6 +43,7 @@ def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
 
 
 def constant_schedule(lr_value: float) -> Callable[[jax.Array], jax.Array]:
+    """Constant learning-rate schedule."""
     return lambda step: jnp.float32(lr_value)
 
 
@@ -82,6 +84,7 @@ def _dequantize(q: Dict[str, jax.Array], shape, *,
 
 @dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW hyperparameters."""
     peak_lr: float = 3e-4
     warmup_steps: int = 100
     total_steps: int = 10_000
@@ -94,6 +97,7 @@ class AdamWConfig:
 
 
 class OptState(NamedTuple):
+    """AdamW optimizer state (moments plus step count)."""
     step: jax.Array
     mu: Params
     nu: Params

@@ -23,12 +23,14 @@ Params = Any
 
 
 class TrainState(NamedTuple):
+    """Training state: parameters plus optimizer state."""
     params: Params
     opt: OptState
 
 
 def init_train_state(cfg: ModelConfig, ocfg: AdamWConfig,
                      pcfg: ParallelConfig, key) -> TrainState:
+    """Initialize parameters and optimizer state for ``cfg``."""
     params = M.init_params(cfg, key, dtype=jnp.dtype(pcfg.param_dtype))
     opt_init, _ = make_adamw(ocfg, pcfg)
     return TrainState(params=params, opt=opt_init(params))
@@ -58,7 +60,9 @@ def make_train_step(
     attn_impl: str = "blocked",
     grad_transform: Callable[[Params], Params] | None = None,
 ) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict]]:
-    """``grad_transform`` hooks cross-pod compression (see
+    """Build the jitted training step.
+
+    ``grad_transform`` hooks cross-pod compression (see
     distributed.compression) between accumulation and the optimizer."""
     _, opt_update = make_adamw(ocfg, pcfg)
 

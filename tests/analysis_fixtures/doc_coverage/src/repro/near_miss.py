@@ -1,0 +1,29 @@
+"""Fixture: the doc-coverage rule must stay silent here."""
+
+
+def _private_helper(x):
+    return x
+
+
+def documented(x):
+    """Round-trip ``x`` unchanged."""
+    return x
+
+
+def documented_colon_summary():
+    """Summary introducing a continuation: details follow."""
+    return None
+
+
+class Documented:
+    """A documented class: methods are out of scope."""
+
+    def method_without_docstring(self):
+        return None
+
+
+def outer():
+    """Nested definitions are out of scope."""
+    def inner():
+        return 1
+    return inner()

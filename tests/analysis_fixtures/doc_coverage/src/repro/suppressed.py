@@ -1,0 +1,5 @@
+"""Fixture: an in-place suppression the report must keep visible."""
+
+
+def intentionally_bare():  # repro: ignore[doc-coverage]
+    return None

@@ -1,0 +1,19 @@
+"""Fixture: true positives for the doc-coverage rule."""
+
+
+def undocumented(x):
+    return x
+
+
+class BadSummary:
+    """one-line summary that trails off without punctuation
+
+    Body text that does not rescue the summary line.
+    """
+
+
+def blank_first_line():
+    """
+    Summary hiding on the second line.
+    """
+    return None

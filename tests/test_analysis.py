@@ -36,6 +36,7 @@ LINT = REPO / "scripts" / "lint.py"
 ALL_RULES = {
     "dependency-policy",
     "determinism",
+    "doc-coverage",
     "exception-safety",
     "kernel-contract",
     "lock-discipline",
@@ -90,6 +91,13 @@ CORPUS = {
         [("src/repro/tp.py", "requests"),
          ("src/repro/tp.py", "torch")],
         [("src/repro/suppressed.py", "requests")],
+    ),
+    "doc-coverage": (
+        "doc_coverage", ProjectConfig(),
+        [("src/repro/tp.py", "BadSummary"),
+         ("src/repro/tp.py", "blank_first_line"),
+         ("src/repro/tp.py", "undocumented")],
+        [("src/repro/suppressed.py", "intentionally_bare")],
     ),
     "exception-safety": (
         "exception_safety", ProjectConfig(),

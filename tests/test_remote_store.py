@@ -1,0 +1,424 @@
+"""Remote object-store backends and the prefetching read path.
+
+Pins the PR 9 contracts: the :class:`Backend` protocol semantics of
+:class:`SimulatedLatencyStore` (delegation + deterministic request
+accounting), planner/prefetch correctness (bitwise-identical reads,
+exact chunk-fetch parity with demand paging, pinned GET counts), the
+byte-budget admission policy, in-flight coordination between a prefetch
+plan and racing demand reads, time-series readahead, and the serve
+layer's batched ``/chunks`` endpoint.  Every store here uses
+``sleep=False`` — the tests assert on *counts*, which are deterministic
+by construction, never on wall-clock.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.store import (
+    ObjectStore,
+    Repository,
+    SimulatedLatencyStore,
+    content_hash,
+)
+from repro.store.icechunk import PREFETCH_BATCH_KEYS
+
+
+def sim_store(tmp_path, name="store", **kw):
+    kw.setdefault("sleep", False)
+    return SimulatedLatencyStore(ObjectStore(str(tmp_path / name)), **kw)
+
+
+def build_repo(store, *, n_time=12, n_cols=32, time_chunk=2, paths=("x",)):
+    """A repository with ``paths`` arrays of ``n_time // time_chunk``
+    time chunks each, deterministic content."""
+    repo = Repository.create(store)
+    tx = repo.writable_session()
+    rng = np.random.default_rng(7)
+    data = {}
+    for p in paths:
+        a = tx.create_array(p, shape=(n_time, n_cols), dtype="float32",
+                            chunks=(time_chunk, n_cols))
+        data[p] = rng.standard_normal((n_time, n_cols)).astype(np.float32)
+        a.write_full(data[p])
+    tx.commit("seed")
+    return repo, data
+
+
+# ---------------------------------------------------------------------------
+# SimulatedLatencyStore: backend contract + accounting
+# ---------------------------------------------------------------------------
+
+def test_sim_store_delegates_backend_semantics(tmp_path):
+    sim = sim_store(tmp_path)
+    assert sim.put("a/b", b"one") is True
+    assert sim.put("a/b", b"one", if_not_exists=True) is False
+    assert sim.get("a/b") == b"one"
+    assert sim.exists("a/b") and not sim.exists("a/c")
+    assert sim.mtime("a/b") > 0
+    assert sorted(sim.list("a/")) == ["a/b"]
+
+    # CAS is the inner store's atomicity, observed through the wrapper
+    assert sim.compare_and_swap("ref", None, b"v1") is True
+    assert sim.compare_and_swap("ref", b"stale", b"v2") is False
+    assert sim.compare_and_swap("ref", b"v1", b"v2") is True
+    assert sim.get("ref") == b"v2"
+
+    sim.delete("a/b")
+    sim.delete("a/b")                       # idempotent
+    with pytest.raises(KeyError):
+        sim.get("a/b")
+    with pytest.raises(KeyError):
+        sim.mtime("a/b")
+
+
+def test_sim_store_counts_round_trips(tmp_path):
+    sim = sim_store(tmp_path, rtt_s=0.05, bandwidth_bps=100.0)
+    sim.put("k1", b"xxxx")
+    sim.put("k2", b"yyyy")
+    sim.reset_stats()
+
+    sim.get("k1")
+    got = sim.get_many(["k1", "k2"])
+    assert list(got) == ["k1", "k2"]        # input order preserved
+
+    stats = sim.stats()
+    # one single GET + one batched GET = 2 round trips for 3 objects
+    assert stats["get_requests"] == 2
+    assert stats["keys_fetched"] == 3
+    assert stats["bytes_fetched"] == 12
+    assert stats["coalesce_keys_per_get"] == pytest.approx(1.5)
+    # the virtual clock is pure arithmetic: 2 * rtt + bytes / bandwidth
+    assert stats["simulated_s"] == pytest.approx(2 * 0.05 + 12 / 100.0)
+
+    sim.exists("k1")
+    sim.mtime("k1")
+    sim.delete("k2")
+    assert sim.stats()["meta_requests"] == 3
+
+    sim.reset_stats()
+    zero = sim.stats()
+    assert zero["get_requests"] == zero["keys_fetched"] == 0
+    assert zero["simulated_s"] == 0.0
+    assert zero["coalesce_keys_per_get"] == 0.0
+
+
+def test_sim_store_empty_batch_is_free(tmp_path):
+    sim = sim_store(tmp_path)
+    assert sim.get_many([]) == {}
+    assert sim.stats()["get_requests"] == 0
+
+
+def test_repository_accepts_backend_objects(tmp_path):
+    # _coerce_store: strings open a local ObjectStore; Backend instances
+    # (including wrappers) pass through untouched
+    repo, data = build_repo(sim_store(tmp_path))
+    assert isinstance(repo.store, SimulatedLatencyStore)
+    again = Repository.open(str(tmp_path / "store"))
+    with again.readonly_session() as s:
+        np.testing.assert_array_equal(s.array("x")[:], data["x"])
+
+
+def test_snapshot_hint_opens_in_one_round_trip(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, data = build_repo(sim)
+    head = repo.branch_head()
+    sim.reset_stats()
+    with repo.readonly_session(snapshot_hint=head) as s:
+        assert s.snapshot_id == head
+        # branch ref + snapshot doc arrive in one coalesced GET
+        assert sim.stats()["get_requests"] == 1
+        np.testing.assert_array_equal(s.array("x")[:], data["x"])
+    sim.reset_stats()
+    with repo.readonly_session() as s:            # unhinted: two serial GETs
+        assert s.snapshot_id == head
+        assert sim.stats()["get_requests"] == 2
+
+
+def test_stale_snapshot_hint_degrades_to_head(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, _ = build_repo(sim)
+    stale = repo.branch_head()
+    tx = repo.writable_session()
+    tx.array("x").write_full(np.zeros((12, 32), np.float32))
+    tx.commit("advance")
+    head = repo.branch_head()
+    sim.reset_stats()
+    with repo.readonly_session(snapshot_hint=stale) as s:
+        # a hint the branch moved past must never pin the session to it
+        assert s.snapshot_id == head
+        # speculative coalesced GET + the real head's snapshot doc
+        assert sim.stats()["get_requests"] == 2
+        assert float(s.array("x")[0, 0]) == 0.0
+
+
+def test_vanished_snapshot_hint_falls_back(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, data = build_repo(sim)
+    head = repo.branch_head()
+    with repo.readonly_session(snapshot_hint="no-such-snapshot") as s:
+        assert s.snapshot_id == head             # missing doc: serial path
+        np.testing.assert_array_equal(s.array("x")[:], data["x"])
+
+
+def test_catalog_open_session_uses_entry_hint(tmp_path):
+    from repro.catalog import Catalog
+
+    sim = sim_store(tmp_path)
+    repo, _ = build_repo(sim)
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    catalog.register_repository(repo, repo_id="R")
+    head = repo.branch_head()
+    sim.reset_stats()
+    with catalog.open_session("R") as s:
+        assert s.snapshot_id == head
+        assert sim.stats()["get_requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# prefetch: correctness, accounting, coalescing
+# ---------------------------------------------------------------------------
+
+def test_prefetch_is_bitwise_and_fetch_neutral(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, data = build_repo(sim, n_time=12, time_chunk=2)
+
+    # demand-paged baseline (fresh session, cold cache)
+    with repo.readonly_session() as s:
+        baseline = s.array("x")[:]
+        demand_fetches = s.cache_stats()["chunk_fetches"]
+    np.testing.assert_array_equal(baseline, data["x"])
+
+    with repo.readonly_session() as s:
+        sim.reset_stats()       # session open (ref + snapshot doc) untimed
+        report = s.prefetch(["x"])
+        assert report.planned == report.scheduled == 6
+        assert report.cached == report.deferred == report.inflight == 0
+        out = s.array("x")[:]
+        cache = s.cache_stats()
+    np.testing.assert_array_equal(out, baseline)
+
+    # prefetching reads exactly the chunks demand paging would, and every
+    # demand read landed on a prefetched chunk
+    assert cache["chunk_fetches"] == demand_fetches == 6
+    assert cache["prefetch_hits"] == 6
+    assert cache["prefetch_hot"] == 0       # every hot chunk was consumed
+
+    # network shape: 1 manifest GET + 1 coalesced chunk batch (6 keys
+    # fit in one PREFETCH_BATCH_KEYS group), nothing per-chunk
+    stats = sim.stats()
+    assert stats["get_requests"] == 2
+    assert stats["keys_fetched"] == 7
+    assert stats["coalesce_keys_per_get"] > 3
+
+
+def test_prefetch_selection_matches_demand_set(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, data = build_repo(sim, n_time=12, time_chunk=2)
+    with repo.readonly_session() as s:
+        report = s.prefetch([("x", (slice(0, 4),))])
+        assert report.planned == 2          # rows 0..4 -> chunks 0 and 1
+        np.testing.assert_array_equal(s.array("x")[0:4], data["x"][0:4])
+        assert s.cache_stats()["prefetch_hits"] == 2
+
+
+def test_prefetch_batches_split_at_batch_key_limit(tmp_path):
+    # one manifest-shard group holding PREFETCH_BATCH_KEYS + 4 chunks:
+    # 2 time-chunks (both in shard 0) x 10 column chunks
+    sim = sim_store(tmp_path)
+    repo = Repository.create(sim)
+    tx = repo.writable_session()
+    data = np.arange(2 * 40, dtype=np.float32).reshape(2, 40)
+    tx.create_array("x", shape=(2, 40), dtype="float32",
+                    chunks=(1, 4)).write_full(data)
+    tx.commit("seed")
+    with repo.readonly_session() as s:
+        sim.reset_stats()
+        report = s.prefetch(["x"]).wait()
+        assert report.scheduled == PREFETCH_BATCH_KEYS + 4
+        assert report.batches == 2          # 16 + 4
+        # 1 manifest GET + one GET per batch
+        assert sim.stats()["get_requests"] == 3
+        np.testing.assert_array_equal(s.array("x")[:], data)
+
+
+def test_prefetch_groups_by_manifest_shard(tmp_path):
+    # 20 single-row time chunks span manifest shards 0/1/2 (8 chunks per
+    # shard): the plan keeps shard groups as separate coalesced batches
+    sim = sim_store(tmp_path)
+    repo, _ = build_repo(sim, n_time=20, time_chunk=1)
+    with repo.readonly_session() as s:
+        sim.reset_stats()
+        report = s.prefetch(["x"]).wait()
+        assert report.scheduled == 20
+        assert report.batches == 3          # shards of 8 + 8 + 4
+    assert sim.stats()["get_requests"] == 4  # manifests + 3 chunk batches
+
+
+def test_prefetch_dedups_against_cache_and_repeat_plans(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, _ = build_repo(sim, n_time=8, time_chunk=2)
+    with repo.readonly_session() as s:
+        first = s.prefetch(["x"])
+        assert first.scheduled == 4
+        again = s.prefetch(["x"])
+        assert again.planned == 4
+        assert again.cached == 4            # everything already resident
+        assert again.scheduled == again.batches == 0
+
+
+def test_prefetch_admission_defers_over_budget_chunks(tmp_path):
+    sim = sim_store(tmp_path)
+    # each decoded chunk is 2 * 32 * 4 = 256 bytes; budget holds ~2
+    repo, data = build_repo(sim, n_time=12, time_chunk=2)
+    with repo.readonly_session(cache_bytes=600) as s:
+        report = s.prefetch(["x"])
+        assert report.planned == 6
+        assert report.deferred > 0          # budget-overflow left to demand
+        assert report.scheduled + report.deferred == 6
+        # deferred chunks still read correctly (demand paging fallback)
+        np.testing.assert_array_equal(s.array("x")[:], data["x"])
+
+
+def test_writable_session_skips_prefetch(tmp_path):
+    repo, _ = build_repo(sim_store(tmp_path))
+    tx = repo.writable_session()
+    try:
+        report = tx.prefetch(["x"])
+        assert report.planned == report.scheduled == 0
+    finally:
+        tx.close()
+
+
+def test_demand_read_waits_on_inflight_prefetch(tmp_path):
+    # a slow backend: the demand read must coordinate with the in-flight
+    # plan (wait for its event) instead of double-fetching
+    class SlowStore(ObjectStore):
+        """Test double: delays batched GETs until released."""
+        gate = threading.Event()
+
+        def get_many(self, keys):
+            self.gate.wait(5.0)
+            return super().get_many(keys)
+
+    slow = SlowStore(str(tmp_path / "slow"))
+    SlowStore.gate.set()
+    repo, data = build_repo(slow, n_time=4, time_chunk=2)
+    with repo.readonly_session(read_workers=2) as s:
+        SlowStore.gate.clear()
+        report = s.prefetch(["x"], wait=False)
+        assert report.scheduled == 2
+        release = threading.Timer(0.05, SlowStore.gate.set)
+        release.start()
+        try:
+            out = s.array("x")[:]           # blocks on the in-flight batch
+        finally:
+            release.cancel()
+            SlowStore.gate.set()
+        np.testing.assert_array_equal(out, data["x"])
+        cache = s.cache_stats()
+        assert cache["chunk_fetches"] == 2  # fetched once, not twice
+        assert cache["prefetch_inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# get_blobs: the shared batch primitive
+# ---------------------------------------------------------------------------
+
+def test_get_blobs_one_round_trip_dedup(tmp_path):
+    sim = sim_store(tmp_path)
+    repo, _ = build_repo(sim, n_time=4, time_chunk=2)
+    with repo.readonly_session() as s:
+        refs = [s.chunk_ref("x", (i, 0)) for i in range(2)]
+        assert all(refs)
+        sim.reset_stats()
+        got = s.get_blobs(refs + refs[:1])  # duplicate ref fetches once
+        assert set(got) == set(refs)
+        for ref, blob in got.items():
+            assert content_hash(blob) == ref   # CAS: ref == hash(bytes)
+    stats = sim.stats()
+    assert stats["get_requests"] == 1
+    assert stats["keys_fetched"] == 2
+
+
+# ---------------------------------------------------------------------------
+# time-series readahead
+# ---------------------------------------------------------------------------
+
+def test_iter_time_blocks_readahead(tmp_path):
+    from repro.radar.timeseries import iter_time_blocks
+
+    sim = sim_store(tmp_path)
+    repo, data = build_repo(sim, n_time=12, time_chunk=2,
+                            paths=("a", "b"))
+    with repo.readonly_session() as s:
+        windows = []
+        rows = []
+        for i0, i1 in iter_time_blocks(s, ["a", "b"], n_time=12, block=4):
+            windows.append((i0, i1))
+            rows.append(s.array("a")[i0:i1])
+        cache = s.cache_stats()
+    assert windows == [(0, 4), (4, 8), (8, 12)]
+    np.testing.assert_array_equal(np.concatenate(rows), data["a"])
+    # every chunk of the consumed array was prefetched ahead of its read
+    assert cache["prefetch_hits"] >= 6
+
+    with repo.readonly_session() as s:
+        assert list(iter_time_blocks(s, ["a"], n_time=5, block=2,
+                                     start=1)) == [(1, 3), (3, 5)]
+        with pytest.raises(ValueError):
+            list(iter_time_blocks(s, ["a"], n_time=5, block=0))
+
+
+# ---------------------------------------------------------------------------
+# serve: the batched /chunks endpoint rides the same primitive
+# ---------------------------------------------------------------------------
+
+def test_service_chunks_batched_single_fetch(tmp_path):
+    from repro.catalog import Catalog
+    from repro.etl import generate_raw_archive, ingest
+    from repro.serve.http import ArchiveService
+
+    raw = ObjectStore(str(tmp_path / "raw"))
+    generate_raw_archive(raw, site_id="KVNX", n_scans=2, n_az=40,
+                         n_gates=80, n_sweeps=1, seed=3)
+    repo = Repository.create(str(tmp_path / "site"))
+    ingest(raw, repo, batch_size=2, time_chunk=1)
+    sim = SimulatedLatencyStore(ObjectStore(str(tmp_path / "site")),
+                                sleep=False)
+    catalog = Catalog.create(str(tmp_path / "catalog"))
+    catalog.register_repository(Repository.open(sim), repo_id="KVNX")
+
+    service = ArchiveService(catalog)
+    try:
+        with catalog.open_session("KVNX") as s:
+            path = next(p for p in s.list_arrays()
+                        if p.endswith("/DBZH"))
+            refs = [s.chunk_ref(path, cid)
+                    for cid in s.array(path).meta.grid.chunk_ids()]
+        refs = [r for r in refs if r][:3]
+        assert len(refs) >= 2
+
+        # warm the service's tenant session (ref + snapshot doc reads)
+        # with the first ref, so the batched call's accounting isolates
+        # the chunk fetch itself
+        service.chunks(refs[:1], "KVNX")
+        sim.reset_stats()
+        got = service.chunks(refs, "KVNX")
+        assert sorted(got) == sorted(refs)
+        for ref, blob in got.items():
+            assert content_hash(blob) == ref
+        # all cache misses ride one coalesced get_blobs round trip
+        assert sim.stats()["get_requests"] == 1
+
+        # second call is pure cache: no new backend reads
+        sim.reset_stats()
+        again = service.chunks(refs, "KVNX")
+        assert again == got
+        assert sim.stats()["get_requests"] == 0
+
+        with pytest.raises(Exception, match="unknown chunk"):
+            service.chunks([refs[0], "0" * 16], "KVNX")
+    finally:
+        service.close()
