@@ -1,0 +1,215 @@
+"""Streaming ingest + incremental products: the live-update cost model.
+
+The claim (§5.4 streaming mode): as scans arrive one commit at a time,
+maintaining a product incrementally must be **bitwise identical** to
+rebuilding it from scratch at the same head while doing strictly less
+work.  All gates are machine-independent counts/ratios/flags:
+
+* ``incremental_bitwise`` — CAPPI, QPE and the 2-site mosaic states all
+  equal their from-scratch comparators byte for byte (also a hard
+  assertion: any mismatch fails the bench outright).
+* ``cells_per_update`` / ``chunk_fetches_per_update`` — average grid
+  cells recomputed and store chunks fetched per incremental catch-up.
+* ``cells_saved_ratio`` — 1 − (incremental cells / cells a
+  recompute-at-every-head strategy would touch); the asymptotic win.
+* ``fetch_saved_ratio`` — 1 − (last catch-up's fetches / a cold
+  from-scratch rebuild's fetches at the same head); both sides are
+  deterministic chunk counts.
+* ``feed_deterministic`` — LiveFeed snapshot ids are identical for
+  ``workers=1`` and ``workers=2`` (encode fan-out never leaks into
+  content).
+
+Update latency is recorded for context but never gated (CI timing is
+noise).
+
+Runnable standalone::
+
+    PYTHONPATH=src python benchmarks/bench_streaming.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+if __package__:
+    from .common import Record
+else:  # executed as a script: put the repo root on sys.path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.common import Record
+
+import numpy as np
+
+from repro.catalog import Catalog
+from repro.etl import LiveFeed, live_scan_feed
+from repro.radar import (IncrementalGridProduct, IncrementalMosaic,
+                         IncrementalQPE, ProductRequest, compute_product,
+                         streaming_qpe)
+from repro.store import Repository
+
+SITES = ["KVNX", "KTLX"]
+VCP = "VCP-212"
+
+
+def _feeds(base: Path, *, n_az: int, n_gates: int, n_sweeps: int
+           ) -> Tuple[Catalog, Dict[str, LiveFeed]]:
+    catalog = Catalog.create(str(base / "catalog"))
+    feeds = {}
+    for site in SITES:
+        repo = Repository.create(str(base / f"store-{site}"))
+        feeds[site] = LiveFeed(
+            repo,
+            live_scan_feed(site_id=site, n_az=n_az, n_gates=n_gates,
+                           n_sweeps=n_sweeps),
+            catalog=catalog, repo_id=site,
+        )
+    return catalog, feeds
+
+
+def _cold_fetches(repo, fn) -> Tuple[object, int]:
+    """Run ``fn(session)`` on a fresh session; return (result, fetches)."""
+    session = repo.readonly_session()
+    try:
+        before = session.cache_stats()["chunk_fetches"]
+        out = fn(session)
+        return out, session.cache_stats()["chunk_fetches"] - before
+    finally:
+        session.close()
+
+
+def run(*, quick: bool = False) -> List[Record]:
+    if quick:
+        geo = dict(n_az=48, n_gates=120, n_sweeps=2)
+        ny = nx = 32
+        bootstrap, live = 3, 3
+    else:
+        geo = dict(n_az=180, n_gates=400, n_sweeps=3)
+        ny = nx = 64
+        bootstrap, live = 4, 4
+
+    base = Path(tempfile.mkdtemp(prefix="repro-bench-streaming-"))
+    catalog, feeds = _feeds(base, **geo)
+    for feed in feeds.values():
+        feed.ingest_next(bootstrap)
+
+    site0 = SITES[0]
+    repo0 = feeds[site0].repo
+    cappi_req = ProductRequest(kind="cappi", vcp=VCP, moment="DBZH",
+                               ny=ny, nx=nx)
+    qpe_req = ProductRequest(kind="qpe", vcp=VCP, moment="DBZH", sweep=0)
+    mosaic_req = ProductRequest(kind="mosaic", product="column_max",
+                                moment="DBZH", ny=ny, nx=nx)
+    cappi = IncrementalGridProduct(repo0, cappi_req)
+    qpe = IncrementalQPE(repo0, qpe_req)
+    mosaic = IncrementalMosaic(catalog, mosaic_req)
+    products = [cappi, qpe, mosaic]
+
+    # bootstrap + per-scan catch-ups; every update() is one report
+    reports = [p.update() for p in products]
+    latencies: List[float] = []
+    for _ in range(live):
+        for feed in feeds.values():
+            feed.ingest_next(1)
+        for p in products:
+            t0 = time.perf_counter()
+            reports.append(p.update())
+            latencies.append(time.perf_counter() - t0)
+    last_round = reports[-len(products):]
+
+    n_updates = len(reports)
+    inc_cells = sum(r.cells_computed for r in reports)
+    inc_fetches = sum(r.chunk_fetches for r in reports)
+    # a recompute-at-every-head strategy touches each report's full
+    # rebuild footprint; the incremental path touched inc_cells instead
+    naive_cells = sum(r.cells_full for r in reports)
+
+    # -- from-scratch comparators at the final heads --------------------
+    cappi_full, cappi_full_fetches = _cold_fetches(
+        repo0,
+        lambda s: compute_product(s, cappi_req.with_options(
+            grid=cappi.read().grid)))
+    qpe_full, qpe_full_fetches = _cold_fetches(
+        repo0, lambda s: streaming_qpe(s, vcp=VCP, sweep=0, moment="DBZH"))
+    mosaic_full = compute_product(
+        catalog, mosaic_req.with_options(grid=mosaic.grid))
+
+    cappi_state = cappi.read()
+    qpe_state = qpe.read()
+    mosaic_state = mosaic.composite()
+    checks = {
+        "cappi values": cappi_state.values.tobytes()
+        == cappi_full.values.tobytes(),
+        "cappi times": cappi_state.times.tobytes()
+        == cappi_full.times.tobytes(),
+        "qpe accum": qpe_state.accum_mm.tobytes()
+        == qpe_full.accum_mm.tobytes(),
+        "mosaic composite": mosaic_state.composite.tobytes()
+        == mosaic_full.composite.tobytes(),
+    }
+    for rid in mosaic_state.repo_ids:
+        checks[f"mosaic {rid}"] = (
+            mosaic_state.results[rid].values.tobytes()
+            == mosaic_full.results[rid].values.tobytes())
+    for what, ok in checks.items():
+        if not ok:
+            raise RuntimeError(
+                f"incremental {what} diverged from the from-scratch "
+                "product at the same head")
+    bitwise = 1.0 if all(checks.values()) else 0.0
+
+    # strictly-fewer contracts, asserted hard (the PR's acceptance gate)
+    full_final_fetches = cappi_full_fetches + qpe_full_fetches
+    last_fetches = sum(r.chunk_fetches
+                       for r in last_round if r.kind != "mosaic")
+    if not inc_cells < naive_cells:
+        raise RuntimeError(
+            f"incremental cells {inc_cells} not < naive {naive_cells}")
+    if not last_fetches < full_final_fetches:
+        raise RuntimeError(
+            f"incremental fetches {last_fetches} not < from-scratch "
+            f"{full_final_fetches}")
+
+    # -- feed determinism across encode worker counts --------------------
+    sids = {}
+    for w in (1, 2):
+        repo = Repository.create(str(base / f"det-w{w}"))
+        feed = LiveFeed(repo, live_scan_feed(site_id=site0, **geo),
+                        workers=w)
+        feed.ingest_next(2)
+        sids[w] = list(feed.report.snapshot_ids)
+    feed_det = 1.0 if sids[1] == sids[2] else 0.0
+    if not feed_det:
+        raise RuntimeError(
+            f"LiveFeed snapshot ids depend on workers: {sids}")
+
+    records = [
+        Record("streaming", "incremental_bitwise", bitwise, "flag",
+               {"checks": len(checks)}),
+        Record("streaming", "feed_deterministic", feed_det, "flag"),
+        Record("streaming", "cells_per_update", inc_cells / n_updates,
+               "cells", {"updates": n_updates}),
+        Record("streaming", "chunk_fetches_per_update",
+               inc_fetches / n_updates, "chunks"),
+        Record("streaming", "cells_saved_ratio",
+               1.0 - inc_cells / naive_cells, "ratio",
+               {"incremental": inc_cells, "naive": naive_cells}),
+        Record("streaming", "fetch_saved_ratio",
+               1.0 - last_fetches / full_final_fetches, "ratio",
+               {"incremental": last_fetches,
+                "from_scratch": full_final_fetches}),
+        Record("streaming", "update_latency_p50_ms",
+               1e3 * float(np.median(latencies)), "ms"),
+    ]
+    return records
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for r in run(quick=args.quick):
+        print(r.csv())

@@ -19,7 +19,7 @@ change), regenerate and commit it::
 
     PYTHONPATH=src python -m benchmarks.run --quick \
         --json benchmarks/BENCH_BASELINE.json \
-        --only ingest,transactional,timeseries,catalog,compaction,grid,serve,remote_read
+        --only ingest,transactional,timeseries,catalog,compaction,grid,serve,remote_read,streaming
 """
 
 from __future__ import annotations
@@ -76,6 +76,12 @@ GATED: List[Tuple[str, str, str]] = [
     ("remote_read", "qvp_chunk_fetches", "lower"),
     ("remote_read", "qvp_prefetch_hit_ratio", "higher"),
     ("remote_read", "mosaic_remote_gets", "lower"),
+    ("streaming", "incremental_bitwise", "higher"),
+    ("streaming", "feed_deterministic", "higher"),
+    ("streaming", "cells_per_update", "lower"),
+    ("streaming", "chunk_fetches_per_update", "lower"),
+    ("streaming", "cells_saved_ratio", "higher"),
+    ("streaming", "fetch_saved_ratio", "higher"),
 ]
 
 

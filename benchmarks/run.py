@@ -22,7 +22,7 @@ import time
 
 BENCHES = ["ingest", "qvp", "qpe", "timeseries", "transactional",
            "catalog", "compaction", "grid", "kernels", "roofline", "serve",
-           "remote_read"]
+           "remote_read", "streaming"]
 
 
 def main() -> None:

@@ -1,0 +1,95 @@
+"""Live nowcasting end to end: streaming ingest, watch, incremental update.
+
+The §5.4 streaming story on one page.  Two sites go "live": a
+:class:`~repro.etl.LiveFeed` per site appends one scan per commit (with
+``auto_compact_every`` keeping the layout analysis-ready), and a
+nowcast loop long-polls :meth:`~repro.catalog.Catalog.watch` — the same
+cursor protocol the archive server exposes at ``GET /watch`` — patching
+a single-site CAPPI and a two-site column-max mosaic forward with
+:mod:`repro.radar.incremental`.  Each catch-up recomputes only the new
+scans' in-reach cells, and the final states are **bitwise-identical**
+to rebuilding from scratch through the unified
+:func:`~repro.radar.products.compute_product` entry point.
+
+    PYTHONPATH=src python examples/live_nowcast.py
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.catalog import Catalog
+from repro.etl import LiveFeed, live_scan_feed
+from repro.radar import (IncrementalGridProduct, IncrementalMosaic,
+                         ProductRequest, compute_product)
+from repro.store import Repository
+
+SITES = ["KVNX", "KTLX"]
+base = Path(tempfile.mkdtemp(prefix="repro-nowcast-"))
+
+# -- two live feeds, one catalog -------------------------------------------
+# every committed scan merges its coverage delta into the catalog, so
+# watchers see heads advance scan by scan
+catalog = Catalog.create(str(base / "catalog"))
+feeds = {}
+for site in SITES:
+    repo = Repository.create(str(base / f"store-{site}"))
+    feeds[site] = LiveFeed(
+        repo,
+        live_scan_feed(site_id=site, n_az=48, n_gates=120, n_sweeps=2),
+        auto_compact_every=4, catalog=catalog, repo_id=site,
+    )
+for site, feed in feeds.items():
+    feed.ingest_next(2)  # a little history before going live
+    print(f"bootstrapped {site}: {feed.report.n_commits} scans, "
+          f"head {feed.head()[:12]}")
+
+# -- incremental products over the bootstrap history -----------------------
+# state lives *in the repository* as versioned arrays under products/;
+# reopening with the same name after a restart resumes from it
+cappi_req = ProductRequest(kind="cappi", vcp="VCP-212", moment="DBZH",
+                           ny=32, nx=32)
+mosaic_req = ProductRequest(kind="mosaic", product="column_max",
+                            moment="DBZH", ny=32, nx=32)
+cappi = IncrementalGridProduct(feeds["KVNX"].repo, cappi_req)
+mosaic = IncrementalMosaic(catalog, mosaic_req)
+for rep in (cappi.update(), mosaic.update()):
+    print(f"bootstrap {rep.kind}: {rep.n_new_scans} scans in, "
+          f"{rep.cells_computed} cells computed")
+
+# -- the nowcast loop: watch the catalog, patch the products ---------------
+LIVE_SCANS = 3
+for feed in feeds.values():
+    feed.start(max_scans=LIVE_SCANS, interval_s=0.05)
+
+_, cursor = catalog.poll_changes()  # arm the cursor at the current heads
+while True:
+    changes, cursor = catalog.watch(cursor, timeout_s=10.0,
+                                    poll_interval_s=0.05)
+    for rep in (cappi.update(), mosaic.update()):
+        if rep.noop:
+            continue
+        saved = 1.0 - rep.cells_computed / rep.cells_full
+        print(f"  +{rep.n_new_scans} scan(s) -> {rep.kind}: patched "
+              f"{rep.cells_computed} cells ({saved:.0%} of a rebuild "
+              f"avoided), {rep.chunk_fetches} chunk fetches")
+    if not changes and all(f.wait(timeout=0.0) for f in feeds.values()):
+        break  # feeds done and the cursor is caught up
+for feed in feeds.values():
+    feed.stop()
+
+# -- the incremental state IS the product (bitwise) ------------------------
+state = cappi.read()
+session = feeds["KVNX"].repo.readonly_session()
+try:
+    full = compute_product(session, cappi_req.with_options(grid=state.grid))
+finally:
+    session.close()
+assert state.values.tobytes() == full.values.tobytes()
+mos = mosaic.composite()
+full_mos = compute_product(catalog, mosaic_req.with_options(grid=mosaic.grid))
+assert mos.composite.tobytes() == full_mos.composite.tobytes()
+print(f"final CAPPI {state.values.shape} and mosaic "
+      f"{mos.composite.shape} (peak {np.nanmax(mos.composite):.1f} dBZ) "
+      "are bitwise-identical to from-scratch rebuilds")

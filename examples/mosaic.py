@@ -13,9 +13,9 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.catalog import Catalog, federated_mosaic
+from repro.catalog import Catalog
 from repro.etl import generate_raw_archive, ingest
-from repro.radar import (cappi_from_session, read_grid_product,
+from repro.radar import (ProductRequest, compute_product, read_grid_product,
                          write_grid_product)
 from repro.store import ObjectStore, Repository
 
@@ -34,18 +34,21 @@ for i, site in enumerate(["KVNX", "KTLX", "KICT"]):
 
 # -- single-site CAPPI off the store ---------------------------------------
 session = catalog.open_session("KVNX", read_workers=4)
-cappi = cappi_from_session(session, vcp="VCP-212", moment="DBZH",
-                           altitude_m=2000.0, ny=120, nx=120)
+cappi = compute_product(session, ProductRequest(
+    kind="cappi", vcp="VCP-212", moment="DBZH",
+    altitude_m=2000.0, ny=120, nx=120))
 print(f"KVNX CAPPI 2 km: {cappi.shape}, "
       f"{np.isfinite(cappi.values).mean():.0%} of cells in reach, "
       f"{cappi.chunk_fetches} chunks fetched")
 
 # -- multi-site composite through the planner ------------------------------
 t0, t1 = catalog.entry("KVNX").time_range()
-mosaic = federated_mosaic(
-    catalog, moment="DBZH", product="column_max",
-    time_between=(t0, (t0 + t1) / 2),     # planner prunes to these chunks
-    ny=160, nx=160, workers=3, read_workers=4,
+mosaic = compute_product(
+    catalog,
+    ProductRequest(kind="mosaic", moment="DBZH", product="column_max",
+                   time_between=(t0, (t0 + t1) / 2),  # pruned to these chunks
+                   ny=160, nx=160),
+    workers=3, read_workers=4,
 )
 print(f"mosaic over {mosaic.repo_ids}: composite {mosaic.composite.shape} "
       f"on lat [{mosaic.grid.lat_min:.2f}, {mosaic.grid.lat_max:.2f}] x "

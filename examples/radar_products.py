@@ -11,8 +11,8 @@ import numpy as np
 
 from repro.core import RadarArchive
 from repro.etl import generate_raw_archive, ingest, level2
-from repro.radar import (point_series_from_session, qpe_from_session,
-                         qpe_from_volumes, qvp_from_session)
+from repro.radar import (ProductRequest, compute_product,
+                         point_series_from_session, qpe_from_volumes)
 from repro.store import ObjectStore, Repository
 
 base = Path(tempfile.mkdtemp(prefix="repro-products-"))
@@ -24,7 +24,8 @@ ingest(raw, repo, batch_size=5)
 session = RadarArchive(repo).session()
 
 # -- QVP (Ryzhkov et al. 2016): time-height view from the highest sweep --
-qvp = qvp_from_session(session, vcp="VCP-212", sweep=3, moment="DBZH")
+qvp = compute_product(session, ProductRequest(
+    kind="qvp", vcp="VCP-212", sweep=3, moment="DBZH"))
 print("QVP:", qvp.profile.shape, f"elevation {qvp.elevation_deg:.1f} deg")
 finite = np.isfinite(qvp.profile)
 print(f"  coverage {finite.mean():.0%}, "
@@ -35,7 +36,8 @@ bb = np.nanargmax(col)
 print(f"  brightband near gate {bb} (height {qvp.height_m[bb]:.0f} m)")
 
 # -- QPE (Marshall-Palmer 1948): Z-R accumulation --------------------------
-qpe = qpe_from_session(session, vcp="VCP-212", sweep=0)
+qpe = compute_product(session, ProductRequest(
+    kind="qpe", vcp="VCP-212", sweep=0))
 print(f"QPE: {qpe.accum_mm.shape}, {qpe.n_scans} scans over "
       f"{qpe.total_hours:.2f} h, max accum {qpe.accum_mm.max():.2f} mm")
 

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.catalog import Catalog, query as q
 from repro.etl import generate_raw_archive, ingest
-from repro.radar.qvp import qvp_from_session
+from repro.radar import ProductRequest, compute_product
 from repro.serve.http import ArchiveServer, ArchiveService, decode_payload
 from repro.store import ObjectStore, Repository, SimulatedLatencyStore
 from repro.store.chunks import content_hash
@@ -58,8 +58,9 @@ print(f"query: {res.n_matches} gates > 50 dBZ, "
 sim["KVNX"].reset_stats()
 session = catalog.open_session("KVNX", read_workers=4)
 try:
-    qvp = qvp_from_session(session, vcp="VCP-212", sweep=0, moment="DBZH",
-                           quality_moment="RHOHV")
+    qvp = compute_product(session, ProductRequest(
+        kind="qvp", vcp="VCP-212", sweep=0, moment="DBZH",
+        quality_moment="RHOHV"))
     cache = session.cache_stats()
 finally:
     session.close()

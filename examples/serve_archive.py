@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.catalog import Catalog
 from repro.etl import generate_raw_archive, ingest
-from repro.radar.qvp import qvp_from_session
+from repro.radar import ProductRequest, compute_product
 from repro.serve.http import (ArchiveServer, ArchiveService, decode_payload,
                               encode_product)
 from repro.store import ObjectStore, Repository
@@ -79,9 +79,9 @@ with ArchiveServer(service) as server:
 
     # served bytes == encoding the in-process call, bitwise
     session = catalog.open_session("KVNX")
-    local = encode_product(qvp_from_session(
-        session, vcp="VCP-212", sweep=0, moment="DBZH",
-        quality_moment=None))
+    local = encode_product(compute_product(session, ProductRequest(
+        kind="qvp", vcp="VCP-212", sweep=0, moment="DBZH",
+        quality_moment=None)))
     session.close()
     assert body == local
     print("served body is bitwise-identical to the in-process encoding")

@@ -35,15 +35,18 @@ if [[ "${SMOKE_SKIP_BENCH:-0}" == "1" ]]; then
 else
   # each bench is a regression gate: a failed assertion or a nonzero exit
   # fails the smoke run (set -e applies inside the loop body)
-  for bench in ingest transactional timeseries catalog compaction grid serve remote_read; do
+  for bench in ingest transactional timeseries catalog compaction grid serve remote_read streaming; do
     echo "== ${bench} benchmark (quick) =="
     python "benchmarks/bench_${bench}.py" --quick
   done
 
-  # the end-to-end remote-archive walkthrough must stay runnable: it is
-  # the docs' worked example (docs/ARCHITECTURE.md links it)
+  # the end-to-end walkthroughs must stay runnable: they are the docs'
+  # worked examples (docs/ARCHITECTURE.md links them)
   echo "== examples/remote_archive.py =="
   python examples/remote_archive.py
+
+  echo "== examples/live_nowcast.py =="
+  python examples/live_nowcast.py
 fi
 
 echo "== smoke OK =="

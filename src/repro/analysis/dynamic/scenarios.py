@@ -16,7 +16,10 @@ concurrent entry points the ROADMAP's service ambitions lean on:
 * ``close-vs-first-read`` — ``Session.close()`` races the first
   ``reader_pool()`` build (the PR 6 fix, now on the live code),
 * ``catalog-register-cas-retry`` — two ``register_repository`` calls
-  merge through the catalog document's read-modify-CAS loop.
+  merge through the catalog document's read-modify-CAS loop,
+* ``feed-vs-compaction`` — a scan-per-commit :class:`repro.etl.LiveFeed`
+  races background compaction on the same repository; the compactor
+  rebases over the appends and no scan is lost or torn.
 
 ``scripts/lint.py --dynamic`` sweeps this corpus with
 :func:`repro.analysis.dynamic.scheduler.verify_clean`; regression tests
@@ -240,12 +243,51 @@ def catalog_register_cas_retry() -> Scenario:
                     check=check, teardown=_teardown)
 
 
+def feed_vs_compaction() -> Scenario:
+    """A live scan-per-commit feed races background compaction.
+
+    The streaming-ingest upkeep interleaving: the compactor's CAS loop
+    must replan over whatever the feed committed meanwhile, the feed's
+    append must rebase over a landed compaction, and every scan must
+    survive re-chunking bit for bit."""
+
+    def setup():
+        from repro.etl import LiveFeed, live_scan_feed
+
+        root = _mkdtemp()
+        repo = _new_repo(root)
+        feed = LiveFeed(repo, live_scan_feed(n_az=8, n_gates=12,
+                                             n_sweeps=1))
+        feed.ingest_next(2)   # fragmented baseline worth compacting
+        return {"root": root, "repo": repo, "feed": feed}
+
+    def feeder(ctx) -> None:
+        ctx["feed"].ingest_next(1)
+
+    def compactor(ctx) -> None:
+        ctx["repo"].compact("timeseries")
+
+    def check(ctx) -> None:
+        assert ctx["feed"].report.n_commits == 3
+        s = ctx["repo"].readonly_session()
+        t = s.array("VCP-212/time").read()
+        assert t.shape == (3,), f"lost scan: time axis {t.shape}"
+        assert np.all(np.diff(t) > 0), f"non-monotone time {t}"
+        dbz = s.array("VCP-212/sweep_0/DBZH").read()
+        assert dbz.shape[0] == 3 and np.isfinite(dbz).any()
+
+    return Scenario("feed-vs-compaction", setup,
+                    [("feeder", feeder), ("compactor", compactor)],
+                    check=check, teardown=_teardown)
+
+
 CORPUS: Dict[str, Callable[[], Scenario]] = {
     "commit-vs-commit-rebase": commit_vs_commit_rebase,
     "gc-vs-inflight-commit": gc_vs_inflight_commit,
     "compact-vs-append": compact_vs_append,
     "close-vs-first-read": close_vs_first_read,
     "catalog-register-cas-retry": catalog_register_cas_retry,
+    "feed-vs-compaction": feed_vs_compaction,
 }
 
 

@@ -28,12 +28,9 @@ from ..radar import (
     PointSeries,
     QPEResult,
     QVPResult,
-    cappi_from_session,
-    column_max_from_session,
     point_series_from_session,
-    qpe_from_session,
-    qvp_from_session,
 )
+from ..radar.products import ProductRequest, compute_product
 from .query import (
     Box,
     Elevation,
@@ -218,11 +215,11 @@ def federated_qvp(
 
     def run(session, target: Target) -> QVPResult:
         ts = _workflow_time_slice(session, target, plan_)
-        return qvp_from_session(
-            session, vcp=target.vcp, sweep=target.sweep,
+        return compute_product(session, ProductRequest(
+            kind="qvp", vcp=target.vcp, sweep=target.sweep,
             moment=target.moment, quality_moment=quality_moment,
             quality_min=quality_min, time_slice=ts, mode=mode,
-        )
+        ))
 
     results = _fan_out(catalog, targets, run, workers=workers,
                        read_workers=read_workers, entries=plan_.entries)
@@ -270,9 +267,10 @@ def federated_qpe(
 
     def run(session, target: Target) -> QPEResult:
         ts = _workflow_time_slice(session, target, plan_)
-        return qpe_from_session(session, vcp=target.vcp, sweep=target.sweep,
-                                moment=target.moment, time_slice=ts,
-                                a=a, b=b, mode=mode)
+        return compute_product(session, ProductRequest(
+            kind="qpe", vcp=target.vcp, sweep=target.sweep,
+            moment=target.moment, time_slice=ts, a=a, b=b, mode=mode,
+        ))
 
     results = _fan_out(catalog, targets, run, workers=workers,
                        read_workers=read_workers, entries=plan_.entries)
@@ -323,18 +321,58 @@ def federated_mosaic(
     workers: Optional[int] = None,
     read_workers: int = 1,
 ) -> FederatedMosaic:
-    """Grid + composite every matching repository onto one shared grid.
+    """Deprecated alias for the unified product API.
 
-    The planner does the pruning: repositories outside ``within`` (a
-    :func:`repro.catalog.query.within_box` predicate or a ``(lat_min,
-    lat_max, lon_min, lon_max)`` tuple) or with no coverage in
-    ``time_between`` are never opened, and each opened repository reads
-    only the time chunks its planner window resolves to.  ``product`` is
-    ``"column_max"`` (all matched sweeps) or ``"cappi"`` (constant
-    ``altitude_m``); ``grid`` defaults to the smallest grid covering the
-    matched repositories' catalog footprints, so mosaics are
-    reproducible from the catalog document alone.
+    Use ``compute_product(catalog, ProductRequest(kind="mosaic", ...))``
+    from :mod:`repro.radar.products`; results are bitwise identical.
     """
+    import warnings
+
+    warnings.warn(
+        "federated_mosaic is deprecated; use repro.radar.products."
+        "compute_product with ProductRequest(kind='mosaic')",
+        DeprecationWarning, stacklevel=2,
+    )
+    return compute_product(catalog, ProductRequest(
+        kind="mosaic", moment=moment, product=product,
+        altitude_m=altitude_m, grid=grid, ny=ny, nx=nx, vcp=vcp,
+        sweep=sweep, elevation=elevation, time_between=time_between,
+        within=within,
+        repos=tuple(repos) if repos is not None else None,
+        method=method, mode=mode,
+    ), workers=workers, read_workers=read_workers)
+
+
+def _federated_mosaic(
+    catalog,
+    *,
+    moment: str = "DBZH",
+    product: str = "column_max",
+    altitude_m: float = 2000.0,
+    grid: Optional[CartesianGrid] = None,
+    ny: int = 240,
+    nx: int = 240,
+    vcp: Optional[str] = None,
+    sweep: Optional[int] = None,
+    elevation=None,
+    time_between: Optional[Tuple[float, float]] = None,
+    within=None,
+    repos=None,
+    method: str = "nearest",
+    mode: str = "auto",
+    workers: Optional[int] = None,
+    read_workers: int = 1,
+) -> FederatedMosaic:
+    # the mosaic implementation (dispatched via repro.radar.products).
+    # The planner does the pruning: repositories outside ``within`` (a
+    # within_box predicate or a (lat_min, lat_max, lon_min, lon_max)
+    # tuple) or with no coverage in ``time_between`` are never opened,
+    # and each opened repository reads only the time chunks its planner
+    # window resolves to.  ``product`` is "column_max" (all matched
+    # sweeps) or "cappi" (constant ``altitude_m``); ``grid`` defaults to
+    # the smallest grid covering the matched repositories' catalog
+    # footprints, so mosaics are reproducible from the catalog document
+    # alone.
     if product not in ("column_max", "cappi"):
         raise ValueError(
             f"unknown mosaic product {product!r} (column_max|cappi)"
@@ -389,13 +427,12 @@ def federated_mosaic(
             warm += [(f"{vcp}/sweep_{si}/{moment}", []) for si in sweeps]
             session.prefetch(warm, wait=False)
             ts = _workflow_time_slice(session, targets[0], plan_)
-        kw = dict(vcp=vcp, moment=moment, grid=grid,
-                  sweeps=sweeps,
-                  time_slice=ts, method=method, mode=mode)
-        if product == "cappi":
-            prod = cappi_from_session(session, altitude_m=altitude_m, **kw)
-        else:
-            prod = column_max_from_session(session, **kw)
+        req = ProductRequest(
+            kind="cappi" if product == "cappi" else "column_max",
+            vcp=vcp, moment=moment, grid=grid, sweeps=tuple(sweeps),
+            altitude_m=altitude_m, time_slice=ts, method=method, mode=mode,
+        )
+        prod = compute_product(session, req)
         # re-base the fetch accounting on this whole call: the warm-up
         # above fetched chunks on the product's behalf *before* the
         # gridder snapshotted its own baseline, and those must stay

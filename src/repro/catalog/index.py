@@ -28,11 +28,13 @@ merges the coverage an :class:`repro.etl.pipeline.IngestReport` collected
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.dynamic.runtime import schedule_point
 from ..radar import geometry
 from ..store import ObjectStore, Repository
 from ..store.codecs import json_dumps, json_loads
@@ -461,6 +463,84 @@ class Catalog:
         repo = Repository.open(entry.uri)
         self._attached[repo_id] = repo
         return repo
+
+    # -- change feed -----------------------------------------------------
+    def heads(self, *, entries: Optional[Dict[str, CatalogEntry]] = None
+              ) -> Dict[str, Optional[str]]:
+        """Current branch head of every catalogued repository.
+
+        One atomic ref read per repository (the same CAS-backed read a
+        commit races against, so a head observed here is never torn).
+        Repositories this process cannot open — no recorded uri, remote
+        storage offline — fall back to the entry's recorded
+        ``snapshot_id``: stale at worst, and refreshed by ingest's
+        ``update_from_report`` / ``note_snapshot`` on every commit, so
+        watchers still converge.
+        """
+        entries = entries if entries is not None else self.entries()
+        out: Dict[str, Optional[str]] = {}
+        for rid in sorted(entries):
+            entry = entries[rid]
+            try:
+                repo = self.open_repository(rid, entry=entry)
+                out[rid] = repo.branch_head(entry.branch)
+            except Exception:
+                # unopenable from here: the recorded head is the
+                # conservative answer (never invents a change)
+                out[rid] = entry.snapshot_id
+        return out
+
+    def poll_changes(
+        self, cursor: Optional[Dict[str, Optional[str]]] = None
+    ) -> Tuple[List[Dict[str, Any]], Dict[str, Optional[str]]]:
+        """One non-blocking change poll against a head cursor.
+
+        ``cursor`` maps repo_id -> the last head the caller saw (the
+        second element of the previous call's return; ``None`` / missing
+        keys mean "never seen", so a fresh cursor reports every
+        repository once).  Returns ``(changes, new_cursor)`` where each
+        change is ``{"repo_id", "snapshot_id", "prev"}`` and
+        ``new_cursor`` is the complete current head map — pass it back
+        verbatim to resume.  Repositories dropped from the catalog
+        simply leave the cursor; they are not reported as changes.
+        """
+        cursor = dict(cursor or {})
+        heads = self.heads()
+        changes: List[Dict[str, Any]] = []
+        for rid, head in heads.items():
+            prev = cursor.get(rid)
+            if head != prev:
+                changes.append(
+                    {"repo_id": rid, "snapshot_id": head, "prev": prev}
+                )
+        return changes, heads
+
+    def watch(
+        self,
+        cursor: Optional[Dict[str, Optional[str]]] = None,
+        *,
+        timeout_s: float = 30.0,
+        poll_interval_s: float = 0.25,
+    ) -> Tuple[List[Dict[str, Any]], Dict[str, Optional[str]]]:
+        """Block until any repository head moves past ``cursor``.
+
+        The long-poll primitive under ``GET /watch``: re-polls every
+        ``poll_interval_s`` until :meth:`poll_changes` reports a change
+        or ``timeout_s`` elapses, then returns ``(changes, new_cursor)``
+        — ``changes == []`` means timeout, and the caller re-arms with
+        the returned cursor.  A ``None`` cursor returns immediately with
+        every repository (the bootstrap snapshot).
+        """
+        deadline = time.monotonic() + max(0.0, float(timeout_s))
+        while True:
+            changes, new_cursor = self.poll_changes(cursor)
+            if changes or cursor is None:
+                return changes, new_cursor
+            remaining = deadline - time.monotonic()
+            if remaining <= 0.0:
+                return [], new_cursor
+            schedule_point("Catalog.watch poll")
+            time.sleep(min(max(0.0, float(poll_interval_s)), remaining))
 
     def open_session(self, repo_id: str, *,
                      entry: Optional[CatalogEntry] = None, **session_kw):

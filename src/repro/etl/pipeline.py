@@ -221,6 +221,12 @@ def load(
             archive.append_scan(vol, tx=tx, commit=False)
             _observe_coverage(report.coverage, vol)
             report.n_volumes += 1
+        if not batch:
+            # an empty transaction would still mint a snapshot and move
+            # the head (the store's commit is unconditional); a batch with
+            # no volumes must leave the archive byte-identical
+            tx.abort()
+            continue
         sid = tx.commit(f"{message} [{start}:{start + len(batch)}]")
         report.snapshot_ids.append(sid)
         report.n_commits += 1
@@ -321,6 +327,12 @@ def ingest(
             load_s += time.perf_counter() - t0
             report.n_volumes += 1
             n += 1
+        if n == 0:
+            # committing an empty transaction would still mint a snapshot
+            # and move the head, and — worse — tick the auto-compaction
+            # counter before any data landed.  Nothing staged: abort.
+            tx.abort()
+            return
         t0 = time.perf_counter()
         sid = tx.commit(f"raw2zarr ingest [{start}:{start + n}]")
         load_s += time.perf_counter() - t0

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: scatter-update of incremental gridded products.
+
+When a live feed appends one scan, the cached gate->cell maps localize
+which Cartesian cells the new sweep touches; the incremental product
+machinery (:mod:`repro.radar.incremental`) computes fresh values for
+exactly those cells as a compact ``(time, touched)`` block and patches
+them into the full ``(time, cells)`` state instead of a full regrid.
+
+TPU has no efficient scatter, so the patch is phrased as its inverse
+gather: each output cell reads its update column through a precomputed
+``pos`` map (``-1`` marks untouched cells, which pass their state
+through bitwise).  Layout mirrors :mod:`repro.kernels.grid_map`: the
+compact update axis stays whole in VMEM — a cell anywhere on the grid
+may read any update column — while time and cells tile as
+``(T/bt, C/bc)``.  The combine (`set`/`add`/NaN-aware `max`) mirrors
+:func:`repro.kernels.ref.grid_update` operation-for-operation so
+interpret mode matches the oracle bitwise.
+
+VMEM per step (defaults bt=8, bc=1024, M touched cells): ``bt*M*4`` B of
+update block + two ``(bt, bc)`` tiles; ``bt`` is auto-clamped so the
+update block stays inside ``UPD_VMEM_BUDGET``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# update-block budget: roughly half of a TPU core's ~16 MB VMEM, leaving
+# room for the state/output tiles, the pos map and double buffering
+UPD_VMEM_BUDGET = 8 * 1024 * 1024
+
+_OPS = ("set", "add", "max")
+
+
+def _grid_update_kernel(state_ref, upd_ref, pos_ref, out_ref, *, op):
+    s = state_ref[...]                      # (bt, bc) float32
+    u = upd_ref[...]                        # (bt, M) float32
+    p = pos_ref[...].reshape(-1)            # (bc,) int32
+    touched = p >= 0
+    safe = jnp.where(touched, p, 0)
+    vals = jnp.take_along_axis(
+        u, jnp.broadcast_to(safe[None, :], (s.shape[0], safe.shape[0])),
+        axis=1,
+    )                                       # (bt, bc)
+    if op == "set":
+        new = vals
+    elif op == "add":
+        new = s + vals
+    else:
+        new = jnp.fmax(s, vals)
+    out_ref[...] = jnp.where(touched[None, :], new, s)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "bt", "bc", "interpret"))
+def grid_update_pallas(
+    state: jax.Array,                      # (T, C) float32 product state
+    upd: jax.Array,                        # (T, M) float32 update block
+    pos: jax.Array,                        # (C,) int32 into [0, M), -1 = keep
+    *,
+    op: str = "set",
+    bt: int = 8,
+    bc: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pallas inverse-scatter kernel patching touched grid cells."""
+    if op not in _OPS:
+        raise ValueError(f"unknown grid_update op {op!r} (set|add|max)")
+    T, C = state.shape
+    M = upd.shape[1]
+    if T == 0 or C == 0 or M == 0:
+        # nothing to patch (or nothing to patch into): the state is the
+        # answer, same as the oracle, without tiling a zero-extent grid
+        return state.astype(jnp.float32)
+    # the update axis stays whole per step: clamp the time tile to budget
+    bt = max(1, min(bt, T, UPD_VMEM_BUDGET // (M * 4)))
+    if not interpret and M * 4 > UPD_VMEM_BUDGET:
+        raise ValueError(
+            f"update block of {M} cells needs {M * 4 / 2**20:.0f} MB VMEM "
+            "per time row — beyond the budget; patch in cell batches "
+            "(interpret mode has no such limit)"
+        )
+    bc = min(bc, C)
+    Tp = -(-T // bt) * bt
+    Cp = -(-C // bc) * bc
+    if Tp != T:
+        # padded time rows read padded updates; sliced off below
+        state = jnp.pad(state, ((0, Tp - T), (0, 0)))
+        upd = jnp.pad(upd, ((0, Tp - T), (0, 0)))
+    if Cp != C:
+        # padded cells are marked untouched (-1): state (zero) passes
+        # through and is sliced off below
+        state = jnp.pad(state, ((0, 0), (0, Cp - C)))
+        pos = jnp.pad(pos, (0, Cp - C), constant_values=-1)
+    out = pl.pallas_call(
+        functools.partial(_grid_update_kernel, op=op),
+        out_shape=jax.ShapeDtypeStruct((Tp, Cp), jnp.float32),
+        grid=(Tp // bt, Cp // bc),
+        in_specs=[
+            pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, M), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(state.astype(jnp.float32), upd.astype(jnp.float32),
+      pos.astype(jnp.int32).reshape(-1, 1))
+    return out[:T, :C]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .grid_map import grid_map_pallas
+from .grid_update import grid_update_pallas
 from .mamba2_scan import mamba2_scan_pallas
 from .qvp_reduce import qvp_reduce_pallas
 from .zr_accum import zr_accum_pallas
@@ -73,6 +74,24 @@ def grid_map(
         return ref.grid_map(field, gate_idx, weights)
     return grid_map_pallas(field, gate_idx, weights, bt=bt, bc=bc,
                            interpret=interpret)
+
+
+def grid_update(
+    state: jax.Array,          # (time, cells) current product state
+    upd: jax.Array,            # (time, touched) compact update block
+    pos: jax.Array,            # (cells,) int32, -1 = untouched
+    *,
+    op: str = "set",
+    bt: int = 8,
+    bc: int = 1024,
+    mode: str = "auto",
+) -> jax.Array:
+    """Incremental scatter-update of a gridded product (kernel or ref)."""
+    use_kernel, interpret = _resolve(mode)
+    if not use_kernel:
+        return ref.grid_update(state, upd, pos, op=op)
+    return grid_update_pallas(state, upd, pos, op=op, bt=bt, bc=bc,
+                              interpret=interpret)
 
 
 def zr_accum(

@@ -174,3 +174,43 @@ def mamba2_scan(
     h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
     y = jnp.moveaxis(ys, 0, 1)              # (B, L, H, P)
     return y.astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# grid_update: incremental scatter-update of gridded product state
+# ---------------------------------------------------------------------------
+
+def grid_update(
+    state: jax.Array,           # (time, cells) current product state
+    upd: jax.Array,             # (time, touched) freshly computed values
+    pos: jax.Array,             # (cells,) int32: index into upd, -1 = keep
+    *,
+    op: str = "set",
+) -> jax.Array:
+    """Patch only the touched cells of a gridded product, (time, cells).
+
+    The incremental-product primitive: ``pos`` maps every grid cell to
+    its column in the compact update block (``-1`` for cells the new
+    data does not reach, which keep their state bitwise).  ``op`` is how
+    a touched cell combines with its update: ``"set"`` replaces,
+    ``"add"`` accumulates (QPE), ``"max"`` is the NaN-aware composite
+    maximum (column-max / mosaic).  With ``upd`` empty along cells the
+    state is returned unchanged.
+    """
+    if op not in ("set", "add", "max"):
+        raise ValueError(f"unknown grid_update op {op!r} (set|add|max)")
+    s = state.astype(jnp.float32)
+    if upd.shape[1] == 0 or s.shape[0] == 0 or s.shape[1] == 0:
+        return s
+    u = upd.astype(jnp.float32)
+    p = pos.astype(jnp.int32)
+    touched = p >= 0
+    safe = jnp.where(touched, p, 0)
+    vals = jnp.take(u, safe, axis=1)        # (time, cells)
+    if op == "set":
+        new = vals
+    elif op == "add":
+        new = s + vals
+    else:
+        new = jnp.fmax(s, vals)
+    return jnp.where(touched[None, :], new, s)

@@ -5,6 +5,11 @@ from .grid import (CartesianGrid, GridMapping, GridProduct, build_mapping,
                    cappi_from_session, column_max_from_session,
                    grid_sweep_from_session, read_grid_product,
                    write_grid_product)
+from .incremental import (IncrementalGridProduct, IncrementalMosaic,
+                          IncrementalQPE, UpdateReport, incremental_product,
+                          streaming_qpe)
+from .products import (PRODUCT_KINDS, ProductRequest, compute_product,
+                       request_from_params)
 from .qpe import QPEResult, qpe_from_session, qpe_from_volumes
 from .qvp import QVPResult, qvp_from_session, qvp_from_volumes
 from .timeseries import (PointSeries, point_series_from_session,
@@ -15,6 +20,10 @@ __all__ = [
     "CartesianGrid", "GridMapping", "GridProduct", "build_mapping",
     "cappi_from_session", "column_max_from_session",
     "grid_sweep_from_session", "read_grid_product", "write_grid_product",
+    "IncrementalGridProduct", "IncrementalMosaic", "IncrementalQPE",
+    "UpdateReport", "incremental_product", "streaming_qpe",
+    "PRODUCT_KINDS", "ProductRequest", "compute_product",
+    "request_from_params",
     "QPEResult", "qpe_from_session", "qpe_from_volumes",
     "QVPResult", "qvp_from_session", "qvp_from_volumes",
     "PointSeries", "point_series_from_session", "point_series_from_volumes",

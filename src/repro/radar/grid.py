@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import threading
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -532,15 +533,44 @@ def cappi_from_session(
     ny: int = 240,
     nx: int = 240,
 ) -> GridProduct:
-    """Constant-altitude PPI off the store.
+    """Deprecated alias for the unified product API.
 
-    Each cell samples the sweep whose beam is
-    closest (in height, MSL) to ``altitude_m`` at that cell's range.
-
-    One fused gather over the sweep-stacked block: per-cell sweep choice
-    is folded into the gate map (flat indices offset into the stacked
-    gate axis), so the kernel runs once regardless of sweep count.
+    Use ``compute_product(session, ProductRequest(kind="cappi", ...))``
+    from :mod:`repro.radar.products`; results are bitwise identical.
     """
+    warnings.warn(
+        "cappi_from_session is deprecated; use repro.radar.products."
+        "compute_product with ProductRequest(kind='cappi')",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .products import ProductRequest, compute_product
+    return compute_product(session, ProductRequest(
+        kind="cappi", vcp=vcp, moment=moment, altitude_m=altitude_m,
+        grid=grid, sweeps=tuple(sweeps) if sweeps is not None else None,
+        time_slice=time_slice, method=method, mode=mode, ny=ny, nx=nx,
+    ))
+
+
+def _cappi_from_session(
+    session: Session,
+    *,
+    vcp: str,
+    moment: str = "DBZH",
+    altitude_m: float = 2000.0,
+    grid: Optional[CartesianGrid] = None,
+    sweeps: Optional[Sequence[int]] = None,
+    time_slice: TimeSliceLike = None,
+    method: str = "nearest",
+    mode: str = "auto",
+    ny: int = 240,
+    nx: int = 240,
+) -> GridProduct:
+    # the CAPPI implementation (dispatched via repro.radar.products).
+    # Each cell samples the sweep whose beam is closest (in height, MSL)
+    # to ``altitude_m`` at that cell's range.  One fused gather over the
+    # sweep-stacked block: per-cell sweep choice is folded into the gate
+    # map (flat indices offset into the stacked gate axis), so the
+    # kernel runs once regardless of sweep count.
     site_lat, site_lon, site_alt = _site_from_root(session)
     sweeps = list(sweeps) if sweeps is not None else \
         _discover_sweeps(session, vcp)
@@ -586,10 +616,41 @@ def column_max_from_session(
     ny: int = 240,
     nx: int = 240,
 ) -> GridProduct:
-    """Column-maximum composite off the store.
+    """Deprecated alias for the unified product API.
 
-    Per cell, the max over all sweeps' regrids (the
-    classic composite-reflectivity product)."""
+    Use ``compute_product(session, ProductRequest(kind="column_max",
+    ...))`` from :mod:`repro.radar.products`; results are bitwise
+    identical.
+    """
+    warnings.warn(
+        "column_max_from_session is deprecated; use repro.radar.products."
+        "compute_product with ProductRequest(kind='column_max')",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .products import ProductRequest, compute_product
+    return compute_product(session, ProductRequest(
+        kind="column_max", vcp=vcp, moment=moment, grid=grid,
+        sweeps=tuple(sweeps) if sweeps is not None else None,
+        time_slice=time_slice, method=method, mode=mode, ny=ny, nx=nx,
+    ))
+
+
+def _column_max_from_session(
+    session: Session,
+    *,
+    vcp: str,
+    moment: str = "DBZH",
+    grid: Optional[CartesianGrid] = None,
+    sweeps: Optional[Sequence[int]] = None,
+    time_slice: TimeSliceLike = None,
+    method: str = "nearest",
+    mode: str = "auto",
+    ny: int = 240,
+    nx: int = 240,
+) -> GridProduct:
+    # the column-max implementation (dispatched via repro.radar.products):
+    # per cell, the max over all sweeps' regrids (the classic
+    # composite-reflectivity product).
     site_lat, site_lon, _ = _site_from_root(session)
     sweeps = list(sweeps) if sweeps is not None else \
         _discover_sweeps(session, vcp)

@@ -8,6 +8,7 @@ decodes complete volumes scan-by-scan.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -51,10 +52,36 @@ def qpe_from_session(
     b: float = 1.6,
     mode: str = "auto",
 ) -> QPEResult:
-    """Accumulate Z–R precipitation off the store.
+    """Deprecated alias for the unified product API.
 
-    ``time_slice``
-    accepts a slice or a planner-produced ``(i0, i1)`` index pair."""
+    Use ``compute_product(session, ProductRequest(kind="qpe", ...))``
+    from :mod:`repro.radar.products`; results are bitwise identical.
+    """
+    warnings.warn(
+        "qpe_from_session is deprecated; use repro.radar.products."
+        "compute_product with ProductRequest(kind='qpe')",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .products import ProductRequest, compute_product
+    return compute_product(session, ProductRequest(
+        kind="qpe", vcp=vcp, sweep=sweep, moment=moment,
+        time_slice=time_slice, a=a, b=b, mode=mode,
+    ))
+
+
+def _qpe_from_session(
+    session: Session,
+    *,
+    vcp: str,
+    sweep: int = 0,
+    moment: str = "DBZH",
+    time_slice: TimeSliceLike = None,
+    a: float = 200.0,
+    b: float = 1.6,
+    mode: str = "auto",
+) -> QPEResult:
+    # the QPE implementation (dispatched via repro.radar.products).
+    # ``time_slice`` accepts a slice or a planner (i0, i1) index pair.
     time_slice = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
     times = session.array(f"{vcp}/time")[time_slice]

@@ -9,6 +9,7 @@ no per-file decoding, which is where the paper's ~100× comes from.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -45,11 +46,39 @@ def qvp_from_session(
     time_slice: TimeSliceLike = None,
     mode: str = "auto",
 ) -> QVPResult:
-    """Compute a QVP straight off the transactional store.
+    """Deprecated alias for the unified product API.
 
-    ``time_slice`` accepts a slice or an ``(i0, i1)`` index pair as
-    produced by the catalog query planner.
+    Use ``compute_product(session, ProductRequest(kind="qvp", ...))``
+    from :mod:`repro.radar.products`; results are bitwise identical.
     """
+    warnings.warn(
+        "qvp_from_session is deprecated; use repro.radar.products."
+        "compute_product with ProductRequest(kind='qvp')",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .products import ProductRequest, compute_product
+    return compute_product(session, ProductRequest(
+        kind="qvp", vcp=vcp, sweep=sweep, moment=moment,
+        quality_moment=quality_moment, quality_min=quality_min,
+        time_slice=time_slice, mode=mode,
+    ))
+
+
+def _qvp_from_session(
+    session: Session,
+    *,
+    vcp: str,
+    sweep: int,
+    moment: str = "DBZH",
+    quality_moment: Optional[str] = "RHOHV",
+    quality_min: float = 0.85,
+    time_slice: TimeSliceLike = None,
+    mode: str = "auto",
+) -> QVPResult:
+    # the QVP implementation (dispatched via repro.radar.products):
+    # one chunk-aligned lazy read of exactly the requested arrays, then
+    # one fused reduction.  ``time_slice`` accepts a slice or an
+    # (i0, i1) index pair as produced by the catalog query planner.
     time_slice = as_time_slice(time_slice)
     base = f"{vcp}/sweep_{sweep}"
     # every array the profile needs, one asynchronous prefetch plan:

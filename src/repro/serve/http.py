@@ -40,7 +40,7 @@ import struct
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, HTTPServer
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from urllib.parse import parse_qs, urlsplit
 
 import numpy as np
@@ -48,11 +48,12 @@ import numpy as np
 from repro.analysis.dynamic.runtime import (new_lock, note_read, note_write,
                                             wrap_pool)
 from repro.catalog import query as q
-from repro.catalog.federation import FederatedMosaic, federated_mosaic
-from repro.radar.grid import (CartesianGrid, GridProduct, cappi_from_session,
-                              column_max_from_session)
-from repro.radar.qpe import QPEResult, qpe_from_session
-from repro.radar.qvp import QVPResult, qvp_from_session
+from repro.catalog.federation import FederatedMosaic
+from repro.radar.grid import CartesianGrid, GridProduct
+from repro.radar.products import (PRODUCT_KINDS, compute_product,
+                                  request_from_params)
+from repro.radar.qpe import QPEResult
+from repro.radar.qvp import QVPResult
 from repro.store.chunks import ChunkGrid, content_hash
 from repro.store.codecs import json_dumps, json_loads
 
@@ -62,8 +63,6 @@ __all__ = [
     "ApiError", "ArchiveService", "ArchiveServer", "create_app",
     "encode_product", "decode_payload", "PRODUCT_KINDS",
 ]
-
-PRODUCT_KINDS = ("qvp", "qpe", "cappi", "column_max", "mosaic")
 
 DEFAULT_CHUNK_CACHE_BYTES = 32 << 20
 DEFAULT_PRODUCT_CACHE_BYTES = 32 << 20
@@ -518,46 +517,91 @@ class ArchiveService:
                                          float) or 2000.0
         return clean
 
-    def compute_product(self, kind: str, clean: Dict[str, Any],
-                        tenant: str = "public") -> Any:
-        """Run the in-process product API for a parsed parameter dict —
-        the exact computation whose encoding a served body must match."""
+    def _request_for(self, kind: str, clean: Dict[str, Any]):
+        """The :class:`~repro.radar.products.ProductRequest` a canonical
+        parameter dict denotes — one declarative object per request, so
+        the HTTP surface and the in-process API cannot drift."""
         if kind == "mosaic":
             tb = clean["time_between"]
-            return federated_mosaic(
-                self.catalog, moment=clean["moment"],
-                product=clean["product"], altitude_m=clean["altitude_m"],
-                ny=clean["ny"], nx=clean["nx"],
-                time_between=tuple(tb) if tb else None,
-                repos=clean["repos"], read_workers=self._read_workers)
-        session = self.session(tenant, clean["repo"])
+            return request_from_params("mosaic", {
+                "moment": clean["moment"], "product": clean["product"],
+                "altitude_m": clean["altitude_m"],
+                "ny": clean["ny"], "nx": clean["nx"],
+                "time_between": tuple(tb) if tb else None,
+                "repos": clean["repos"],
+            })
         tsl = clean["time_slice"]
-        tsl = tuple(tsl) if tsl else None
-        try:
-            if kind == "qvp":
-                return qvp_from_session(
-                    session, vcp=clean["vcp"], sweep=clean["sweep"],
-                    moment=clean["moment"], quality_moment=None,
-                    time_slice=tsl)
-            if kind == "qpe":
-                return qpe_from_session(
-                    session, vcp=clean["vcp"], sweep=clean["sweep"],
-                    moment=clean["moment"], a=clean["a"], b=clean["b"],
-                    time_slice=tsl)
+        p: Dict[str, Any] = {
+            "vcp": clean["vcp"], "moment": clean["moment"],
+            "time_slice": tuple(tsl) if tsl else None,
+        }
+        if kind == "qvp":
+            p.update(sweep=clean["sweep"], quality_moment=None)
+        elif kind == "qpe":
+            p.update(sweep=clean["sweep"], a=clean["a"], b=clean["b"])
+        else:  # cappi / column_max
+            p.update(ny=clean["ny"], nx=clean["nx"])
             if kind == "cappi":
-                return cappi_from_session(
-                    session, vcp=clean["vcp"], moment=clean["moment"],
-                    altitude_m=clean["altitude_m"], ny=clean["ny"],
-                    nx=clean["nx"], time_slice=tsl)
-            return column_max_from_session(
-                session, vcp=clean["vcp"], moment=clean["moment"],
-                ny=clean["ny"], nx=clean["nx"], time_slice=tsl)
+                p["altitude_m"] = clean["altitude_m"]
+        return request_from_params(kind, p)
+
+    def compute_product(self, kind: str, clean: Dict[str, Any],
+                        tenant: str = "public") -> Any:
+        """Run the unified product API for a parsed parameter dict —
+        the exact computation whose encoding a served body must match.
+
+        Everything routes through
+        :func:`repro.radar.products.compute_product`: mosaics against
+        the catalog, the single-archive kinds against the tenant's
+        cached session."""
+        req = self._request_for(kind, clean)
+        if kind == "mosaic":
+            return compute_product(self.catalog, req,
+                                   read_workers=self._read_workers)
+        session = self.session(tenant, clean["repo"])
+        try:
+            return compute_product(session, req)
+        except ApiError:
+            raise
         except Exception as exc:
-            if isinstance(exc, ApiError):
-                raise
             raise ApiError(
                 404, f"product inputs not found: "
                      f"{type(exc).__name__}: {exc}") from None
+
+    # -- watch -----------------------------------------------------------
+    def watch(self, params: Dict[str, List[str]]) -> Dict[str, Any]:
+        """Long-poll the catalog for branch-head movement (``/watch``).
+
+        ``cursor`` is the JSON head map the previous response returned
+        (omit it to bootstrap: every repository reports once,
+        immediately); ``timeout_s`` bounds the poll (default 30, capped
+        at 300 so a dead client cannot pin a worker).  The response is
+        ``{"changes": [...], "cursor": {...}, "timed_out": bool}`` — the
+        client re-arms by echoing ``cursor`` back.  Responses are
+        time-varying by design, so this route is never cached or
+        ETagged.
+        """
+        raw = _one(params, "cursor")
+        cursor: Optional[Dict[str, Any]] = None
+        if raw is not None:
+            try:
+                cursor = json_loads(raw.encode("utf-8"))
+            except Exception:
+                raise ApiError(400, "cursor must be valid JSON") from None
+            if not isinstance(cursor, dict):
+                raise ApiError(400, "cursor must be a JSON object")
+        timeout_s = _typed(params, "timeout_s", float)
+        timeout_s = 30.0 if timeout_s is None else timeout_s
+        timeout_s = min(max(timeout_s, 0.0), 300.0)
+        poll = _typed(params, "poll_interval_s", float)
+        poll = 0.25 if poll is None else min(max(poll, 0.01), timeout_s or 0.25)
+        changes, new_cursor = self.catalog.watch(
+            cursor, timeout_s=timeout_s, poll_interval_s=poll)
+        return {
+            "changes": changes,
+            "cursor": new_cursor,
+            "timed_out": cursor is not None and not changes,
+        }
 
     # -- stats / shutdown ------------------------------------------------
     def stats(self) -> Dict[str, Any]:
@@ -687,6 +731,8 @@ def create_app(service: ArchiveService):
                            etag=content_hash(body))
             elif parts == ["stats"]:
                 self._send_json(service.stats())
+            elif parts == ["watch"]:
+                self._send_json(service.watch(params))
             elif len(parts) == 2 and parts[0] == "chunks":
                 repo = _require(_one(params, "repo"), "repo")
                 if "," in parts[1]:

@@ -46,13 +46,15 @@ from __future__ import annotations
 import os
 import tempfile
 import time
-from typing import Dict, Iterator, Optional, Protocol, Sequence
+from typing import (Dict, Iterator, Optional, Protocol, Sequence,
+                    runtime_checkable)
 
 from repro.analysis.dynamic.runtime import (atomic_read, atomic_update,
                                             new_lock, note_read, note_write,
                                             schedule_point)
 
 
+@runtime_checkable
 class Backend(Protocol):
     """Structural protocol for object-store backends.
 

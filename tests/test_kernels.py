@@ -14,6 +14,7 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.grid_map import grid_map_pallas
+from repro.kernels.grid_update import grid_update_pallas
 from repro.kernels.mamba2_scan import mamba2_scan_pallas
 from repro.kernels.qvp_reduce import qvp_reduce_pallas
 from repro.kernels.zr_accum import zr_accum_pallas
@@ -132,6 +133,89 @@ def test_grid_map_skips_nan_gates():
     w = np.ones((2, 2), np.float32)
     out = np.asarray(grid_map_pallas(field, idx, w, interpret=True))
     np.testing.assert_allclose(out, [[1.0, 3.0]])
+
+
+# ---------------------------------------------------------------------------
+# grid_update
+# ---------------------------------------------------------------------------
+
+@given(
+    t=st.integers(1, 9),
+    c=st.integers(1, 3000),
+    seed=st.integers(0, 999),
+    op=st.sampled_from(["set", "add", "max"]),
+    touched_frac=st.sampled_from([0.0, 0.1, 0.5, 1.0]),
+)
+@settings(max_examples=20, deadline=None)
+def test_grid_update_matches_ref_bitwise(t, c, seed, op, touched_frac):
+    """Interpret mode must equal the oracle *bitwise* (same op order) —
+    incremental products rely on it for the from-scratch equality the
+    streaming bench gates in CI."""
+    rng = np.random.default_rng(seed)
+    state = rng.normal(20.0, 12.0, size=(t, c)).astype(np.float32)
+    state[rng.random((t, c)) < 0.2] = np.nan
+    touched = rng.random(c) < touched_frac
+    m = int(touched.sum())
+    pos = np.full(c, -1, np.int32)
+    pos[touched] = rng.permutation(m).astype(np.int32)
+    upd = rng.normal(20.0, 12.0, size=(t, m)).astype(np.float32)
+    upd[rng.random((t, m)) < 0.2] = np.nan
+    got = np.asarray(grid_update_pallas(state, upd, pos, op=op, bt=4,
+                                        bc=256, interpret=True))
+    want = np.asarray(ref.grid_update(state, upd, pos, op=op))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_grid_update_untouched_cells_pass_through_bitwise():
+    """pos == -1 cells must keep their state bit-for-bit (NaN included)."""
+    state = np.array([[1.0, np.nan, 3.0, 4.0]], np.float32)
+    upd = np.array([[99.0]], np.float32)
+    pos = np.array([-1, -1, 0, -1], np.int32)
+    out = np.asarray(grid_update_pallas(state, upd, pos, interpret=True))
+    np.testing.assert_array_equal(out, [[1.0, np.nan, 99.0, 4.0]])
+
+
+def test_grid_update_ops_semantics():
+    state = np.array([[2.0, np.nan, 5.0]], np.float32)
+    upd = np.array([[3.0, 1.0, np.nan]], np.float32)
+    pos = np.array([0, 1, 2], np.int32)
+    out_set = np.asarray(grid_update_pallas(state, upd, pos, op="set",
+                                            interpret=True))
+    np.testing.assert_array_equal(out_set, upd)
+    out_add = np.asarray(grid_update_pallas(state, upd, pos, op="add",
+                                            interpret=True))
+    np.testing.assert_array_equal(out_add, [[5.0, np.nan, np.nan]])
+    # fmax: NaN only where *both* sides are NaN
+    out_max = np.asarray(grid_update_pallas(state, upd, pos, op="max",
+                                            interpret=True))
+    np.testing.assert_array_equal(out_max, [[3.0, 1.0, 5.0]])
+
+
+def test_grid_update_empty_axes_match_ref():
+    """T=0, C=0 and M=0 (no touched cells) must not crash the tiler and
+    must return the state unchanged, like the oracle."""
+    state = np.ones((2, 4), np.float32)
+    out = np.asarray(grid_update_pallas(
+        state, np.empty((2, 0), np.float32), np.full(4, -1, np.int32),
+        interpret=True))
+    np.testing.assert_array_equal(out, state)
+    out = np.asarray(grid_update_pallas(
+        np.empty((0, 4), np.float32), np.empty((0, 2), np.float32),
+        np.array([0, -1, 1, -1], np.int32), interpret=True))
+    assert out.shape == (0, 4)
+    out = np.asarray(grid_update_pallas(
+        np.empty((2, 0), np.float32), np.empty((2, 3), np.float32),
+        np.empty((0,), np.int32), interpret=True))
+    assert out.shape == (2, 0)
+
+
+def test_grid_update_rejects_unknown_op():
+    state = np.ones((1, 2), np.float32)
+    with pytest.raises(ValueError, match="unknown grid_update op"):
+        grid_update_pallas(state, state, np.zeros(2, np.int32), op="mul",
+                           interpret=True)
+    with pytest.raises(ValueError, match="unknown grid_update op"):
+        ref.grid_update(state, state, np.zeros(2, np.int32), op="mul")
 
 
 # ---------------------------------------------------------------------------

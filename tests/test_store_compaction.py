@@ -419,3 +419,71 @@ def test_compact_closes_every_attempt_transaction(tmp_path, monkeypatch):
     assert len(created) == 3                      # retry + commit + no-op
     assert [id(t) for t in closed] == [id(t) for t in created]
     assert all(t._own_pool is None for t in created)
+
+
+# ---------------------------------------------------------------------------
+# empty-source ingest: no data, no commit, no head movement
+# ---------------------------------------------------------------------------
+
+def test_empty_source_ingest_commits_nothing(tmp_path):
+    """The store's ``commit`` is unconditional — an empty transaction
+    still mints a snapshot and moves the branch head.  The guard lives
+    in the ETL commit paths: an ingest that observed no volumes must
+    leave the repository byte-identical (regression: an empty first poll
+    used to commit a no-op snapshot and tick the auto-compaction
+    counter)."""
+    from repro.core import RadarArchive
+    from repro.etl import ingest
+    from repro.etl.pipeline import load
+
+    repo = Repository.create(str(tmp_path / "r"))
+    head0 = repo.branch_head()
+
+    # end-to-end pipeline over an empty raw store
+    report = ingest(ObjectStore(str(tmp_path / "raw")), repo)
+    assert report.n_commits == 0 and report.snapshot_ids == []
+    assert repo.branch_head() == head0
+
+    # stage-4 load with no volumes at all, and with an empty batch
+    rep2 = load(RadarArchive(repo), [])
+    assert rep2.n_commits == 0 and rep2.snapshot_ids == []
+    assert repo.branch_head() == head0
+
+
+def test_auto_compact_every_one_empty_source_no_noop_commit(tmp_path):
+    """``auto_compact_every=1`` on a source whose first scan never
+    arrives must not commit anything: no data commit, no compaction
+    commit, head unchanged (the regression this PR pins)."""
+    from repro.etl import ingest
+
+    repo = Repository.create(str(tmp_path / "r"))
+    head0 = repo.branch_head()
+    report = ingest(ObjectStore(str(tmp_path / "raw")), repo,
+                    auto_compact_every=1, time_chunk=1)
+    assert report.n_commits == 0
+    assert report.compaction_ids == []
+    assert repo.branch_head() == head0
+
+
+def test_live_feed_dry_poll_commits_nothing(tmp_path):
+    """A LiveFeed poll that yields no scan opens no transaction and
+    commits nothing — then ingests normally once data arrives, with the
+    same empty-commit guard applying to auto-compaction upkeep."""
+    from repro.etl import LiveFeed, live_scan_feed
+
+    repo = Repository.create(str(tmp_path / "r"))
+    head0 = repo.branch_head()
+
+    dry = LiveFeed(repo, iter(()), auto_compact_every=1)
+    assert dry.ingest_next(3) == []
+    assert dry.report.n_commits == 0
+    assert repo.branch_head() == head0
+
+    live = LiveFeed(repo, live_scan_feed(n_az=24, n_gates=40, n_sweeps=2),
+                    auto_compact_every=1)
+    sids = live.ingest_next(2)
+    assert len(sids) == 2 and live.report.n_commits == 2
+    # only compactions that actually committed are recorded
+    for sid in live.report.compaction_ids:
+        assert sid is not None
+    assert repo.branch_head() != head0

@@ -1,0 +1,413 @@
+"""Streaming ingest + incremental products: the live half of the stack.
+
+Pins this PR's contracts end to end:
+
+* :class:`repro.etl.LiveFeed` — one scan per commit, snapshot ids
+  independent of the encode ``workers`` count, clean background
+  start/wait/stop semantics.
+* ``Catalog.poll_changes`` / ``Catalog.watch`` and the ``/watch``
+  long-poll route — head cursors advance exactly when a repository
+  commits.
+* Incremental CAPPI / column-max / QPE / mosaic state
+  (:mod:`repro.radar.incremental`) — **bitwise identical** to the
+  from-scratch product at the same head while computing strictly fewer
+  cells and fetching strictly fewer chunks.
+* The unified :class:`~repro.radar.products.ProductRequest` front door —
+  the five legacy entry points warn ``DeprecationWarning`` and return
+  bitwise-identical results through it.
+"""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.parse
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.catalog import Catalog
+from repro.etl import LiveFeed, live_scan_feed
+from repro.radar import (
+    IncrementalGridProduct,
+    IncrementalMosaic,
+    IncrementalQPE,
+    ProductRequest,
+    compute_product,
+    incremental_product,
+    request_from_params,
+    streaming_qpe,
+)
+from repro.store import Repository
+
+SMALL = dict(n_az=24, n_gates=40, n_sweeps=2)
+
+
+def _feed(repo, *, site_id="KVNX", start=0, **kw):
+    return LiveFeed(repo, live_scan_feed(site_id=site_id, start=start,
+                                         **SMALL), **kw)
+
+
+# ---------------------------------------------------------------------------
+# LiveFeed
+# ---------------------------------------------------------------------------
+
+def test_live_feed_snapshot_ids_worker_independent(tmp_path):
+    """``workers`` only sizes the commit-time encode fan-out: the same
+    scan sequence produces byte-identical snapshot ids at any count."""
+    ids = {}
+    for w in (1, 2, 4):
+        repo = Repository.create(str(tmp_path / f"w{w}"))
+        feed = _feed(repo, workers=w)
+        feed.ingest_next(3)
+        ids[w] = list(feed.report.snapshot_ids)
+    assert ids[1] == ids[2] == ids[4]
+    assert len(ids[1]) == 3
+
+
+def test_live_feed_background_run(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo)
+    feed.start(max_scans=3)
+    assert feed.wait(timeout=60.0)
+    assert feed.report.n_commits == 3
+    # restartable once the previous run finished; stop() is clean
+    feed.start(max_scans=100, interval_s=0.02)
+    time.sleep(0.05)
+    feed.stop()
+    assert feed.report.n_commits >= 3
+    with pytest.raises(ValueError, match="workers"):
+        LiveFeed(repo, iter(()), workers=0)
+    with pytest.raises(ValueError, match="auto_compact_every"):
+        LiveFeed(repo, iter(()), auto_compact_every=0)
+
+
+def test_live_feed_catalog_heads_advance_per_scan(tmp_path):
+    cat = Catalog.create(str(tmp_path / "cat"))
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo, catalog=cat, repo_id="KVNX")
+    feed.ingest_next(1)
+    h1 = cat.entry("KVNX").snapshot_id
+    assert h1 == repo.branch_head()
+    feed.ingest_next(1)
+    h2 = cat.entry("KVNX").snapshot_id
+    assert h2 == repo.branch_head() and h2 != h1
+    # coverage merged incrementally, scan by scan
+    assert cat.entry("KVNX").vcps["VCP-212"]["n_times"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Catalog watch / poll_changes
+# ---------------------------------------------------------------------------
+
+def test_catalog_poll_changes_cursor_protocol(tmp_path):
+    cat = Catalog.create(str(tmp_path / "cat"))
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo, catalog=cat, repo_id="KVNX")
+    feed.ingest_next(1)
+
+    changes, cur = cat.poll_changes(None)        # bootstrap: all repos
+    assert [c["repo_id"] for c in changes] == ["KVNX"]
+    assert changes[0]["prev"] is None
+    assert changes[0]["snapshot_id"] == repo.branch_head()
+
+    changes2, cur2 = cat.poll_changes(cur)       # quiescent: nothing
+    assert changes2 == [] and cur2 == cur
+
+    feed.ingest_next(1)
+    changes3, cur3 = cat.poll_changes(cur)
+    assert len(changes3) == 1
+    assert changes3[0]["prev"] == cur["KVNX"]
+    assert changes3[0]["snapshot_id"] == repo.branch_head()
+    assert cur3["KVNX"] == repo.branch_head()
+
+
+def test_catalog_watch_blocks_until_commit(tmp_path):
+    cat = Catalog.create(str(tmp_path / "cat"))
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo, catalog=cat, repo_id="KVNX")
+    feed.ingest_next(1)
+    _, cur = cat.watch(None)                     # bootstrap never blocks
+
+    # timeout path: no commits, empty change list, cursor unchanged
+    changes, cur_t = cat.watch(cur, timeout_s=0.15, poll_interval_s=0.02)
+    assert changes == [] and cur_t == cur
+
+    t = threading.Thread(target=lambda: (time.sleep(0.2),
+                                         feed.ingest_next(1)))
+    t.start()
+    changes, cur2 = cat.watch(cur, timeout_s=30.0, poll_interval_s=0.02)
+    t.join()
+    assert len(changes) == 1 and changes[0]["repo_id"] == "KVNX"
+    assert cur2["KVNX"] == repo.branch_head()
+
+
+# ---------------------------------------------------------------------------
+# /watch HTTP endpoint
+# ---------------------------------------------------------------------------
+
+def test_http_watch_endpoint(tmp_path):
+    from repro.serve.http import ArchiveServer, ArchiveService
+
+    cat = Catalog.create(str(tmp_path / "cat"))
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo, catalog=cat, repo_id="KVNX")
+    feed.ingest_next(1)
+
+    with ArchiveService(cat) as svc, ArchiveServer(svc) as srv:
+        doc = json.load(urllib.request.urlopen(f"{srv.url}/watch"))
+        assert [c["repo_id"] for c in doc["changes"]] == ["KVNX"]
+        assert not doc["timed_out"]
+        cur_q = urllib.parse.quote(json.dumps(doc["cursor"]))
+
+        quiet = json.load(urllib.request.urlopen(
+            f"{srv.url}/watch?cursor={cur_q}&timeout_s=0.1"
+            "&poll_interval_s=0.02"))
+        assert quiet["changes"] == [] and quiet["timed_out"]
+
+        t = threading.Thread(target=lambda: (time.sleep(0.2),
+                                             feed.ingest_next(1)))
+        t.start()
+        woke = json.load(urllib.request.urlopen(
+            f"{srv.url}/watch?cursor={cur_q}&timeout_s=30"
+            "&poll_interval_s=0.02"))
+        t.join()
+        assert woke["changes"][0]["snapshot_id"] == repo.branch_head()
+        assert woke["cursor"]["KVNX"] == repo.branch_head()
+
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"{srv.url}/watch?cursor=notjson")
+        assert exc.value.code == 400
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            urllib.request.urlopen(f"{srv.url}/watch?cursor=%5B1%5D")
+        assert exc.value.code == 400
+
+
+# ---------------------------------------------------------------------------
+# Incremental products: bitwise vs from-scratch, strictly cheaper
+# ---------------------------------------------------------------------------
+
+def _fresh_fetches(repo, fn):
+    """Run ``fn(session)`` on a cold session, return (result, fetches)."""
+    session = repo.readonly_session()
+    try:
+        before = session.cache_stats()["chunk_fetches"]
+        out = fn(session)
+        return out, session.cache_stats()["chunk_fetches"] - before
+    finally:
+        session.close()
+
+
+@pytest.mark.parametrize("kind", ["cappi", "column_max"])
+def test_incremental_grid_product_bitwise_and_cheaper(tmp_path, kind):
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo)
+    feed.ingest_next(3)
+
+    req = ProductRequest(kind=kind, moment="DBZH", ny=20, nx=20)
+    inc = incremental_product(repo, req)
+    assert isinstance(inc, IncrementalGridProduct)
+
+    boot = inc.update()
+    assert boot.n_new_scans == 3 and not boot.noop
+    assert 0 < boot.cells_computed < boot.cells_full
+
+    feed.ingest_next(2)                       # live head moves on
+    rep = inc.update()
+    assert rep.n_new_scans == 2 and not rep.noop
+    assert 0 < rep.cells_computed < rep.cells_full
+    assert rep.source_snapshot != boot.source_snapshot
+
+    # from-scratch comparator at the same head: bitwise equality on
+    # values + times, strictly more chunk fetches
+    full_req = req.with_options(grid=inc.read().grid, vcp="VCP-212")
+    full, full_fetches = _fresh_fetches(
+        repo, lambda s: compute_product(s, full_req))
+    state = inc.read()
+    assert state.values.tobytes() == full.values.tobytes()
+    assert state.times.tobytes() == full.times.tobytes()
+    assert rep.chunk_fetches < full_fetches
+
+    # already-current state: a pure no-op, no commit, no head movement
+    head = repo.branch_head()
+    noop = inc.update()
+    assert noop.noop and noop.cells_computed == 0
+    assert repo.branch_head() == head
+
+
+def test_incremental_qpe_bitwise_vs_streaming_comparator(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    feed = _feed(repo)
+    feed.ingest_next(4)
+
+    req = ProductRequest(kind="qpe", moment="DBZH", sweep=0)
+    inc = incremental_product(repo, req)
+    assert isinstance(inc, IncrementalQPE)
+    inc.update()
+    feed.ingest_next(4)
+    rep = inc.update()
+    assert rep.n_new_scans == 4
+    assert 0 < rep.cells_computed < rep.cells_full
+
+    state = inc.read()
+    full, full_fetches = _fresh_fetches(
+        repo, lambda s: streaming_qpe(s, vcp="VCP-212", sweep=0))
+    assert state.accum_mm.tobytes() == full.accum_mm.tobytes()
+    assert state.n_scans == full.n_scans == 8
+    assert state.seconds == full.seconds
+    assert rep.chunk_fetches < full_fetches
+    assert inc.update().noop
+
+
+def test_incremental_mosaic_bitwise_recomposition(tmp_path):
+    cat = Catalog.create(str(tmp_path / "cat"))
+    feeds = []
+    for site in ("KVNX", "KTLX"):
+        repo = Repository.create(str(tmp_path / site))
+        feeds.append(_feed(repo, site_id=site, catalog=cat, repo_id=site))
+    for f in feeds:
+        f.ingest_next(2)
+
+    req = ProductRequest(kind="mosaic", product="column_max",
+                         moment="DBZH", ny=24, nx=24)
+    mos = incremental_product(cat, req)
+    assert isinstance(mos, IncrementalMosaic)
+    mos.update()
+    for f in feeds:
+        f.ingest_next(1)
+    rep = mos.update()
+    assert rep.n_new_scans == 2                  # one per site
+    assert 0 < rep.cells_computed < rep.cells_full
+
+    state = mos.composite()
+    full = compute_product(cat, req.with_options(grid=mos.grid))
+    assert state.composite.tobytes() == full.composite.tobytes()
+    assert state.repo_ids == list(full.repo_ids)
+    for rid in state.repo_ids:
+        assert (state.results[rid].values.tobytes()
+                == full.results[rid].values.tobytes())
+    assert mos.update().noop
+
+
+def test_incremental_product_factory_validation(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    with pytest.raises(ValueError, match="cappi|column_max"):
+        IncrementalGridProduct(repo, ProductRequest(kind="qpe"))
+    with pytest.raises(ValueError, match="qpe"):
+        IncrementalQPE(repo, ProductRequest(kind="cappi"))
+    with pytest.raises(ValueError, match="mosaic"):
+        IncrementalMosaic(None, ProductRequest(kind="qvp"))
+    with pytest.raises(ValueError, match="no incremental maintainer"):
+        incremental_product(repo, ProductRequest(kind="qvp"))
+
+
+# ---------------------------------------------------------------------------
+# Unified product API: legacy wrappers deprecate, results stay bitwise
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_warn_and_match(tmp_path):
+    from repro.radar.grid import cappi_from_session, column_max_from_session
+    from repro.radar.qpe import qpe_from_session
+    from repro.radar.qvp import qvp_from_session
+
+    repo = Repository.create(str(tmp_path / "r"))
+    _feed(repo).ingest_next(3)
+    session = repo.readonly_session()
+
+    with pytest.warns(DeprecationWarning, match="qvp_from_session"):
+        legacy = qvp_from_session(session, vcp="VCP-212", sweep=0)
+    new = compute_product(session, ProductRequest(kind="qvp", vcp="VCP-212",
+                                                  sweep=0))
+    assert legacy.profile.tobytes() == new.profile.tobytes()
+
+    with pytest.warns(DeprecationWarning, match="qpe_from_session"):
+        legacy = qpe_from_session(session, vcp="VCP-212")
+    new = compute_product(session, ProductRequest(kind="qpe", vcp="VCP-212"))
+    assert legacy.accum_mm.tobytes() == new.accum_mm.tobytes()
+
+    with pytest.warns(DeprecationWarning, match="cappi_from_session"):
+        legacy = cappi_from_session(session, vcp="VCP-212", ny=20, nx=20)
+    new = compute_product(session, ProductRequest(kind="cappi",
+                                                  vcp="VCP-212",
+                                                  ny=20, nx=20))
+    assert legacy.values.tobytes() == new.values.tobytes()
+
+    with pytest.warns(DeprecationWarning, match="column_max_from_session"):
+        legacy = column_max_from_session(session, vcp="VCP-212",
+                                         ny=20, nx=20)
+    new = compute_product(session, ProductRequest(kind="column_max",
+                                                  vcp="VCP-212",
+                                                  ny=20, nx=20))
+    assert legacy.values.tobytes() == new.values.tobytes()
+    session.close()
+
+
+def test_federated_mosaic_wrapper_warns_and_matches(tmp_path):
+    from repro.catalog.federation import federated_mosaic
+
+    cat = Catalog.create(str(tmp_path / "cat"))
+    for site in ("KVNX", "KTLX"):
+        repo = Repository.create(str(tmp_path / site))
+        _feed(repo, site_id=site, catalog=cat, repo_id=site).ingest_next(2)
+
+    with pytest.warns(DeprecationWarning, match="federated_mosaic"):
+        legacy = federated_mosaic(cat, ny=24, nx=24)
+    new = compute_product(cat, ProductRequest(kind="mosaic", ny=24, nx=24))
+    assert legacy.composite.tobytes() == new.composite.tobytes()
+
+
+def test_product_request_surface():
+    with pytest.raises(ValueError, match="unknown product kind"):
+        ProductRequest(kind="nope")
+    req = request_from_params("cappi", {"sweeps": [0, 1],
+                                        "repos": ["a", "b"]})
+    assert req.sweeps == (0, 1) and req.repos == ("a", "b")
+    assert req.with_options(moment="VRADH").moment == "VRADH"
+    with pytest.raises(TypeError, match="ProductRequest"):
+        compute_product(None, {"kind": "qvp"})
+
+
+def test_session_product_requires_parameters(tmp_path):
+    repo = Repository.create(str(tmp_path / "r"))
+    _feed(repo).ingest_next(1)
+    session = repo.readonly_session()
+    with pytest.raises(ValueError, match="requires"):
+        compute_product(session, ProductRequest(kind="qvp"))
+    session.close()
+
+
+# ---------------------------------------------------------------------------
+# Store backend surface
+# ---------------------------------------------------------------------------
+
+def test_store_backends_public_surface(tmp_path):
+    from repro.store import backends
+
+    assert backends.__all__ == ["Backend", "ObjectStore",
+                                "SimulatedLatencyStore"]
+    store = backends.ObjectStore(str(tmp_path / "s"))
+    assert isinstance(store, backends.Backend)
+    slow = backends.SimulatedLatencyStore(store)
+    assert isinstance(slow, backends.Backend)
+    slow.put("k", b"v")
+    assert slow.get("k") == b"v"
+
+
+def test_live_scan_feed_is_pure_function_of_seed():
+    a = live_scan_feed(seed=7, **SMALL)
+    b = live_scan_feed(seed=7, **SMALL)
+    va, vb = next(a), next(b)
+    assert va["time"] == vb["time"]
+    for sa, sb in zip(va["sweeps"], vb["sweeps"]):
+        for m in sa["moments"]:
+            np.testing.assert_array_equal(sa["moments"][m],
+                                          sb["moments"][m])
+    # start= resumes mid-stream at the identical scan
+    next(a)
+    c = live_scan_feed(seed=7, start=2, **SMALL)
+    va2, vc = next(a), next(c)
+    assert va2["time"] == vc["time"]
+    np.testing.assert_array_equal(
+        va2["sweeps"][0]["moments"]["DBZH"],
+        vc["sweeps"][0]["moments"]["DBZH"])
